@@ -1,0 +1,103 @@
+"""Paper reproductions: one function per table/figure (Figs. 3, 4, 5).
+
+Scaled defaults (n=2000, 5 graphs) keep CPU wall-time sane; pass --full for
+the paper's n=10000, P=80, p=0.5, 20 graphs. Output: CSV rows.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import Policy, run_sssp, simulate
+from repro.core.sssp import dijkstra_ref, make_er_graph
+from repro.core.theory import useless_work_bound_hstar
+
+
+def _graphs(n, p, count, seed0=100):
+    for i in range(count):
+        w = make_er_graph(seed0 + i, n, p)
+        yield w, dijkstra_ref(w)
+
+
+def fig3_simulation(n=2000, p=0.5, places=80, graphs=2, rhos=(0, 128, 512)):
+    """Fig. 3: settled/phase + h*_t + theoretical bound vs simulation."""
+    rows = []
+    for rho in rhos:
+        for gi, (w, final) in enumerate(_graphs(n, p, graphs)):
+            t0 = time.time()
+            r = simulate(w, num_places=places, rho=rho, final=final, seed=gi)
+            # §5.2.4 bound from the simulator's own h* trace
+            bound = sum(
+                useless_work_bound_hstar(float(h), int(rel), n=n, p=p)
+                for h, rel in zip(r.per_phase["h_star"], r.per_phase["relaxed"])
+            )
+            useless = r.total_relaxed - r.total_settled
+            rows.append({
+                "fig": "fig3", "rho": rho, "graph": gi,
+                "phases": r.phases, "relaxed": r.total_relaxed,
+                "settled": r.total_settled, "useless": useless,
+                "bound_useless": round(bound, 2),
+                "bound_holds": bound >= useless,
+                "us_per_call": round((time.time() - t0) * 1e6 / max(r.phases, 1), 1),
+            })
+    return rows
+
+
+def fig4_scaling(n=2000, p=0.5, k=512, graphs=2,
+                 place_counts=(1, 2, 5, 10, 20, 40, 80)):
+    """Fig. 4: total work (nodes relaxed) + wall time vs P, all structures."""
+    rows = []
+    policies = [("ws", Policy.WORK_STEALING), ("centralized", Policy.CENTRALIZED),
+                ("hybrid", Policy.HYBRID)]
+    for places in place_counts:
+        for name, pol in policies:
+            rel, use, secs = [], [], []
+            for gi, (w, final) in enumerate(_graphs(n, p, graphs)):
+                t0 = time.time()
+                r = run_sssp(w, num_places=places, k=k, policy=pol,
+                             final=final, seed=gi)
+                secs.append(time.time() - t0)
+                rel.append(r.total_relaxed)
+                use.append(r.useless)
+                assert r.correct
+            rows.append({
+                "fig": "fig4", "structure": name, "P": places, "k": k,
+                "relaxed_mean": round(float(np.mean(rel)), 1),
+                "useless_mean": round(float(np.mean(use)), 1),
+                "us_per_call": round(float(np.mean(secs)) * 1e6 / n, 1),
+            })
+    return rows
+
+
+def fig5_ksweep(n=2000, p=0.5, places=80, graphs=2,
+                ks=(1, 8, 32, 128, 512, 2048)):
+    """Fig. 5: total work vs k for centralized + hybrid (P fixed)."""
+    rows = []
+    for k in ks:
+        for name, pol in [("centralized", Policy.CENTRALIZED),
+                          ("hybrid", Policy.HYBRID)]:
+            rel, use = [], []
+            for gi, (w, final) in enumerate(_graphs(n, p, graphs)):
+                r = run_sssp(w, num_places=places, k=k, policy=pol,
+                             final=final, seed=gi)
+                rel.append(r.total_relaxed)
+                use.append(r.useless)
+                assert r.correct
+            rows.append({
+                "fig": "fig5", "structure": name, "P": places, "k": k,
+                "relaxed_mean": round(float(np.mean(rel)), 1),
+                "useless_mean": round(float(np.mean(use)), 1),
+            })
+    # work-stealing reference line
+    rel, use = [], []
+    for gi, (w, final) in enumerate(_graphs(n, p, graphs)):
+        r = run_sssp(w, num_places=places, k=1, policy=Policy.WORK_STEALING,
+                     final=final, seed=gi)
+        rel.append(r.total_relaxed)
+        use.append(r.useless)
+    rows.append({"fig": "fig5", "structure": "ws", "P": places, "k": 0,
+                 "relaxed_mean": round(float(np.mean(rel)), 1),
+                 "useless_mean": round(float(np.mean(use)), 1)})
+    return rows

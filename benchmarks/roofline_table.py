@@ -1,0 +1,51 @@
+"""Roofline table generator: reads the dry-run JSON cache and emits the
+EXPERIMENTS.md §Roofline rows (single-pod mesh, per the spec)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HEADERS = [
+    "arch", "shape", "chips", "t_compute_s", "t_memory_s", "t_collective_s",
+    "bottleneck", "model_flops", "hlo_flops_per_dev", "useful_ratio",
+    "peak_gib_per_dev", "compile_s",
+]
+
+
+def rows(dryrun_dir: str = "experiments/dryrun", mesh: str = "single"):
+    out = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, f"*__{mesh}.json"))):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "status": r.get("status", "?")})
+            continue
+        rl, m = r["roofline"], r["memory"]
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "chips": r["chips"],
+            "t_compute_s": round(rl["t_compute"], 4),
+            "t_memory_s": round(rl["t_memory"], 4),
+            "t_collective_s": round(rl["t_collective"], 4),
+            "bottleneck": rl["bottleneck"],
+            "model_flops": f"{rl['model_flops']:.3e}",
+            "hlo_flops_per_dev": f"{rl['flops_per_dev']:.3e}",
+            "useful_ratio": round(rl["useful_ratio"], 3),
+            "peak_gib_per_dev": round(m["peak_bytes_per_device"] / 2**30, 2),
+            "compile_s": r.get("compile_s"),
+            "status": "ok",
+        })
+    return out
+
+
+def markdown_table(dryrun_dir: str = "experiments/dryrun", mesh: str = "single") -> str:
+    rs = rows(dryrun_dir, mesh)
+    cols = ["arch", "shape", "t_compute_s", "t_memory_s", "t_collective_s",
+            "bottleneck", "useful_ratio", "peak_gib_per_dev"]
+    lines = ["| " + " | ".join(cols) + " |",
+             "|" + "|".join(["---"] * len(cols)) + "|"]
+    for r in rs:
+        if r.get("status") != "ok":
+            continue
+        lines.append("| " + " | ".join(str(r.get(c, "")) for c in cols) + " |")
+    return "\n".join(lines)

@@ -1,0 +1,69 @@
+"""Benchmark driver: one section per paper table/figure + framework benches.
+
+  PYTHONPATH=src python -m benchmarks.run              # scaled defaults
+  PYTHONPATH=src python -m benchmarks.run --full       # paper-scale (slow)
+  PYTHONPATH=src python -m benchmarks.run --only fig5
+
+Prints ``name,us_per_call,derived`` CSV rows per the repo convention, plus
+the full row dicts to benchmarks/out/*.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _emit(section: str, rows):
+    os.makedirs("benchmarks/out", exist_ok=True)
+    with open(f"benchmarks/out/{section}.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    for r in rows:
+        us = r.get("us_per_call", "")
+        derived = {k: v for k, v in r.items()
+                   if k not in ("us_per_call",)}
+        print(f"{section},{us},{json.dumps(derived)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale (n=10000, P=80, 20 graphs)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import kernels_bench, paper, roofline_table
+
+    n = 10000 if args.full else 4000
+    graphs = 20 if args.full else 2
+    sections = {
+        "fig3_simulation": lambda: paper.fig3_simulation(
+            n=n, graphs=graphs,
+            rhos=(0, 128, 512)),
+        "fig4_scaling": lambda: paper.fig4_scaling(
+            n=n, graphs=graphs,
+            place_counts=(1, 5, 20, 80) if not args.full
+            else (1, 2, 5, 10, 20, 40, 80)),
+        "fig5_ksweep": lambda: paper.fig5_ksweep(
+            n=n, graphs=graphs,
+            ks=(1, 32, 512) if not args.full else (1, 8, 32, 128, 512, 2048)),
+        "relaxed_topk": kernels_bench.bench_relaxed_topk,
+        "flash_attention": kernels_bench.bench_flash_attention,
+        "roofline": lambda: roofline_table.rows(),
+    }
+    failures = 0
+    for name, fn in sections.items():
+        if args.only and args.only not in name:
+            continue
+        try:
+            _emit(name, fn())
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{name},ERROR,{type(e).__name__}: {e}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Serve a small model with batched requests through the k-relaxed
+continuous-batching engine (the paper's hybrid structure as admission
+control).
+
+    PYTHONPATH=src python examples/serve_batched.py
+
+Submits requests with mixed SLA priorities from multiple front-ends and
+shows that admission order respects priority up to ρ = frontends·k.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models import materialize, model_p
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    cfg = get_reduced("qwen3_1_7b")
+    params = materialize(jax.random.PRNGKey(0), model_p(cfg))
+    frontends, k = 2, 2
+    eng = ServeEngine(cfg, params, slots=4, max_len=64,
+                      frontends=frontends, k=k)
+    rng = np.random.default_rng(0)
+    lat = {}
+    for i in range(12):
+        pr = float(i % 3)          # three SLA classes
+        eng.submit(Request(rid=i, tokens=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                           max_new=6, priority=pr), frontend=i % frontends)
+    eng.flush_frontends()
+    done = eng.run()
+    print(f"finished {len(done)} requests")
+    print(f"admission order (rid): {eng.admission_log}")
+    by_class = {}
+    for r in done:
+        by_class.setdefault(int(r.priority), []).append(r.admitted_at)
+    for c in sorted(by_class):
+        print(f"  SLA class {c}: admitted at ticks {sorted(by_class[c])}")
+    print(f"guarantee: a request is overtaken by at most rho = "
+          f"{frontends}*{k} = {frontends*k} later arrivals")
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""End-to-end driver: train a ~100M-param qwen3-family model for a few
+hundred steps on the learnable synthetic stream, with checkpoints.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+~100M config: 8 layers, d_model 512, 8 heads (kv 4), d_ff 1536, vocab 32768,
+tied embeddings (params ≈ 0.1 B). Loss should fall well below ln(V) as the
+model learns the affine next-token rule.
+"""
+import sys, os, argparse, dataclasses
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig
+from repro.optim import adamw
+from repro.train.loop import train
+from repro.models import model_p
+from repro.models.module import param_count
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="qwen3_100m", family="dense",
+        num_layers=8, d_model=512, num_heads=8, num_kv_heads=4,
+        head_dim=64, d_ff=1536, vocab_size=32768, qk_norm=True,
+        tie_embeddings=True, loss_chunk=128,
+        attn_block_q=128, attn_block_kv=128,
+    )
+    print(f"params: {param_count(model_p(cfg))/1e6:.1f} M")
+    opt = adamw.AdamWConfig(lr=1e-3, warmup_steps=30, total_steps=args.steps)
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=128, global_batch=8)
+    report = train(cfg, steps=args.steps, opt_cfg=opt, data_cfg=data,
+                   ckpt_dir=args.ckpt_dir, ckpt_every=100, log_every=20)
+    first, last = report.losses[0][1], report.losses[-1][1]
+    print(f"\nloss {first:.3f} -> {last:.3f} "
+          f"(random = ln({cfg.vocab_size}) = {__import__('math').log(cfg.vocab_size):.2f})")
+
+if __name__ == "__main__":
+    main()

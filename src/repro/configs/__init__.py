@@ -1,0 +1,18 @@
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    RGLRUConfig,
+    ShapeConfig,
+    SSMConfig,
+    shape_supported,
+)
+from repro.configs.registry import (  # noqa: F401
+    ARCH_IDS,
+    all_cells,
+    batch_pspec,
+    get_config,
+    get_reduced,
+    input_specs,
+)

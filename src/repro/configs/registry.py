@@ -1,0 +1,108 @@
+"""Architecture registry + per-cell input specs for the dry-run.
+
+Every assigned arch has a module in repro/configs/<id>.py exporting CONFIG
+(exact published numbers) and reduced() (small same-family smoke config).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, shape_supported
+
+ARCH_IDS = [
+    "recurrentgemma_9b",
+    "deepseek_v3_671b",
+    "llama4_maverick_400b_a17b",
+    "mamba2_780m",
+    "hubert_xlarge",
+    "qwen2_5_14b",
+    "internlm2_20b",
+    "phi4_mini_3_8b",
+    "qwen3_1_7b",
+    "qwen2_vl_2b",
+]
+
+_ALIASES = {i.replace("_", "-"): i for i in ARCH_IDS}
+
+
+def get_config(name: str) -> ModelConfig:
+    name = _ALIASES.get(name, name).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    name = _ALIASES.get(name, name).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.reduced()
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    """All runnable (arch, shape) dry-run cells (skips noted in DESIGN.md)."""
+    cells = []
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            ok, _ = shape_supported(cfg, s)
+            if ok:
+                cells.append((a, s.name))
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no device allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one cell. For [audio]/[vlm] the modality frontend is a
+    stub: precomputed frame/patch embeddings are the input."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train",):
+        if cfg.input_mode == "embeddings":
+            specs = {
+                "embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        else:
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        if cfg.pos == "mrope":
+            specs["positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+        return specs
+    if shape.kind == "prefill":
+        if cfg.input_mode == "embeddings":
+            specs = {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)}
+        else:
+            specs = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.pos == "mrope":
+            specs["positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+        return specs
+    # decode: one new token against a cache of size seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((b,), i32),
+        "pos": jax.ShapeDtypeStruct((b,), i32),
+    }
+
+
+def batch_pspec(cfg: ModelConfig, shape: ShapeConfig):
+    """Logical PartitionSpecs for input_specs entries (batch over DATA)."""
+    from jax.sharding import PartitionSpec
+    from repro.models.module import DATA
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k_, v_ in specs.items():
+        if k_ == "positions":
+            out[k_] = PartitionSpec(None, DATA, None)
+        elif v_.ndim >= 2:
+            out[k_] = PartitionSpec(DATA, *([None] * (v_.ndim - 1)))
+        else:
+            out[k_] = PartitionSpec(DATA)
+    return out

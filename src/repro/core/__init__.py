@@ -1,0 +1,19 @@
+"""Core: the paper's k-priority scheduling data structures, the SSSP
+application, the Theorem-5 theory, and the phase simulator (§5.4)."""
+from repro.core.kpriority import (  # noqa: F401
+    Policy,
+    PoolState,
+    PopResult,
+    ignored_count,
+    init_pool,
+    phase_pop,
+    push,
+    rho_bound,
+    visibility,
+)
+from repro.core.engine import SSSPRun, run_sssp  # noqa: F401
+from repro.core.simulator import SimRun, simulate  # noqa: F401
+from repro.core.theory import (  # noqa: F401
+    useless_work_bound,
+    useless_work_bound_hstar,
+)

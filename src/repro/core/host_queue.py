@@ -1,0 +1,85 @@
+"""Host-side (Python) hybrid k-priority queue — the paper's structure for
+framework control-plane use: serving admission (one *place* per serving host)
+and priority data sampling. Faithful sequential simulation of the concurrent
+semantics: per-place local lists (≤ k unpublished items), publish-on-k to the
+append-only global list, per-place read pointers, non-destructive *spying*
+when a place's queue is empty, exactly-once pops via the taken set.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import random
+from typing import Any, List, Optional, Tuple
+
+
+class HybridKQueue:
+    def __init__(self, num_places: int, k: int, seed: int = 0):
+        self.num_places = num_places
+        self.k = k
+        self._rng = random.Random(seed)
+        self._counter = itertools.count()
+        self._local: List[List[tuple]] = [[] for _ in range(num_places)]
+        self._global: List[tuple] = []
+        self._heaps: List[List[tuple]] = [[] for _ in range(num_places)]
+        self._read: List[int] = [0] * num_places
+        self._taken = set()
+        self._items = {}
+        self.stats_ignored_max = 0
+
+    # ------------------------------------------------------------------ push
+    def push(self, place: int, priority: float, item: Any, k: Optional[int] = None):
+        """Lower priority value = popped first (min-queue, as SSSP)."""
+        uid = next(self._counter)
+        rec = (priority, uid, place)
+        self._items[uid] = item
+        self._local[place].append(rec)
+        heapq.heappush(self._heaps[place], rec)
+        k_eff = self.k if k is None else min(self.k, k)
+        if len(self._local[place]) >= k_eff:
+            self._publish(place)
+
+    def _publish(self, place: int):
+        self._global.extend(self._local[place])
+        self._local[place].clear()
+
+    def flush(self, place: int):
+        """Make all of a place's items globally visible (used at shutdown /
+        straggler handoff)."""
+        self._publish(place)
+
+    # ------------------------------------------------------------------- pop
+    def _process_global(self, place: int):
+        while self._read[place] < len(self._global):
+            rec = self._global[self._read[place]]
+            self._read[place] += 1
+            if rec[2] != place and rec[1] not in self._taken:
+                heapq.heappush(self._heaps[place], rec)
+
+    def pop(self, place: int) -> Optional[Tuple[float, Any]]:
+        self._process_global(place)
+        h = self._heaps[place]
+        while True:
+            while h:
+                prio, uid, _ = heapq.heappop(h)
+                if uid not in self._taken:
+                    self._taken.add(uid)
+                    return prio, self._items.pop(uid)
+            # spy: non-destructive read of a random victim's local list
+            victims = [
+                p for p in range(self.num_places)
+                if p != place and any(r[1] not in self._taken for r in self._local[p])
+            ]
+            if not victims:
+                return None
+            v = self._rng.choice(victims)
+            for rec in self._local[v]:
+                if rec[1] not in self._taken:
+                    heapq.heappush(h, rec)
+
+    # --------------------------------------------------------------- queries
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def pending(self, place: int) -> int:
+        return len(self._local[place])

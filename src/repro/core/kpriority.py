@@ -1,0 +1,318 @@
+"""k-priority scheduling data structures (Wimmer et al. 2013) — TPU-native form.
+
+The paper's three lock-free structures (priority work-stealing, centralized
+k-priority, hybrid k-priority) are CAS-based shared-memory designs. On TPU
+there is no shared mutable memory; the paper's *own* theoretical model (§5.2)
+and simulator (§5.4) are phase-synchronous, and its ordering guarantees only
+need the *structural* formulation of ρ-relaxation (§5.3): a pop never ignores
+more than ρ items, regardless of age. We therefore implement the structures as
+**phase-synchronous functional states**: each of P places pops its best
+*visible* task per phase; the policy defines visibility:
+
+  IDEAL        every active task visible to every place                (ρ = 0)
+  CENTRALIZED  all but the k globally-newest tasks visible to all;
+               creators always see their own tasks                     (ρ = k)
+  HYBRID       published tasks visible to all; each place publishes its
+               local list once it has accumulated k unpublished pushes;
+               empty places *spy* (non-destructive read of a victim's
+               unpublished list)                                       (ρ = P·k)
+  WORK_STEAL   owner-only visibility; empty places steal half the
+               victim's tasks (destructive)                            (ρ = ∞)
+
+Exactly-once pop is guaranteed by deterministic greedy arbitration inside the
+phase (the analogue of the paper's CAS-on-tag: lowest-order claimant wins; the
+paper's "spurious failure" becomes an idle place for one phase).
+
+Task identity == pool slot. Re-pushing a slot overwrites its item, which is
+the paper's dead-task elimination (reinsert + lazy removal) performed eagerly.
+
+All ops are pure jnp and jit/vmap/shard_map-compatible; `P` (number of
+places), `k` and the policy are static.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.inf
+
+
+class Policy(enum.Enum):
+    IDEAL = "ideal"
+    CENTRALIZED = "centralized"
+    HYBRID = "hybrid"
+    WORK_STEALING = "ws"
+
+
+class PoolState(NamedTuple):
+    """Slot-pool state. M slots; slot index is the task identity.
+
+    ``creator`` doubles as the *owner* for WORK_STEALING (mutated by steals).
+    ``seq`` is the global push sequence number (monotone; newest = largest).
+    ``published`` is only meaningful for HYBRID.
+    """
+
+    prio: jnp.ndarray          # f32[M]  priority (smaller = better); +inf if empty
+    active: jnp.ndarray        # bool[M] live and not yet taken
+    creator: jnp.ndarray       # i32[M]
+    seq: jnp.ndarray           # i32[M]
+    published: jnp.ndarray     # bool[M]
+    unpub_pushes: jnp.ndarray  # i32[P]  pushes since last publication (HYBRID)
+    next_seq: jnp.ndarray      # i32[]   next sequence number to assign
+    spied: jnp.ndarray         # bool[P, M] persistent spy references (HYBRID):
+                               # a spied ref stays in the spy's queue (paper
+                               # §4.2.2 — key to hybrid beating WS at large k)
+
+
+class PopResult(NamedTuple):
+    slot: jnp.ndarray   # i32[P]  popped slot per place (undefined where ~valid)
+    prio: jnp.ndarray   # f32[P]
+    valid: jnp.ndarray  # bool[P]
+
+
+def init_pool(num_slots: int, num_places: int) -> PoolState:
+    return PoolState(
+        prio=jnp.full((num_slots,), INF, jnp.float32),
+        active=jnp.zeros((num_slots,), bool),
+        creator=jnp.zeros((num_slots,), jnp.int32),
+        seq=jnp.zeros((num_slots,), jnp.int32),
+        published=jnp.zeros((num_slots,), bool),
+        unpub_pushes=jnp.zeros((num_places,), jnp.int32),
+        next_seq=jnp.zeros((), jnp.int32),
+        spied=jnp.zeros((num_places, num_slots), bool),
+    )
+
+
+# ---------------------------------------------------------------------------
+# push
+# ---------------------------------------------------------------------------
+
+def push(
+    state: PoolState,
+    mask: jnp.ndarray,
+    prios: jnp.ndarray,
+    creators: jnp.ndarray,
+    *,
+    k: int,
+    policy: Policy,
+    key: Optional[jax.Array] = None,
+) -> PoolState:
+    """Batch-push items into the pool (one phase's spawned tasks).
+
+    ``mask[m]`` selects slots to (over)write; an already-active slot is
+    overwritten (dead-task elimination). Sequence numbers are assigned in a
+    random order within the batch when ``key`` is given (the paper's simulator
+    shuffles new nodes before assigning sequence ids), else by slot index.
+    """
+    m = mask.shape[0]
+    # --- sequence-number assignment ------------------------------------
+    if key is not None:
+        tie = jax.random.uniform(key, (m,))
+    else:
+        tie = jnp.arange(m, dtype=jnp.float32) / m
+    # rank new items among themselves: items not in the batch rank last.
+    order_key = jnp.where(mask, tie, jnp.inf)
+    rank = jnp.argsort(jnp.argsort(order_key)).astype(jnp.int32)  # 0..m-1
+    new_seq = state.next_seq + rank
+    n_new = jnp.sum(mask).astype(jnp.int32)
+
+    prio = jnp.where(mask, prios, state.prio)
+    active = state.active | mask
+    creator = jnp.where(mask, creators.astype(jnp.int32), state.creator)
+    seq = jnp.where(mask, new_seq, state.seq)
+    published = jnp.where(mask, False, state.published)
+    # a re-pushed slot is a NEW task: stale spy refs die with the old one
+    spied = jnp.where(mask[None, :], False, state.spied)
+    unpub = state.unpub_pushes
+
+    if policy is Policy.HYBRID:
+        num_places = state.unpub_pushes.shape[0]
+        counts = jnp.zeros((num_places,), jnp.int32).at[
+            jnp.where(mask, creator, 0)
+        ].add(mask.astype(jnp.int32))
+        new_unpub = unpub + counts
+        # Phase-granularity publication: once a place has accumulated >= k
+        # unpublished pushes it publishes its whole local list (the paper
+        # publishes after exactly k pushes; publishing *more* only tightens
+        # the structural rho-relaxation bound, see DESIGN.md §2).
+        pub_place = new_unpub >= k                      # bool[P]
+        item_pub = pub_place[creator] & active
+        published = published | item_pub
+        unpub = jnp.where(pub_place, 0, new_unpub)
+    elif policy in (Policy.IDEAL, Policy.CENTRALIZED):
+        published = published | mask  # bookkeeping only; visibility is derived
+    # WORK_STEALING: never published.
+
+    return PoolState(
+        prio=prio,
+        active=active,
+        creator=creator,
+        seq=seq,
+        published=published,
+        unpub_pushes=unpub,
+        next_seq=state.next_seq + n_new,
+        spied=spied,
+    )
+
+
+# ---------------------------------------------------------------------------
+# visibility
+# ---------------------------------------------------------------------------
+
+def visibility(state: PoolState, *, num_places: int, k: int, policy: Policy) -> jnp.ndarray:
+    """bool[P, M] — task m visible to place p under the policy."""
+    places = jnp.arange(num_places, dtype=jnp.int32)[:, None]       # [P,1]
+    own = state.creator[None, :] == places                           # [P,M]
+    act = state.active[None, :]
+    if policy is Policy.IDEAL:
+        return jnp.broadcast_to(act, (num_places, act.shape[1]))
+    if policy is Policy.CENTRALIZED:
+        # the k globally-newest items may be invisible to non-creators
+        old_enough = state.seq[None, :] < (state.next_seq - k)
+        return act & (old_enough | own)
+    if policy is Policy.HYBRID:
+        return act & (state.published[None, :] | own | state.spied)
+    if policy is Policy.WORK_STEALING:
+        return act & own
+    raise ValueError(policy)
+
+
+# ---------------------------------------------------------------------------
+# phase pop (with steal-half / spying for empty places)
+# ---------------------------------------------------------------------------
+
+def _greedy_assign(
+    vis: jnp.ndarray, prio: jnp.ndarray, order: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Sequential-greedy arbitration: in ``order``, each place takes its best
+    visible not-yet-taken item. Deterministic analogue of the paper's
+    CAS-on-tag race. Returns (slot[P], valid[P], taken[M]) in *place* index."""
+    num_places, m = vis.shape
+
+    def step(taken, p):
+        scores = jnp.where(vis[p] & ~taken, prio, INF)
+        slot = jnp.argmin(scores).astype(jnp.int32)
+        valid = jnp.isfinite(scores[slot])
+        taken = taken.at[slot].set(taken[slot] | valid)
+        return taken, (slot, valid)
+
+    taken0 = jnp.zeros((m,), bool)
+    taken, (slots_o, valid_o) = jax.lax.scan(step, taken0, order)
+    # scatter back from visit-order to place index
+    slots = jnp.zeros((num_places,), jnp.int32).at[order].set(slots_o)
+    valid = jnp.zeros((num_places,), bool).at[order].set(valid_o)
+    return slots, valid, taken
+
+
+def _steal_half(
+    state: PoolState, key: jax.Array, num_places: int
+) -> PoolState:
+    """WORK_STEALING: every place with no owned active task steals every-other
+    task (by priority rank) from a random non-empty victim. Steals are
+    arbitrated sequentially (a later stealer sees earlier steals), which
+    matches lock-free steal-half up to phase granularity."""
+    places = jnp.arange(num_places, dtype=jnp.int32)
+
+    def step(owner, inp):
+        p, kp = inp
+        counts = jnp.zeros((num_places,), jnp.int32).at[owner].add(
+            state.active.astype(jnp.int32)
+        )
+        empty = counts[p] == 0
+        w = (counts > 0) & (places != p)
+        any_victim = jnp.any(w)
+        logits = jnp.where(w, 0.0, -INF)
+        victim = jax.random.categorical(kp, logits).astype(jnp.int32)
+        mine = state.active & (owner == victim)
+        # rank victim's tasks by priority; steal odd ranks (every other)
+        scores = jnp.where(mine, state.prio, INF)
+        rank = jnp.argsort(jnp.argsort(scores))
+        grab = mine & (rank % 2 == 1) & empty & any_victim
+        owner = jnp.where(grab, p, owner)
+        return owner, None
+
+    keys = jax.random.split(key, num_places)
+    owner, _ = jax.lax.scan(step, state.creator, (places, keys))
+    return state._replace(creator=owner)
+
+
+def _spy(
+    state: PoolState, vis: jnp.ndarray, key: jax.Array, num_places: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """HYBRID: places with nothing visible spy on a random victim's
+    unpublished items (non-destructive). Spy references PERSIST in the
+    spy's queue (paper §4.2.2) — returns (vis, new_spied_mask)."""
+    places = jnp.arange(num_places, dtype=jnp.int32)
+    empty = ~jnp.any(vis, axis=1)                                    # [P]
+    unpub = state.active & ~state.published                          # [M]
+    counts = jnp.zeros((num_places,), jnp.int32).at[state.creator].add(
+        unpub.astype(jnp.int32)
+    )
+    w = counts > 0                                                   # [P]
+    w_mat = w[None, :] & (places[:, None] != places[None, :])        # [P,P]
+    logits = jnp.where(w_mat, 0.0, -INF)
+    keys = jax.random.split(key, num_places)
+    victims = jax.vmap(jax.random.categorical)(keys, logits).astype(jnp.int32)
+    can_spy = empty & jnp.any(w_mat, axis=1)
+    new_refs = (state.creator[None, :] == victims[:, None]) & unpub[None, :]
+    new_refs = new_refs & can_spy[:, None]
+    spied = state.spied | new_refs
+    return vis | new_refs, spied
+
+
+def phase_pop(
+    state: PoolState,
+    key: jax.Array,
+    *,
+    num_places: int,
+    k: int,
+    policy: Policy,
+) -> Tuple[PoolState, PopResult]:
+    """One scheduling phase: every place pops its best visible task."""
+    k_steal, k_spy, k_order = jax.random.split(key, 3)
+    if policy is Policy.WORK_STEALING:
+        state = _steal_half(state, k_steal, num_places)
+    vis = visibility(state, num_places=num_places, k=k, policy=policy)
+    if policy is Policy.HYBRID:
+        vis, spied = _spy(state, vis, k_spy, num_places)
+        state = state._replace(spied=spied)
+    order = jax.random.permutation(k_order, num_places).astype(jnp.int32)
+    slots, valid, taken = _greedy_assign(vis, state.prio, order)
+    new_state = state._replace(
+        active=state.active & ~taken,
+        prio=jnp.where(taken, INF, state.prio),
+    )
+    prios = jnp.where(valid, state.prio[slots], INF)
+    return new_state, PopResult(slot=slots, prio=prios, valid=valid)
+
+
+# ---------------------------------------------------------------------------
+# invariant checking (structural rho-relaxation, §5.3)
+# ---------------------------------------------------------------------------
+
+def rho_bound(policy: Policy, k: int, num_places: int) -> float:
+    if policy is Policy.IDEAL:
+        return 0
+    if policy is Policy.CENTRALIZED:
+        return k
+    if policy is Policy.HYBRID:
+        return num_places * k
+    return float("inf")
+
+
+def ignored_count(
+    state_before: PoolState, result: PopResult
+) -> jnp.ndarray:
+    """Number of items *ignored* in this phase: active items strictly better
+    than the worst popped item that were not popped. Structural ρ-relaxation
+    (§5.3) demands this never exceed ρ."""
+    worst = jnp.max(jnp.where(result.valid, result.prio, -INF))
+    # .max (not .set): an invalid place's placeholder slot must not clobber
+    # a valid pop of the same slot index.
+    popped = jnp.zeros_like(state_before.active).at[result.slot].max(result.valid)
+    better = state_before.active & (state_before.prio < worst) & ~popped
+    return jnp.sum(better)

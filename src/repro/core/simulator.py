@@ -1,0 +1,107 @@
+"""Phase-model simulator (paper §5.4), numpy.
+
+Faithful to the paper's description: all active nodes live in one array
+sorted by tentative distance; if ρ > 0, newly created active nodes get
+sequence ids (shuffled within a phase), and the ρ nodes with the highest
+sequence ids are held out ("may be ignored"). Exception: the node with the
+globally lowest tentative distance is always visible (guaranteed to be
+relaxed next phase). If fewer than P nodes are visible, the remaining places
+relax a random selection of the held-out active nodes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.sssp import dijkstra_ref
+
+
+@dataclasses.dataclass
+class SimRun:
+    dist: np.ndarray
+    phases: int
+    total_relaxed: int
+    total_settled: int
+    per_phase: Dict[str, np.ndarray]
+    correct: bool
+
+
+def simulate(
+    w: np.ndarray,
+    *,
+    num_places: int,
+    rho: int,
+    seed: int = 0,
+    source: int = 0,
+    final: Optional[np.ndarray] = None,
+    max_phases: int = 1_000_000,
+) -> SimRun:
+    n = w.shape[0]
+    if final is None:
+        final = dijkstra_ref(w, source)
+    rng = np.random.default_rng(seed)
+
+    dist = np.full((n,), np.inf, np.float64)
+    dist[source] = 0.0
+    active = np.zeros((n,), bool)
+    active[source] = True
+    seq = np.zeros((n,), np.int64)          # push sequence id per active node
+    next_seq = 1
+
+    relaxed_pp, settled_pp, hstar_pp = [], [], []
+    phases = 0
+    while active.any() and phases < max_phases:
+        ids = np.nonzero(active)[0]
+        d = dist[ids]
+        # ρ newest (by seq) held out; global min always visible
+        order = np.argsort(seq[ids], kind="stable")
+        visible = np.ones(len(ids), bool)
+        if rho > 0 and len(ids) > 1:
+            held = order[-min(rho, len(ids)) :]
+            visible[held] = False
+            gmin = np.argmin(d + np.arange(len(ids)) * 0.0)  # deterministic tie
+            visible[gmin] = True
+        vis_ids = ids[visible]
+        vis_d = d[visible]
+        sel = vis_ids[np.argsort(vis_d, kind="stable")[:num_places]]
+        if len(sel) < num_places:
+            hidden = ids[~visible]
+            extra = min(num_places - len(sel), len(hidden))
+            if extra > 0:
+                sel = np.concatenate(
+                    [sel, rng.choice(hidden, size=extra, replace=False)]
+                )
+        # --- relax selected nodes (synchronous min-combine) -------------
+        dsel = dist[sel]
+        cand = dsel[:, None] + w[sel]                    # [P', n]
+        best = cand.min(axis=0)
+        improved = best < dist
+        dist = np.where(improved, best, dist)
+        active[sel] = False
+        new_ids = np.nonzero(improved)[0]
+        active[new_ids] = True
+        # shuffled sequence ids for new nodes (paper §5.4)
+        perm = rng.permutation(len(new_ids))
+        seq[new_ids] = next_seq + perm
+        next_seq += len(new_ids)
+
+        relaxed_pp.append(len(sel))
+        settled_pp.append(int(np.sum(dsel <= final[sel] + 1e-9)))
+        hstar_pp.append(float(dsel.max() - dsel.min()) if len(sel) else 0.0)
+        phases += 1
+
+    per_phase = {
+        "relaxed": np.asarray(relaxed_pp),
+        "settled": np.asarray(settled_pp),
+        "h_star": np.asarray(hstar_pp),
+    }
+    return SimRun(
+        dist=dist.astype(np.float32),
+        phases=phases,
+        total_relaxed=int(per_phase["relaxed"].sum()),
+        total_settled=int(per_phase["settled"].sum()),
+        per_phase=per_phase,
+        correct=bool(np.allclose(dist, final, rtol=1e-6, atol=1e-6)),
+    )

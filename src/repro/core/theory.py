@@ -1,0 +1,95 @@
+"""Theorem 5 useless-work bound (paper §5.2) — numpy float64 host-side.
+
+    W_t <= sum_{j in R_t} [ 1 - prod_{i<j} prod_{L=1}^{n-1}
+                (1 - (p h_t(i,j))^L / L!)^{(n-2)!/(n-1-L)!} ]
+
+with h_t(i,j) = d_t(j) - d_t(i), clipped to [0, 1] (edge weights are U]0,1],
+so only h <= 1 matters; h_t(i,j) <= 1 is assumed in the paper's proof).
+
+The exponent (n-2)!/(n-1-L)! = (n-2)(n-3)...(n-L) counts length-L paths
+between two fixed endpoints. We work in log-space:
+
+    log q_j = sum_{i<j} sum_L  E_L * log1p(-(p h)^L / L!)
+
+Terms peak around L ~ n p h and decay super-exponentially after; we truncate
+adaptively once the running tail is below 1e-18 of the sum (and saturate
+q_j -> 0 once log q_j < -50, where the bound is simply 1).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+def _log_q_pair(h: float, n: int, p: float, l_max: int) -> float:
+    """sum_L E_L * log1p(-r_L) for one (i, j) pair with gap h."""
+    if h <= 0.0:
+        return 0.0
+    h = min(h, 1.0)
+    total = 0.0
+    log_e = 0.0                     # log E_L ; E_1 = 1
+    log_r = 0.0                     # log (p h)^L / L! built incrementally
+    lph = np.log(p * h) if p * h > 0 else -np.inf
+    for L in range(1, l_max + 1):
+        # r_L = (p h)^L / L!
+        log_r = L * lph - _log_factorial(L)
+        if L > 1:
+            log_e += np.log(max(n - L, 1))
+        # E_L * log1p(-r_L); log1p(-r) ~ -r for tiny r
+        r = np.exp(log_r)
+        if r >= 1.0:
+            return -np.inf
+        term = np.exp(log_e) * np.log1p(-r)
+        total += term
+        # adaptive truncation: terms decay once L >> n p h
+        if L > n * p * h + 10 and abs(term) < 1e-18 * max(abs(total), 1e-300):
+            break
+        if total < -50.0:
+            return total
+    return total
+
+
+_LOG_FACT_CACHE = [0.0]
+
+
+def _log_factorial(L: int) -> float:
+    while len(_LOG_FACT_CACHE) <= L:
+        _LOG_FACT_CACHE.append(_LOG_FACT_CACHE[-1] + np.log(len(_LOG_FACT_CACHE)))
+    return _LOG_FACT_CACHE[L]
+
+
+def useless_work_bound(
+    d: Sequence[float], n: int, p: float, l_max: Optional[int] = None
+) -> float:
+    """Theorem 5: expected useless work for relaxing nodes with sorted
+    tentative distances ``d`` (the |R_t| actually-relaxed nodes, §5.2.4)."""
+    d = np.sort(np.asarray(d, np.float64))
+    P = len(d)
+    if l_max is None:
+        l_max = min(n - 1, max(200, int(4 * n * p) + 50))
+    w = 0.0
+    for j in range(1, P):
+        log_q = 0.0
+        for i in range(j):
+            log_q += _log_q_pair(float(d[j] - d[i]), n, p, l_max)
+            if log_q < -50.0:
+                break
+        w += 1.0 - np.exp(log_q)
+    return float(w)
+
+
+def useless_work_bound_hstar(
+    h_star: float, num_relaxed: int, n: int, p: float,
+    l_max: Optional[int] = None,
+) -> float:
+    """Remark 1 / §5.2.4 weak form: every pair gap replaced by h*_t."""
+    if num_relaxed <= 1:
+        return 0.0
+    if l_max is None:
+        l_max = min(n - 1, max(200, int(4 * n * p) + 50))
+    log_q1 = _log_q_pair(float(h_star), n, p, l_max)
+    w = 0.0
+    for j in range(1, num_relaxed):
+        w += 1.0 - np.exp(max(j * log_q1, -745.0))
+    return float(w)

@@ -1,0 +1,86 @@
+"""Data pipeline: deterministic synthetic LM stream + k-relaxed priority
+sampling (hard-example mining through the paper's hybrid queue).
+
+The synthetic stream is *learnable* (affine next-token rule + noise) so the
+end-to-end training example shows real loss descent. Priority sampling keeps
+a pool of chunks ordered by recent loss in a HybridKQueue: high-loss chunks
+are re-visited first, and the k-relaxation bounds how far ordering may lag —
+the same trade the paper makes for scalability, applied to data selection.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.core.host_queue import HybridKQueue
+
+
+@dataclasses.dataclass
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    noise: float = 0.1          # fraction of random tokens
+    mult: int = 5               # affine rule: next = (mult*cur + add) % V
+    add: int = 7
+
+
+class SyntheticLM:
+    """Deterministic, restartable synthetic LM batches."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        c = self.cfg
+        rng = np.random.default_rng(c.seed * 1_000_003 + step)
+        b, s = c.global_batch, c.seq_len
+        first = rng.integers(0, c.vocab_size, size=(b, 1))
+        toks = np.empty((b, s + 1), np.int64)
+        toks[:, :1] = first
+        for t in range(1, s + 1):
+            toks[:, t] = (toks[:, t - 1] * c.mult + c.add) % c.vocab_size
+        noise = rng.random((b, s + 1)) < c.noise
+        toks = np.where(noise, rng.integers(0, c.vocab_size, size=(b, s + 1)), toks)
+        return {
+            "tokens": toks[:, :-1].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32),
+        }
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+class PrioritySampler:
+    """k-relaxed hard-example mining over a chunk pool.
+
+    Chunks are pushed with priority = -loss (min-queue → highest loss first);
+    ``next_ids`` pops the batch to visit; ``report`` re-pushes with updated
+    loss. num_places models independent input hosts; k bounds the ordering
+    staleness (ρ = places·k ignored chunks at worst, per the paper)."""
+
+    def __init__(self, pool_size: int, num_places: int = 4, k: int = 16, seed: int = 0):
+        self.queue = HybridKQueue(num_places, k, seed)
+        self.num_places = num_places
+        self._rr = 0
+        for cid in range(pool_size):
+            self.queue.push(cid % num_places, 0.0, cid)
+
+    def next_ids(self, n: int):
+        out = []
+        for _ in range(n):
+            self._rr = (self._rr + 1) % self.num_places
+            got = self.queue.pop(self._rr)
+            if got is None:
+                break
+            out.append(got[1])
+        return out
+
+    def report(self, cid: int, loss: float):
+        self.queue.push(cid % self.num_places, -float(loss), cid)

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each oracle is the mathematically exact (or semantics-equivalent) reference
+the kernels are validated against in ``tests/test_kernels.py``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+# ---------------------------------------------------------------------------
+# relaxed_topk
+# ---------------------------------------------------------------------------
+
+def relaxed_topk_ref(
+    x: jnp.ndarray, p: int, *, c: int | None = None, block_size: int = 1024
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Semantics oracle: exact per-block top-c (jnp.top_k) then exact top-p of
+    candidates. Bit-identical selection to the kernel up to tie-breaking;
+    tests additionally check the structural ρ-relaxation property."""
+    if c is None:
+        c = p
+    n = x.shape[0]
+    n_pad = -n % block_size
+    xp = jnp.pad(x.astype(jnp.float32), (0, n_pad), constant_values=NEG_INF)
+    nb = xp.shape[0] // block_size
+    c_eff = min(c, block_size)
+    blocks = xp.reshape(nb, block_size)
+    bv, bi = jax.lax.top_k(blocks, c_eff)                       # [nb, c]
+    gi = bi + (jnp.arange(nb) * block_size)[:, None]
+    flat_v, flat_i = bv.reshape(-1), gi.reshape(-1).astype(jnp.int32)
+    top_v, pos = jax.lax.top_k(flat_v, min(p, flat_v.shape[0]))
+    top_i = flat_i[pos]
+    if top_v.shape[0] < p:
+        pad = p - top_v.shape[0]
+        top_v = jnp.pad(top_v, (0, pad), constant_values=NEG_INF)
+        top_i = jnp.pad(top_i, (0, pad), constant_values=-1)
+    return top_v, top_i
+
+
+def exact_topk_ref(x: jnp.ndarray, p: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    v, i = jax.lax.top_k(x.astype(jnp.float32), p)
+    return v, i.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+def attention_ref(
+    q: jnp.ndarray,                  # [B, H, Sq, D]
+    k: jnp.ndarray,                  # [B, Hkv, Skv, D]
+    v: jnp.ndarray,                  # [B, Hkv, Skv, D]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    sm_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Exact dense softmax attention with GQA + causal/window masking."""
+    b, h, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = h // hkv
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+    kg = jnp.repeat(k, group, axis=1)
+    vg = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kg.astype(jnp.float32)
+    ) * sm_scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+    # fully-masked rows -> zero output (matches kernel)
+    row_any = jnp.any(mask, axis=-1)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(row_any[None, None, :, None], p, 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vg.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,113 @@
+"""relaxed_topk — ρ-relaxed priority selection as a Pallas TPU kernel.
+
+This is the paper's idea turned into a TPU-native compute kernel. Selecting
+the P best of N priorities *exactly* requires a global sort/merge — a bad fit
+for a machine built around block-local VMEM compute. Under **structural
+ρ-relaxation** (paper §5.3: a pop may never ignore more than ρ items,
+regardless of age) we may instead:
+
+  1. tile the N priorities into B VMEM blocks (one grid step each),
+  2. extract each block's local top-c (c iterations of max+mask on the VPU —
+     no sort, no cross-block traffic),
+  3. take the exact top-P of the B·c candidates (tiny).
+
+Guarantee (proved in tests): the selected set ignores at most ρ = max(0, P−c)
+items — every ignored item is dominated by ≥ c better items *inside its own
+block*. Block ↔ place, c ↔ the per-place publication budget k of the hybrid
+structure: the kernel is the hybrid k-priority pop with one block per place.
+c = P recovers the exact (ρ = 0, "ideal") selection.
+
+Convention: LARGER value = higher priority (negate for min-priority pops).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+
+def _block_topc_kernel(x_ref, vals_ref, idx_ref, *, c: int, block_size: int):
+    """Extract the top-c values (+global indices) of one block.
+
+    The block is viewed as (block_size // 128, 128) so both reductions and the
+    iota are 2D (TPU-legal). c sequential max+mask rounds; each round is a full
+    VPU reduction — O(c · block_size) work, no sort network needed.
+    """
+    b = pl.program_id(0)
+    rows = block_size // 128
+    x = x_ref[...].reshape(rows, 128).astype(jnp.float32)
+    base = b * block_size
+    gidx = (
+        jax.lax.broadcasted_iota(jnp.int32, (rows, 128), 0) * 128
+        + jax.lax.broadcasted_iota(jnp.int32, (rows, 128), 1)
+        + base
+    )
+
+    def body(i, carry):
+        x, = carry
+        m = jnp.max(x)
+        # lowest flat index attaining the max (deterministic tie-break)
+        is_max = x >= m
+        cand_idx = jnp.where(is_max, gidx, jnp.iinfo(jnp.int32).max)
+        j = jnp.min(cand_idx)
+        vals_ref[0, i] = m
+        idx_ref[0, i] = j
+        x = jnp.where(gidx == j, NEG_INF, x)
+        return (x,)
+
+    jax.lax.fori_loop(0, c, body, (x,))
+
+
+def relaxed_topk(
+    x: jnp.ndarray,
+    p: int,
+    *,
+    c: int | None = None,
+    block_size: int = 1024,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """ρ-relaxed top-p of a 1-D priority array.
+
+    Returns (values[p], indices[p]) sorted descending. ρ = max(0, p - c).
+    ``x`` is padded with -inf to a multiple of ``block_size`` (padding can
+    never be selected unless p > N).
+    """
+    if c is None:
+        c = p  # exact by default
+    n = x.shape[0]
+    assert block_size % 128 == 0, "block_size must be lane-aligned (128)"
+    n_pad = -n % block_size
+    xp = jnp.pad(x.astype(jnp.float32), (0, n_pad), constant_values=NEG_INF)
+    nb = xp.shape[0] // block_size
+    c_eff = min(c, block_size)
+
+    vals, idx = pl.pallas_call(
+        functools.partial(_block_topc_kernel, c=c_eff, block_size=block_size),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block_size,), lambda b: (b,))],
+        out_specs=[
+            pl.BlockSpec((1, c_eff), lambda b: (b, 0)),
+            pl.BlockSpec((1, c_eff), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, c_eff), jnp.float32),
+            jax.ShapeDtypeStruct((nb, c_eff), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xp)
+
+    # exact top-p merge over the B*c candidates (tiny: B*c << N)
+    flat_v = vals.reshape(-1)
+    flat_i = idx.reshape(-1)
+    top_v, pos = jax.lax.top_k(flat_v, min(p, flat_v.shape[0]))
+    top_i = flat_i[pos]
+    if top_v.shape[0] < p:  # degenerate: fewer candidates than p
+        pad = p - top_v.shape[0]
+        top_v = jnp.pad(top_v, (0, pad), constant_values=NEG_INF)
+        top_i = jnp.pad(top_i, (0, pad), constant_values=-1)
+    return top_v, top_i

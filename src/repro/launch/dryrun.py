@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# The 512 host devices exist ONLY for this AOT dry-run (16x16 single-pod and
+# 2x16x16 multi-pod meshes); nothing is allocated — inputs are
+# ShapeDtypeStructs and we stop at .lower().compile().
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell,
+print memory/cost analysis, extract roofline terms (DESIGN.md §e/§g).
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_1_7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import SHAPES, all_cells, batch_pspec, get_config, input_specs
+from repro.configs.base import shape_supported
+from repro.launch.mesh import logical_rules, make_production_mesh
+from repro.launch.sharding import opt_state_pspecs, tree_shardings
+from repro.models import (
+    abstract, cache_pspecs, decode_step, init_cache, model_p, prefill, pspecs,
+)
+from repro.models import shard as lshard
+from repro.optim import adamw
+from repro.roofline.analysis import roofline
+from repro.roofline.hlo_stats import hlo_stats
+
+_BREAKDOWN = False
+from repro.train.loop import TrainState, make_train_step
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    *,
+    compile_: bool = True,
+) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = logical_rules(multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+
+    with lshard.use_mesh(mesh, rules):
+        tree = model_p(cfg)
+        params_abs = abstract(tree)
+        params_ps = pspecs(tree)
+        params_sh = tree_shardings(params_abs, params_ps, mesh)
+        batch_abs = input_specs(cfg, shape)
+        batch_sh = tree_shardings(batch_abs, batch_pspec(cfg, shape), mesh)
+
+        if shape.kind == "train":
+            opt_cfg = adamw.AdamWConfig(eightbit=cfg.adam_8bit, total_steps=1000)
+            step_fn = make_train_step(cfg, opt_cfg,
+                                      grad_accum=cfg.train_grad_accum)
+            opt_abs = jax.eval_shape(lambda p: adamw.init(opt_cfg, p), params_abs)
+            opt_ps = opt_state_pspecs(params_ps, opt_cfg.eightbit)
+            state_abs = TrainState(params=params_abs, opt=opt_abs)
+            state_sh = TrainState(
+                params=params_sh, opt=tree_shardings(opt_abs, opt_ps, mesh)
+            )
+            fn = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                         donate_argnums=0)
+            lowered = fn.lower(state_abs, batch_abs)
+        elif shape.kind == "prefill":
+            fn = jax.jit(
+                lambda p, b: prefill(p, cfg, b, shape.seq_len),
+                in_shardings=(params_sh, batch_sh),
+            )
+            lowered = fn.lower(params_abs, batch_abs)
+        else:  # decode
+            b = shape.global_batch
+            caches_abs = jax.eval_shape(
+                lambda: init_cache(cfg, b, shape.seq_len))
+            caches_sh = tree_shardings(caches_abs, cache_pspecs(cfg), mesh)
+            fn = jax.jit(
+                lambda p, c, t, q: decode_step(p, cfg, c, t, q),
+                in_shardings=(params_sh, caches_sh,
+                              batch_sh["tokens"], batch_sh["pos"]),
+                donate_argnums=1,
+            )
+            lowered = fn.lower(
+                params_abs, caches_abs, batch_abs["tokens"], batch_abs["pos"]
+            )
+
+        rec: Dict = {
+            "arch": arch, "shape": shape_name,
+            "mesh": "multi" if multi_pod else "single",
+            "chips": chips, "status": "lowered",
+            "lower_s": round(time.time() - t0, 1),
+        }
+        if not compile_:
+            return rec
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+        rec["status"] = "ok"
+
+        cost = compiled.cost_analysis()
+        mem = compiled.memory_analysis()
+        # cost_analysis counts while (scan) bodies once — keep it for
+        # reference, but derive roofline inputs from the control-flow-aware
+        # HLO parser (repro.roofline.hlo_stats).
+        rec["cost_xla"] = {k: float(v) for k, v in cost.items()
+                           if k in ("flops", "bytes accessed")}
+        from repro.roofline.hlo_stats import HloStats
+        parser = HloStats(compiled.as_text())
+        stats = parser.totals()
+        if _BREAKDOWN:
+            for row in parser.breakdown(top=20):
+                print(f"    {row['bytes']/2**30:9.2f} GiB "
+                      f"{row['flops']/1e12:8.2f} TF  x{row['count']:<8.0f} "
+                      f"{row['kind']:22s} {row['comp'][:60]}")
+        rec["cost"] = {"flops": stats["flops"], "bytes accessed": stats["bytes"]}
+        rec["memory"] = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "peak_bytes_per_device": int(
+                mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes
+            ),
+        }
+        rec["collectives"] = stats["collectives"]
+        rl = roofline(rec["cost"], stats["collectives"], chips, cfg, shape)
+        rec["roofline"] = rl.row()
+        return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--breakdown", action="store_true",
+                    help="print top byte/flop contributors for each cell")
+    args = ap.parse_args()
+    global _BREAKDOWN
+    _BREAKDOWN = args.breakdown
+
+    if args.all:
+        cells = all_cells()
+    else:
+        assert args.arch, "--arch or --all required"
+        shapes = [args.shape] if args.shape else [
+            s for s in SHAPES
+            if shape_supported(get_config(args.arch), SHAPES[s])[0]
+        ]
+        cells = [(args.arch, s) for s in shapes]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_fail = 0
+    for arch, shape_name in cells:
+        for multi in meshes:
+            tag = f"{arch}__{shape_name}__{'multi' if multi else 'single'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path) and not args.force:
+                with open(path) as f:
+                    old = json.load(f)
+                if old.get("status") == "ok":
+                    print(f"[cache] {tag}: ok "
+                          f"(peak {old['memory']['peak_bytes_per_device']/2**30:.2f} GiB/dev)")
+                    n_ok += 1
+                    continue
+            try:
+                rec = lower_cell(arch, shape_name, multi,
+                                 compile_=not args.no_compile)
+                n_ok += 1
+                if rec["status"] == "ok":
+                    m = rec["memory"]
+                    r = rec["roofline"]
+                    print(f"[ok]    {tag}: compile {rec['compile_s']}s | "
+                          f"peak {m['peak_bytes_per_device']/2**30:.2f} GiB/dev | "
+                          f"t_c {r['t_compute']*1e3:.1f}ms t_m {r['t_memory']*1e3:.1f}ms "
+                          f"t_x {r['t_collective']*1e3:.1f}ms -> {r['bottleneck']} | "
+                          f"useful {r['useful_ratio']*100:.0f}%")
+                else:
+                    print(f"[{rec['status']}] {tag}: {rec.get('reason','')}")
+            except Exception as e:
+                n_fail += 1
+                rec = {"arch": arch, "shape": shape_name,
+                       "mesh": "multi" if multi else "single",
+                       "status": "error", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+                print(f"[FAIL]  {tag}: {type(e).__name__}: {str(e)[:200]}")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+    print(f"\n{n_ok} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

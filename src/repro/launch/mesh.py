@@ -1,0 +1,40 @@
+"""Production meshes and logical→physical axis rules.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def logical_rules(multi_pod: bool = False) -> Dict[str, object]:
+    """fsdp/data_b span the full DP domain (pod × data); tensor = TP/EP.
+    expert_dp = the intra-pod data axis: experts shard over
+    (expert_dp × tensor) = 256 ways on both meshes (pod replicates experts,
+    so cross-pod traffic stays DP-gradient-only)."""
+    if multi_pod:
+        return {
+            "fsdp": ("pod", "data"),
+            "data_b": ("pod", "data"),
+            "tensor": "model",
+            "expert_dp": "data",
+        }
+    return {"fsdp": "data", "data_b": "data", "tensor": "model",
+            "expert_dp": "data"}
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for multi-device unit tests (host platform)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )

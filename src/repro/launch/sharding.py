@@ -1,0 +1,65 @@
+"""Sharding resolution: logical specs → NamedShardings, with divisibility
+fallback (a dim that doesn't divide its mesh axes is replicated — e.g. the
+batch=1 long_500k cell)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.models import shard as lshard
+from repro.optim.adamw import Q8
+
+
+def _fix_divisibility(shape, spec: PartitionSpec, mesh: Mesh) -> PartitionSpec:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        prod = int(np.prod([sizes[a] for a in axes]))
+        out.append(ax if dim % prod == 0 else None)
+    return PartitionSpec(*out)
+
+
+def resolve(abstract_leaf, logical_spec, mesh: Mesh) -> NamedSharding:
+    phys = lshard.translate(tuple(logical_spec))
+    fixed = _fix_divisibility(abstract_leaf.shape, phys, mesh)
+    return NamedSharding(mesh, fixed)
+
+
+def tree_shardings(abstract_tree, logical_spec_tree, mesh: Mesh):
+    """Map (abstract ShapeDtypeStruct tree, logical PartitionSpec tree) →
+    NamedSharding tree. Spec leaves are PartitionSpec or tuples of axis
+    names."""
+    # NB: PartitionSpec only — NamedTuples (AdamWState, Q8) must stay nodes
+    def is_spec(x):
+        return isinstance(x, PartitionSpec)
+
+    flat_a = jax.tree.leaves(abstract_tree)
+    flat_s = jax.tree.leaves(logical_spec_tree, is_leaf=is_spec)
+    assert len(flat_a) == len(flat_s), (len(flat_a), len(flat_s))
+    resolved = [resolve(a, s, mesh) for a, s in zip(flat_a, flat_s)]
+    return jax.tree.unflatten(jax.tree.structure(abstract_tree), resolved)
+
+
+def opt_state_pspecs(param_pspecs, eightbit: bool):
+    """AdamWState logical specs mirroring the param specs; Q8 scale drops the
+    last-dim sharding (its last dim is 1)."""
+    def one(ps):
+        entries = tuple(ps)
+        if eightbit:
+            return Q8(q=PartitionSpec(*entries),
+                      scale=PartitionSpec(*(entries[:-1] + (None,))) if entries
+                      else PartitionSpec())
+        return PartitionSpec(*entries)
+
+    m = jax.tree.map(one, param_pspecs,
+                     is_leaf=lambda x: isinstance(x, PartitionSpec))
+    from repro.optim.adamw import AdamWState
+    return AdamWState(step=PartitionSpec(), m=m, v=jax.tree.map(
+        lambda x: x, m, is_leaf=lambda x: isinstance(x, (PartitionSpec, Q8))))

@@ -1,0 +1,62 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3_1_7b --steps 200 \
+      --reduced --ckpt-dir /tmp/ck
+
+On a real cluster this binary runs once per host under `jax.distributed`
+(--coordinator), with the production mesh; on this container it drives the
+same code single-process (optionally with a reduced config).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale config (CPU-friendly)")
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--coordinator", default=None,
+                    help="host:port for jax.distributed (multi-host)")
+    ap.add_argument("--num-processes", type=int, default=1)
+    ap.add_argument("--process-id", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.coordinator:
+        import jax
+        jax.distributed.initialize(
+            coordinator_address=args.coordinator,
+            num_processes=args.num_processes,
+            process_id=args.process_id,
+        )
+
+    from repro.configs import get_config, get_reduced
+    from repro.data.pipeline import DataConfig
+    from repro.optim import adamw
+    from repro.train.loop import train
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    opt = adamw.AdamWConfig(lr=args.lr, eightbit=cfg.adam_8bit,
+                            total_steps=args.steps)
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                      global_batch=args.global_batch, seed=args.seed)
+    report = train(
+        cfg, steps=args.steps, opt_cfg=opt, data_cfg=data,
+        grad_accum=args.grad_accum, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, seed=args.seed,
+    )
+    print(f"done: {report.steps} steps, final loss {report.losses[-1][1]:.4f}"
+          + (f" (resumed from {report.resumed_from})" if report.resumed_from else ""))
+
+
+if __name__ == "__main__":
+    main()

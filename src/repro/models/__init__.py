@@ -1,0 +1,16 @@
+from repro.models.transformer import (  # noqa: F401
+    backbone,
+    decode_step,
+    init_cache,
+    cache_pspecs,
+    model_p,
+    prefill,
+    segments,
+    train_loss,
+)
+from repro.models.module import (  # noqa: F401
+    abstract,
+    materialize,
+    param_count,
+    pspecs,
+)

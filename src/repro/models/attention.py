@@ -1,0 +1,351 @@
+"""Attention: GQA (+qk-norm, +bias, +sliding window), MLA, decode paths.
+
+The XLA implementation is *blockwise online-softmax* (flash-style dataflow in
+pure jnp): lax.map over query blocks, lax.scan over KV blocks, so peak score
+memory is O(Bq·Bk) per (batch·head) — required for 32k prefill where dense
+S×S scores would be tens of GB. The Pallas kernel (kernels/flash_attention)
+implements the same dataflow for real TPUs; the XLA path is used by the
+dry-run so cost_analysis sees every FLOP (DESIGN.md §7.2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models import shard
+from repro.models.layers import apply_mrope, apply_rope, rmsnorm, rmsnorm_p
+from repro.models.module import FSDP, TENSOR, P
+
+F32 = jnp.float32
+NEG_INF = float("-inf")
+
+
+# ---------------------------------------------------------------------------
+# blockwise attention core (shared by GQA and MLA prefill/train)
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(
+    q: jnp.ndarray,                 # [B, Hq, Sq, Dk]
+    k: jnp.ndarray,                 # [B, Hkv, Skv, Dk]
+    v: jnp.ndarray,                 # [B, Hkv, Skv, Dv]
+    *,
+    causal: bool,
+    window: Optional[int] = None,
+    sm_scale: Optional[float] = None,
+    block_q: int = 512,
+    block_kv: int = 512,
+) -> jnp.ndarray:
+    b, hq, sq, dk = q.shape
+    _, hkv, skv, dv = v.shape[0], v.shape[1], v.shape[2], v.shape[3]
+    g = hq // hkv
+    if sm_scale is None:
+        sm_scale = dk ** -0.5
+    bq = min(block_q, sq)
+    bk = min(block_kv, skv)
+    pad_q, pad_k = -sq % bq, -skv % bk
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nq, nk = qp.shape[2] // bq, kp.shape[2] // bk
+    # keep q/k/v in their storage dtype (bf16): the MXU takes bf16 inputs
+    # with f32 accumulation (preferred_element_type) — casting whole tensors
+    # to f32 doubled attention HBM traffic (§Perf iteration H1)
+    qg = qp.reshape(b, hkv, g, nq, bq, dk)
+    kc = kp.reshape(b, hkv, nk, bk, dk)
+    vc = vp.reshape(b, hkv, nk, bk, dv)
+
+    def q_block(iq):
+        qb = qg[:, :, :, iq]                               # [B,Hkv,G,Bq,Dk]
+        qpos = iq * bq + jnp.arange(bq)
+
+        def kv_step(carry, ik):
+            m_p, l_p, acc = carry
+            kb, vb = kc[:, :, ik], vc[:, :, ik]            # [B,Hkv,Bk,·]
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kb,
+                           preferred_element_type=F32) * sm_scale
+            kpos = ik * bk + jnp.arange(bk)
+            mask = kpos[None, :] < skv
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= (qpos[:, None] - kpos[None, :]) < window
+            s = jnp.where(mask, s, NEG_INF)
+            m_c = jnp.maximum(m_p, jnp.max(s, axis=-1, keepdims=True))
+            safe = jnp.where(jnp.isfinite(m_c), m_c, 0.0)
+            alpha = jnp.exp(m_p - safe)
+            p = jnp.exp(s - safe)
+            l_c = alpha * l_p + jnp.sum(p, axis=-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p, vb)
+            return (m_c, l_c, acc), None
+
+        init = (
+            jnp.full((b, hkv, g, bq, 1), NEG_INF, F32),
+            jnp.zeros((b, hkv, g, bq, 1), F32),
+            jnp.zeros((b, hkv, g, bq, dv), F32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        return jnp.where(l > 0, acc / jnp.where(l > 0, l, 1.0), 0.0)
+
+    out = jax.lax.map(q_block, jnp.arange(nq))             # [nq,B,Hkv,G,Bq,Dv]
+    out = jnp.moveaxis(out, 0, 3).reshape(b, hq, nq * bq, dv)
+    return out[:, :, :sq].astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,                 # [B, Hq, Dk] single query position
+    k_cache: jnp.ndarray,           # [B, Hkv, Smax, Dk]
+    v_cache: jnp.ndarray,           # [B, Hkv, Smax, Dv]
+    pos: jnp.ndarray,               # [B] current position (cache filled <= pos)
+    *,
+    window: Optional[int] = None,
+    sm_scale: Optional[float] = None,
+) -> jnp.ndarray:
+    b, hq, dk = q.shape
+    hkv, smax = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    if sm_scale is None:
+        sm_scale = dk ** -0.5
+    qg = q.reshape(b, hkv, g, dk).astype(F32) * sm_scale
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k_cache.astype(F32))
+    kpos = jnp.arange(smax)[None, :]
+    mask = kpos <= pos[:, None]
+    if window is not None:
+        mask &= (pos[:, None] - kpos) < window
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(F32))
+    return out.reshape(b, hq, -1).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+def gqa_p(cfg: ModelConfig) -> dict:
+    d, h, hkv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    p = {
+        "wq": P((d, h * dh), (FSDP, TENSOR)),
+        "wk": P((d, hkv * dh), (FSDP, TENSOR)),
+        "wv": P((d, hkv * dh), (FSDP, TENSOR)),
+        "wo": P((h * dh, d), (TENSOR, FSDP)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = P((h * dh,), (TENSOR,), init="zeros")
+        p["bk"] = P((hkv * dh,), (TENSOR,), init="zeros")
+        p["bv"] = P((hkv * dh,), (TENSOR,), init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_p(dh)
+        p["k_norm"] = rmsnorm_p(dh)
+    return p
+
+
+def _qkv(params, cfg: ModelConfig, x, pos):
+    """Project + rope. x: [B,S,d]; pos: [B,S] (or [3,B,S] for mrope)."""
+    b, s, _ = x.shape
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    q = shard.constraint(q, "data_b", None, "tensor", None)
+    k = shard.constraint(k, "data_b", None, "tensor", None)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if cfg.pos == "rope":
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    elif cfg.pos == "mrope":
+        q = apply_mrope(q, pos, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, pos, cfg.mrope_sections, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_forward(
+    params, cfg: ModelConfig, x, pos, *, window=None
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Train/prefill attention. Returns (out, (k, v)) — k/v in [B,Hkv,S,Dh]
+    layout for cache construction.
+
+    TP head mapping: KV heads are repeated to the query-head count and heads
+    padded up to a multiple of the tensor-axis size, so each device owns whole
+    heads (replicating KV over a 16-way axis, the XLA fallback when
+    kv_heads ∤ tp, costs ~8x the attention HBM traffic — §Perf iteration 1).
+    """
+    q, k, v = _qkv(params, cfg, x, pos)
+    b, s = x.shape[0], x.shape[1]
+    h, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    g = h // hkv
+    k0, v0 = k, v                     # true-kv-head copies for the cache
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    tp = shard.axis_size("tensor")
+    h_pad = -h % tp
+    if h_pad:
+        padw = ((0, 0), (0, 0), (0, h_pad), (0, 0))
+        q, k, v = jnp.pad(q, padw), jnp.pad(k, padw), jnp.pad(v, padw)
+    q = shard.constraint(q, "data_b", None, "tensor", None)
+    k = shard.constraint(k, "data_b", None, "tensor", None)
+    v = shard.constraint(v, "data_b", None, "tensor", None)
+    qt, kt, vt = (t.swapaxes(1, 2) for t in (q, k, v))
+    out = blockwise_attention(
+        qt, kt, vt,
+        causal=cfg.causal, window=window,
+        block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+    )
+    out = out.swapaxes(1, 2)[:, :, :h].reshape(b, s, -1)
+    # cache layout keeps the true kv heads (decode shards the cache over seq)
+    return out @ params["wo"], (k0.swapaxes(1, 2), v0.swapaxes(1, 2))
+
+
+def gqa_decode(
+    params, cfg: ModelConfig, x, pos, cache, *, window=None
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Single-token decode. x: [B,1,d]; pos: [B]; cache: (k,v) [B,Hkv,Smax,Dh].
+    For windowed layers the cache is a rolling buffer of size >= window and
+    positions are stored modulo the buffer length."""
+    k_cache, v_cache = cache
+    smax = k_cache.shape[2]
+    if cfg.pos == "mrope":
+        rope_pos = pos[None, :, None] * jnp.ones((3, 1, 1), pos.dtype)
+    else:
+        rope_pos = pos[:, None]
+    q, k, v = _qkv(params, cfg, x, rope_pos)
+    b = x.shape[0]
+    h, dh = cfg.num_heads, cfg.resolved_head_dim
+    slot = pos % smax if window is not None else pos
+    bidx = jnp.arange(b)
+    k_cache = k_cache.at[bidx, :, slot].set(k[:, 0])
+    v_cache = v_cache.at[bidx, :, slot].set(v[:, 0])
+    if window is not None:
+        # rolling buffer: mask by true age, not slot index
+        kpos = jnp.arange(smax)[None, :]
+        wrapped = pos[:, None] - ((pos[:, None] - kpos) % smax)
+        out = _decode_rolling(q[:, 0], k_cache, v_cache, pos, wrapped, window)
+    else:
+        out = decode_attention(q[:, 0], k_cache, v_cache, pos)
+    out = out.reshape(b, 1, h * dh)
+    return out @ params["wo"], (k_cache, v_cache)
+
+
+def _decode_rolling(q, k_cache, v_cache, pos, age_pos, window):
+    b, h, dk = q.shape
+    hkv, smax = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, hkv, g, dk).astype(F32) * dk ** -0.5
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k_cache.astype(F32))
+    mask = (age_pos >= 0) & (age_pos <= pos[:, None]) & (
+        (pos[:, None] - age_pos) < window
+    )
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(F32))
+    return out.reshape(b, h, -1).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_p(cfg: ModelConfig) -> dict:
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wdq": P((d, m.q_lora_rank), (FSDP, None)),
+        "q_norm": rmsnorm_p(m.q_lora_rank),
+        "wuq": P((m.q_lora_rank, h * qk), (None, TENSOR)),
+        "wdkv": P((d, m.kv_lora_rank + m.qk_rope_head_dim), (FSDP, None)),
+        "kv_norm": rmsnorm_p(m.kv_lora_rank),
+        "wuk": P((m.kv_lora_rank, h * m.qk_nope_head_dim), (None, TENSOR)),
+        "wuv": P((m.kv_lora_rank, h * m.v_head_dim), (None, TENSOR)),
+        "wo": P((h * m.v_head_dim, d), (TENSOR, FSDP)),
+    }
+
+
+def _mla_q(params, cfg, x, pos):
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q_lat = rmsnorm(params["q_norm"], x @ params["wdq"], cfg.norm_eps)
+    q = (q_lat @ params["wuq"]).reshape(b, s, h, qk)
+    q = shard.constraint(q, "data_b", None, "tensor", None)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_kv_latent(params, cfg, x, pos):
+    m: MLAConfig = cfg.mla
+    ckr = x @ params["wdkv"]
+    c_kv = rmsnorm(params["kv_norm"], ckr[..., : m.kv_lora_rank], cfg.norm_eps)
+    k_rope = ckr[..., m.kv_lora_rank:][:, :, None, :]      # [B,S,1,Dr]
+    k_rope = apply_rope(k_rope, pos, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope                                     # [B,S,r], [B,S,Dr]
+
+
+def mla_forward(params, cfg: ModelConfig, x, pos):
+    """Train/prefill MLA. Returns (out, (c_kv, k_rope)) latent cache parts."""
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    q_nope, q_rope = _mla_q(params, cfg, x, pos)
+    c_kv, k_rope = _mla_kv_latent(params, cfg, x, pos)
+    k_nope = (c_kv @ params["wuk"]).reshape(b, s, h, m.qk_nope_head_dim)
+    v = (c_kv @ params["wuv"]).reshape(b, s, h, m.v_head_dim)
+    k_nope = shard.constraint(k_nope, "data_b", None, "tensor", None)
+    v = shard.constraint(v, "data_b", None, "tensor", None)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, m.qk_rope_head_dim))],
+        axis=-1,
+    )
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    out = blockwise_attention(
+        q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+        causal=cfg.causal, sm_scale=qk_dim ** -0.5,
+        block_q=cfg.attn_block_q, block_kv=cfg.attn_block_kv,
+    )
+    out = out.swapaxes(1, 2).reshape(b, s, -1)
+    return out @ params["wo"], (c_kv, k_rope)
+
+
+def mla_decode(params, cfg: ModelConfig, x, pos, cache):
+    """Absorbed-matmul MLA decode: scores/values computed in the latent space;
+    the cache stores only (c_kv [B,Smax,r], k_rope [B,Smax,Dr]) — the MLA
+    memory win (r + Dr = 576 vs h*(dk+dv) floats per token)."""
+    m: MLAConfig = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    c_cache, r_cache = cache
+    q_nope, q_rope = _mla_q(params, cfg, x, pos[:, None])
+    c_new, r_new = _mla_kv_latent(params, cfg, x, pos[:, None])
+    bidx = jnp.arange(b)
+    c_cache = c_cache.at[bidx, pos].set(c_new[:, 0])
+    r_cache = r_cache.at[bidx, pos].set(r_new[:, 0])
+    # absorb W_uk into q: q_c[b,h,r] = sum_d q_nope[b,h,d] * wuk[r, h*d]
+    wuk = params["wuk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_c = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(F32), wuk.astype(F32))
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = (
+        jnp.einsum("bhr,bsr->bhs", q_c, c_cache.astype(F32))
+        + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(F32), r_cache.astype(F32))
+    ) * scale
+    mask = jnp.arange(c_cache.shape[1])[None, :] <= pos[:, None]
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", p, c_cache.astype(F32))   # [B,H,r]
+    wuv = params["wuv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, wuv.astype(F32))
+    o = o.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
+    return o @ params["wo"], (c_cache, r_cache)

@@ -1,0 +1,162 @@
+"""Shared layers: norms, RoPE/M-RoPE, MLPs, embeddings, chunked loss."""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import shard
+from repro.models.module import P
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_p(dim: int) -> P:
+    return P((dim,), (None,), init="ones", dtype=jnp.float32)
+
+
+def rmsnorm(w: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    # No full-tensor f32 convert of x: XLA hoists such a convert across the
+    # remat-saved activation stack and stores ALL saved layer activations in
+    # f32 (2x activation memory + traffic; §Perf iteration H2). Squares are
+    # taken in the storage dtype with f32 *accumulation* (dtype=f32 reduce).
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True, dtype=F32)
+    scale = (jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return x * scale * w.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / theta ** (jnp.arange(0, head_dim, 2, dtype=F32) / head_dim)
+
+
+def apply_rope(
+    x: jnp.ndarray,                 # [..., S, H, D]
+    pos: jnp.ndarray,               # [..., S] absolute positions
+    theta: float,
+) -> jnp.ndarray:
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    angles = pos[..., None].astype(F32) * freqs        # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]                # [..., S, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray,                 # [B, S, H, D]
+    pos3: jnp.ndarray,              # [3, B, S] (t, h, w) positions
+    sections: Tuple[int, int, int],
+    theta: float,
+) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: the D/2 frequency slots are split into 3 sections,
+    each rotated by its own (temporal/height/width) position stream."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    sec = jnp.cumsum(jnp.asarray((0,) + sections))
+    slot = jnp.arange(d // 2)
+    sel = jnp.searchsorted(sec[1:], slot, side="right")  # 0/1/2 per slot
+    # angles per stream then pick per slot
+    ang = pos3[..., None].astype(F32) * freqs          # [3, B, S, D/2]
+    angles = jnp.take_along_axis(
+        jnp.moveaxis(ang, 0, -1), sel[None, None, :, None], axis=-1
+    )[..., 0]                                          # [B, S, D/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_p(d: int, ff: int, style: str) -> dict:
+    from repro.models.module import FSDP, TENSOR
+    if style in ("swiglu", "geglu"):
+        return {
+            "wi": P((d, 2 * ff), (FSDP, TENSOR)),      # fused gate+up
+            "wo": P((ff, d), (TENSOR, FSDP)),
+        }
+    return {
+        "wi": P((d, ff), (FSDP, TENSOR)),
+        "wo": P((ff, d), (TENSOR, FSDP)),
+    }
+
+
+def mlp(params: dict, x: jnp.ndarray, style: str) -> jnp.ndarray:
+    h = x @ params["wi"]
+    if style in ("swiglu", "geglu"):
+        gate, up = jnp.split(h, 2, axis=-1)
+        act = jax.nn.silu(gate.astype(F32)) if style == "swiglu" else jax.nn.gelu(gate.astype(F32))
+        h = (act * up.astype(F32)).astype(x.dtype)
+    else:
+        h = jax.nn.gelu(h.astype(F32)).astype(x.dtype)
+    h = shard.constraint(h, "data_b", None, "tensor")
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# embeddings / lm head / loss
+# ---------------------------------------------------------------------------
+
+def embed_p(vocab: int, d: int) -> P:
+    from repro.models.module import FSDP, TENSOR
+    return P((vocab, d), (TENSOR, FSDP), init="embed")
+
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)
+
+
+def chunked_softmax_xent(
+    head: jnp.ndarray,              # [d, V] output head (or embed.T)
+    h: jnp.ndarray,                 # [B, S, d] final hiddens
+    labels: jnp.ndarray,            # [B, S] int32 (-1 = masked)
+    chunk: int = 512,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cross-entropy without materializing [B, S, V]: scan over seq chunks.
+    Returns (sum_loss, num_tokens)."""
+    b, s, d = h.shape
+    c = min(chunk, s)
+    pad = -s % c
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n = h.shape[1] // c
+    hc = h.reshape(b, n, c, d).swapaxes(0, 1)          # [n, B, c, d]
+    lc = labels.reshape(b, n, c).swapaxes(0, 1)        # [n, B, c]
+
+    v = head.shape[-1]
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hx, lx = xs
+        logits = (hx @ head).astype(F32)               # [B, c, V]
+        logits = shard.constraint(logits, "data_b", None, "tensor")
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+        # gold logit via masked reduction over the (vocab-sharded) axis —
+        # take_along_axis would all-gather the full [B,c,V] logits
+        onehot = (jnp.arange(v)[None, None, :] ==
+                  jnp.maximum(lx, 0)[..., None])
+        gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+        mask = (lx >= 0).astype(F32)
+        tot = tot + jnp.sum((lse - gold) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), F32), jnp.zeros((), F32)), (hc, lc))
+    return tot, cnt

@@ -1,0 +1,91 @@
+"""Minimal functional module system (no flax/haiku dependency).
+
+A model is described by a tree of ``P`` descriptors (shape + sharding +
+initializer). The same tree serves three purposes:
+
+  * ``materialize(key, tree)``  -> real parameter pytree (for smoke/training)
+  * ``abstract(tree)``          -> ShapeDtypeStruct pytree (for AOT dry-runs)
+  * ``pspecs(tree)``            -> PartitionSpec pytree (for in_shardings)
+
+keeping parameters, shapes and shardings impossible to drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+Tree = Any
+
+# logical mesh axes (resolved by repro.launch.mesh.logical_to_mesh)
+FSDP = "fsdp"      # -> ("pod", "data") — weight sharding / ZeRO domain
+TENSOR = "tensor"  # -> "model"         — TP / EP domain
+DATA = "data_b"    # -> ("pod", "data") — batch dim of activations
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Parameter descriptor."""
+    shape: Tuple[int, ...]
+    spec: Tuple[Optional[str], ...]
+    init: str = "normal"               # normal | zeros | ones | embed
+    scale_axis: int = 0                # fan-in axis for "normal"
+    dtype: Any = jnp.bfloat16
+
+    def pspec(self) -> PartitionSpec:
+        return PartitionSpec(*self.spec)
+
+
+def _is_p(x) -> bool:
+    return isinstance(x, P)
+
+
+def materialize(key: jax.Array, tree: Tree) -> Tree:
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_p)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, p in zip(keys, leaves):
+        if p.init == "zeros":
+            arr = jnp.zeros(p.shape, p.dtype)
+        elif p.init == "ones":
+            arr = jnp.ones(p.shape, p.dtype)
+        else:
+            fan_in = p.shape[p.scale_axis] if p.shape else 1
+            std = 0.02 if p.init == "embed" else fan_in ** -0.5
+            arr = (jax.random.normal(k, p.shape, jnp.float32) * std).astype(p.dtype)
+        out.append(arr)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract(tree: Tree) -> Tree:
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), tree, is_leaf=_is_p
+    )
+
+
+def pspecs(tree: Tree) -> Tree:
+    return jax.tree.map(lambda p: p.pspec(), tree, is_leaf=_is_p)
+
+
+def stack(tree: Tree, n: int) -> Tree:
+    """Stack a block descriptor tree for scan-over-layers: (n, *shape), with
+    the layer dim unsharded."""
+    return jax.tree.map(
+        lambda p: P((n,) + p.shape, (None,) + p.spec, p.init,
+                    p.scale_axis + 1, p.dtype),
+        tree, is_leaf=_is_p,
+    )
+
+
+def param_count(tree: Tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=_is_p)
+    total = 0
+    for p in leaves:
+        k = 1
+        for s in p.shape:
+            k *= s
+        total += k
+    return total

@@ -1,0 +1,283 @@
+"""Mixture-of-Experts with sort-based dispatch and ρ-relaxed capacity drops.
+
+MoE routing *is* relaxed priority scheduling (DESIGN.md §3): each expert is a
+priority queue of (token, gate-weight) items with capacity C; pairs are sorted
+by (expert, -weight) so capacity overflow drops the *lowest-priority* pairs —
+the dropped pairs are exactly the paper's "ignored items", and the fraction is
+surfaced as ``router_dropped``.
+
+Dispatch is sort/scatter-based (O(T·k·d) memory) rather than one-hot matmul
+(O(T·E·C·d)) — mandatory at 256 experts. Tokens are processed in
+``route_groups`` static groups whose leading axis is sharded over DP, expert
+tensors are sharded over the TENSOR (=EP) axis; XLA SPMD inserts the
+dispatch/combine collectives (all-to-all class) between the two shardings.
+
+The router's top-k can optionally run ρ-relaxed (``router_relaxed_c``) via the
+same block-local-top-c construction as kernels/relaxed_topk.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models import shard
+from repro.models.layers import mlp, mlp_p
+from repro.models.module import FSDP, TENSOR, P
+
+F32 = jnp.float32
+
+
+def ep_layout(cfg: ModelConfig):
+    """Pick the expert-parallel weight/dispatch layout for the bound mesh.
+
+    L1 (full-EP): E divides expert_dp·tensor → every chip owns whole experts,
+       zero weight gathers; tokens all-to-all to owners. (deepseek: 256 = 16·16)
+    L2 (EP×TP): E divides expert_dp, d_ff divides tensor → experts over the
+       data axis, expert FFN over tensor. (llama4: 128 = 16·8 per data row)
+    L3 (EP-over-tensor + FSDP weights): the fallback (original layout) —
+       pays per-layer expert-weight all-gathers.
+    """
+    ed = shard.axis_size("expert_dp")
+    tp = shard.axis_size("tensor")
+    e, f = cfg.moe.num_experts, cfg.moe.d_ff_expert
+    if e % max(ed * tp, 1) == 0:
+        return {
+            "name": "L1-fullEP",
+            "wi": (("expert_dp", "tensor"), None, None),
+            "wo": (("expert_dp", "tensor"), None, None),
+            "xe": (None, ("expert_dp", "tensor"), None, None),
+        }
+    if e % max(ed, 1) == 0 and (2 * f) % max(tp, 1) == 0:
+        return {
+            "name": "L2-EPxTP",
+            "wi": ("expert_dp", None, "tensor"),
+            "wo": ("expert_dp", "tensor", None),
+            "xe": (None, "expert_dp", None, None),
+        }
+    return {
+        "name": "L3-EPoverTP",
+        "wi": ("tensor", "fsdp", None),
+        "wo": ("tensor", None, "fsdp"),
+        "xe": ("data_b", "tensor", None, None),
+    }
+
+
+def moe_p(cfg: ModelConfig) -> dict:
+    m: MoEConfig = cfg.moe
+    d, e, f = cfg.d_model, m.num_experts, m.d_ff_expert
+    lay = ep_layout(cfg)
+    p = {
+        "router": P((d, e), (None, None), dtype=jnp.float32),
+        "wi": P((e, d, 2 * f), lay["wi"]),
+        "wo": P((e, f, d), lay["wo"]),
+    }
+    if m.router == "sigmoid":
+        p["router_bias"] = P((e,), (None,), init="zeros", dtype=jnp.float32)
+    if m.num_shared:
+        fs = m.d_ff_shared or m.d_ff_expert
+        p["shared"] = mlp_p(d, m.num_shared * fs, cfg.mlp_style)
+    return p
+
+
+def _router_scores(params, m: MoEConfig, x_f32: jnp.ndarray) -> jnp.ndarray:
+    logits = x_f32 @ params["router"].astype(F32)
+    if m.router == "sigmoid":
+        # deepseek-v3: sigmoid affinity + aux-loss-free bias for selection
+        return jax.nn.sigmoid(logits) + params["router_bias"]
+    return jax.nn.softmax(logits, axis=-1)
+
+
+import numpy as _np
+
+
+def _float0(idx):
+    return _np.zeros(idx.shape, dtype=jax.dtypes.float0)
+
+
+@jax.custom_vjp
+def _btake2(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Batched take along axis 1 of a [g, n, ...] array with idx [g, m].
+
+    vmap of a 1-D gather, with a *hand-written* vmap'd scatter-add backward:
+    (a) jnp.take_along_axis has a broken gradient in this jax build;
+    (b) arange-based advanced indexing AND the auto-transpose of batched
+    gathers both defeat the SPMD scatter partitioner (the operand gets
+    replicated — measured 24 TB of all-gathers in the deepseek dispatch).
+    vmap'd 1-D gathers/scatters partition cleanly on the batch axis
+    (§Perf iteration H3)."""
+    return jax.vmap(lambda row, ii: row[ii])(x, idx)
+
+
+def _btake2_fwd(x, idx):
+    # zero-size carrier for x's row shape + dtype (residuals must be jax types)
+    return _btake2(x, idx), (idx, jnp.zeros((0,) + x.shape[1:], x.dtype))
+
+
+def _btake2_bwd(res, ct):
+    idx, zref = res
+    dx = jax.vmap(
+        lambda ii, cc: jnp.zeros(zref.shape[1:], ct.dtype).at[ii].add(cc)
+    )(idx, ct)
+    return dx.astype(zref.dtype), _float0(idx)
+
+
+_btake2.defvjp(_btake2_fwd, _btake2_bwd)
+
+
+@jax.custom_vjp
+def _btake3(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Batched take along the last axis of [g, t, e] with idx [g, t, k]."""
+    return jax.vmap(jax.vmap(lambda row, ii: row[ii]))(x, idx)
+
+
+def _btake3_fwd(x, idx):
+    return _btake3(x, idx), (idx, jnp.zeros((0, 0) + x.shape[2:], x.dtype))
+
+
+def _btake3_bwd(res, ct):
+    idx, zref = res
+    dx = jax.vmap(jax.vmap(
+        lambda ii, cc: jnp.zeros(zref.shape[2:], ct.dtype).at[ii].add(cc)
+    ))(idx, ct)
+    return dx.astype(zref.dtype), _float0(idx)
+
+
+_btake3.defvjp(_btake3_fwd, _btake3_bwd)
+
+
+def _bscatter(shape_1d, idx: jnp.ndarray, upd: jnp.ndarray, *, add: bool,
+              dtype) -> jnp.ndarray:
+    """vmap'd batched scatter (set/add) with a partition-friendly gather
+    backward (the auto-transpose replicates; see _btake2)."""
+    @jax.custom_vjp
+    def scat(ii, uu):
+        def one(i1, u1):
+            z = jnp.zeros(shape_1d, dtype)
+            return z.at[i1].add(u1) if add else z.at[i1].set(u1)
+        return jax.vmap(one)(ii, uu)
+
+    def fwd(ii, uu):
+        return scat(ii, uu), ii
+
+    def bwd(ii, ct):
+        du = jax.vmap(lambda i1, c1: c1[i1])(ii, ct)
+        return _float0(ii), du.astype(upd.dtype)
+
+    scat.defvjp(fwd, bwd)
+    return scat(idx, upd)
+
+
+def _topk_relaxed(scores: jnp.ndarray, k: int, c: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Row-wise top-k; if 0 < c < k, ρ-relaxed per-block selection (the
+    relaxed_topk construction applied along the expert axis)."""
+    if c <= 0 or c >= k:
+        return jax.lax.top_k(scores, k)
+    e = scores.shape[-1]
+    nb = max(1, e // 128)
+    blocks = scores.reshape(*scores.shape[:-1], nb, e // nb)
+    bv, bi = jax.lax.top_k(blocks, c)
+    bi = bi + (jnp.arange(nb) * (e // nb))[:, None]
+    flat_v = bv.reshape(*scores.shape[:-1], nb * c)
+    flat_i = bi.reshape(*scores.shape[:-1], nb * c)
+    v, pos = jax.lax.top_k(flat_v, k)
+    idx = _btake3(flat_i, pos)
+    return v, idx
+
+
+def moe_forward(params, cfg: ModelConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, dict]:
+    """x: [B, S, d] -> (out [B, S, d], metrics)."""
+    m: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    e, k = m.num_experts, m.top_k
+    t = b * s
+    g = min(m.route_groups, t)
+    while t % g:                                          # largest divisor <= route_groups
+        g -= 1
+    tg = t // g                                           # tokens per group
+    xg = x.reshape(g, tg, d)
+    xg = shard.constraint(xg, "data_b", None, None)
+
+    scores = _router_scores(params, m, xg.astype(F32))    # [g, tg, e]
+    # selection is non-differentiable (stop_gradient); weights are re-gathered
+    # differentiably below — also sidesteps this jax build's broken
+    # sort/top_k JVP (operand_batching_dims transpose).
+    _, idx = _topk_relaxed(
+        jax.lax.stop_gradient(scores), k, m.router_relaxed_c
+    )                                                     # [g, tg, k]
+    w = _btake3(scores, idx)
+    if m.router == "sigmoid":
+        # weights from raw sigmoid (bias used for selection only), normalized
+        raw = _btake3(
+            jax.nn.sigmoid(xg.astype(F32) @ params["router"].astype(F32)), idx
+        )
+        w = raw / (jnp.sum(raw, axis=-1, keepdims=True) + 1e-9)
+
+    cap = int(max(1, (tg * k / e) * m.capacity_factor))   # per group per expert
+
+    # ---- sort pairs by (expert, -weight): capacity drops lowest priority --
+    pe = idx.reshape(g, tg * k)                           # pair expert ids
+    pw = w.reshape(g, tg * k)
+    pt = jnp.broadcast_to(
+        jnp.arange(tg)[:, None], (tg, k)
+    ).reshape(tg * k)[None].repeat(g, axis=0)             # pair token ids
+    key = pe.astype(F32) * 2.0 - pw / (jnp.max(pw, initial=1.0) + 1e-9)
+    order = jnp.argsort(jax.lax.stop_gradient(key), axis=-1)
+    pe_s = _btake2(pe, order)
+    pw_s = _btake2(pw, order)
+    pt_s = _btake2(pt, order)
+    # position of each pair within its (sorted, contiguous) expert run:
+    # pos = i - first_index(expert) via searchsorted — O(P + e log P), versus
+    # the one-hot cumsum formulation which materializes [g, P, e] (8.6 TB at
+    # deepseek train scale; §Perf iteration H3b)
+    npairs = pe_s.shape[1]
+    starts = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(e), side="left")
+    )(pe_s)                                               # [g, e]
+    pos_in_e = jnp.arange(npairs)[None, :] - _btake2(starts, pe_s)
+    keep = pos_in_e < cap                                 # rho-relaxation drop
+    slot = jnp.where(keep, pe_s * cap + pos_in_e, e * cap)  # overflow row
+
+    # ---- dispatch: vmap'd scatter into [g, e*cap+1, d] --------------------
+    # scatter-ADD, not set: slots are unique by construction (collisions only
+    # on the sliced-away overflow row) and the SPMD partitioner replicates
+    # non-associative scatter-set operands (§Perf iteration H3c)
+    xt = _btake2(xg, pt_s)                                # [g, P, d]
+    disp = _bscatter((e * cap + 1, d), slot, xt.astype(x.dtype),
+                     add=True, dtype=x.dtype)
+    xe = disp[:, : e * cap].reshape(g, e, cap, d)
+    # dispatch reshard: tokens move from DP groups to the expert owners.
+    # staged in two hops — (g:dp) -> (g:dp, e:tp) -> final EP layout — a
+    # single hop makes the partitioner fall back to full replication
+    # (§Perf iteration H3d)
+    lay = ep_layout(cfg)
+    xe = shard.constraint(xe, "data_b", "tensor", None, None)
+    xe = shard.constraint(xe, *lay["xe"])
+
+    # ---- expert FFN (swiglu), experts sharded over TENSOR -----------------
+    h = jnp.einsum("gecd,edf->gecf", xe, params["wi"])
+    gate, up = jnp.split(h, 2, axis=-1)
+    h = (jax.nn.silu(gate.astype(F32)) * up.astype(F32)).astype(x.dtype)
+    ye = jnp.einsum("gecf,efd->gecd", h, params["wo"])
+    ye = shard.constraint(ye, *lay["xe"])
+    ye = shard.constraint(ye, "data_b", "tensor", None, None)
+
+    # ---- combine: gather back per pair, weight, scatter-add over tokens ---
+    # pad (not concat) the overflow row: concat's transpose (split) was
+    # replicated by the partitioner
+    ye_flat = jnp.pad(ye.reshape(g, e * cap, d), ((0, 0), (0, 1), (0, 0)))
+    ye_flat = shard.constraint(ye_flat, "data_b", None, None)
+    yp = _btake2(ye_flat, slot)                                 # [g, P, d]
+    yp = yp.astype(F32) * (pw_s * keep)[..., None]
+    out = _bscatter((tg, d), pt_s, yp, add=True, dtype=F32)
+    out = shard.constraint(out, "data_b", None, None)
+
+    if m.num_shared:
+        out = out + mlp(params["shared"], xg, cfg.mlp_style).astype(F32)
+
+    # single accumulated metric (must keep the scan-carry structure static)
+    metrics = {"router_dropped": 1.0 - jnp.mean(keep.astype(F32))}
+    return out.reshape(b, s, d).astype(x.dtype), metrics

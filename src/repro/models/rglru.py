@@ -1,0 +1,106 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+The recurrence h_t = a_t ⊙ h_{t-1} + √(1-a_t²) ⊙ (i_t ⊙ x_t) is a diagonal
+linear recurrence → computed with jax.lax.associative_scan (log-depth,
+TPU-friendly) for train/prefill and an O(1) update for decode. Gates use
+block-diagonal projections (num_heads blocks) as in Griffin. Channel dims are
+sharded over TENSOR; the scan is along the (unsharded) time axis so the
+recurrence itself needs no collectives.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RGLRUConfig
+from repro.models import shard
+from repro.models.module import FSDP, TENSOR, P
+
+F32 = jnp.float32
+
+
+def _dims(cfg: ModelConfig):
+    m: RGLRUConfig = cfg.rglru
+    dr = m.width or cfg.d_model
+    nb = cfg.num_heads
+    return m, dr, nb
+
+
+def rglru_p(cfg: ModelConfig) -> dict:
+    m, dr, nb = _dims(cfg)
+    d = cfg.d_model
+    bd = dr // nb
+    return {
+        "wx": P((d, dr), (FSDP, TENSOR)),            # recurrence branch in
+        "wy": P((d, dr), (FSDP, TENSOR)),            # gate branch in
+        "conv_w": P((m.d_conv, dr), (None, TENSOR)),
+        "conv_b": P((dr,), (TENSOR,), init="zeros"),
+        # block-diagonal gate projections (Griffin BlockDiagonalLinear)
+        "gate_a_w": P((nb, bd, bd), (TENSOR, None, None)),
+        "gate_a_b": P((nb, bd), (TENSOR, None), init="zeros"),
+        "gate_x_w": P((nb, bd, bd), (TENSOR, None, None)),
+        "gate_x_b": P((nb, bd), (TENSOR, None), init="zeros"),
+        "lam": P((dr,), (TENSOR,), init="ones", dtype=jnp.float32),
+        "wo": P((dr, d), (TENSOR, FSDP)),
+    }
+
+
+def _block_diag(w, b, x, nb):
+    """x: [B,S,dr] -> block-diagonal linear, blocks on last dim."""
+    bsz, s, dr = x.shape
+    xb = x.reshape(bsz, s, nb, dr // nb)
+    y = jnp.einsum("bsnd,nde->bsne", xb.astype(F32), w.astype(F32)) + b
+    return y.reshape(bsz, s, dr)
+
+
+def _conv1d(w, b, x, state=None):
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i : xp.shape[1] - (k - 1 - i)] * w[i] for i in range(k))
+    return (y + b).astype(x.dtype), xp[:, -(k - 1) :]
+
+
+def rglru_forward(
+    params, cfg: ModelConfig, x, cache=None, want_cache=False
+) -> Tuple[jnp.ndarray, Optional[tuple]]:
+    """x: [B,S,d]; cache: (conv_state [B,K-1,dr], h [B,dr] f32)."""
+    m, dr, nb = _dims(cfg)
+    b, s, d = x.shape
+    xr = x @ params["wx"]                              # recurrence branch
+    xr = shard.constraint(xr, "data_b", None, "tensor")
+    gate = jax.nn.gelu((x @ params["wy"]).astype(F32)) # gate branch
+    conv_state = cache[0] if cache is not None else None
+    xr, new_conv = _conv1d(params["conv_w"], params["conv_b"], xr, conv_state)
+
+    # RG-LRU gates
+    r = jax.nn.sigmoid(_block_diag(params["gate_a_w"], params["gate_a_b"], xr, nb))
+    i = jax.nn.sigmoid(_block_diag(params["gate_x_w"], params["gate_x_b"], xr, nb))
+    # log a_t = -c * r_t * softplus(Λ);  a = sigmoid(Λ)^(c r_t)
+    log_a = -m.c * r * jax.nn.softplus(params["lam"].astype(F32))
+    a = jnp.exp(log_a)                                 # [B,S,dr] f32
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))           # √(1-a²)
+    gated = beta * (i * xr.astype(F32))
+
+    if cache is None and s > 1:
+        # associative scan over the diagonal recurrence
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, b1 * a2 + b2
+
+        acc_a, h_all = jax.lax.associative_scan(combine, (a, gated), axis=1)
+        h_final = h_all[:, -1]
+    else:
+        h0 = cache[1] if cache is not None else jnp.zeros((b, dr), F32)
+        h_all = a * h0[:, None] + gated                # s == 1
+        h_final = h_all[:, -1]
+
+    y = h_all.astype(x.dtype) * gate.astype(x.dtype)
+    out = y @ params["wo"]
+    new_cache = (new_conv, h_final) if (cache is not None or want_cache) else None
+    return out, new_cache

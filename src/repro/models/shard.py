@@ -1,0 +1,99 @@
+"""Logical-axis sharding: models annotate with *logical* axes; the launcher
+binds them to physical mesh axes. With no rules bound (unit tests, single
+device) every annotation is a no-op."""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def rules() -> Dict[str, Axis]:
+    return getattr(_state, "rules", {})
+
+
+def mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(m: Optional[Mesh], rule_map: Dict[str, Axis]):
+    old_r, old_m = rules(), mesh()
+    _state.rules, _state.mesh = dict(rule_map), m
+    try:
+        if m is not None:
+            with m:
+                yield
+        else:
+            yield
+    finally:
+        _state.rules, _state.mesh = old_r, old_m
+
+
+def axis_size(logical: str) -> int:
+    """Product of mesh-axis sizes bound to a logical axis (1 if unbound)."""
+    m, r = mesh(), rules()
+    if m is None or logical not in r:
+        return 1
+    sizes = dict(zip(m.axis_names, m.devices.shape))
+    phys = r[logical]
+    axes = phys if isinstance(phys, tuple) else (phys,)
+    n = 1
+    for a in axes:
+        n *= sizes.get(a, 1)
+    return n
+
+
+def translate(spec: Sequence[Axis]) -> PartitionSpec:
+    """Map logical axis names to physical mesh axes via the bound rules."""
+    r = rules()
+    out = []
+    for ax in spec:
+        if ax is None:
+            out.append(None)
+        elif isinstance(ax, tuple):
+            resolved = []
+            for a in ax:
+                phys = r.get(a, None)
+                if phys is None:
+                    continue
+                resolved.extend(phys if isinstance(phys, tuple) else (phys,))
+            out.append(tuple(resolved) if resolved else None)
+        else:
+            out.append(r.get(ax, None))
+    return PartitionSpec(*out)
+
+
+def translate_pspec(spec: PartitionSpec) -> PartitionSpec:
+    return translate(tuple(spec))
+
+
+def constraint(x, *spec: Axis):
+    """with_sharding_constraint on logical axes; no-op without a mesh.
+    Axes that don't divide the dim are dropped (e.g. 8 KV heads on a 16-way
+    tensor axis) — avoids XLA 'involuntary full rematerialization' copies."""
+    m = mesh()
+    if m is None or not rules():
+        return x
+    phys = translate(spec)
+    sizes = dict(zip(m.axis_names, m.devices.shape))
+    fixed = []
+    for dim, ax in zip(x.shape, tuple(phys) + (None,) * (x.ndim - len(tuple(phys)))):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        prod = 1
+        for a in axes:
+            prod *= sizes[a]
+        fixed.append(ax if dim % prod == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(m, PartitionSpec(*fixed))
+    )

@@ -1,0 +1,181 @@
+"""Mamba-2 (SSD — state-space duality) mixer block.
+
+Chunked SSD algorithm (Dao & Gu 2024, "minimal" form), TPU-adapted:
+a sequential lax.scan over chunks carries the inter-chunk SSM state, so the
+intra-chunk quadratic (decay-masked) term is materialized for ONE chunk at a
+time — O(B·H·Q²) transient instead of O(B·H·S·Q) — and every contraction is
+an einsum the MXU can tile. Decode is the O(1) recurrent state update.
+
+Channel dims (d_inner, heads, state) are sharded over TENSOR; the scan carry
+(SSM state) is [B, H, P, N] with H sharded — no cross-device traffic inside
+the recurrence.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import shard
+from repro.models.layers import rmsnorm, rmsnorm_p
+from repro.models.module import FSDP, TENSOR, P
+
+F32 = jnp.float32
+
+
+def _dims(cfg: ModelConfig):
+    m: SSMConfig = cfg.ssm
+    d_in = m.expand * cfg.d_model
+    nheads = d_in // m.headdim
+    conv_ch = d_in + 2 * m.ngroups * m.d_state
+    return m, d_in, nheads, conv_ch
+
+
+def ssm_p(cfg: ModelConfig) -> dict:
+    m, d_in, nheads, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    proj_out = 2 * d_in + 2 * m.ngroups * m.d_state + nheads
+    return {
+        "in_proj": P((d, proj_out), (FSDP, TENSOR)),
+        "conv_w": P((m.d_conv, conv_ch), (None, TENSOR)),
+        "conv_b": P((conv_ch,), (TENSOR,), init="zeros"),
+        "A_log": P((nheads,), (TENSOR,), init="zeros", dtype=jnp.float32),
+        "D": P((nheads,), (TENSOR,), init="ones", dtype=jnp.float32),
+        "dt_bias": P((nheads,), (TENSOR,), init="zeros", dtype=jnp.float32),
+        "norm": rmsnorm_p(d_in),
+        "out_proj": P((d_in, d), (TENSOR, FSDP)),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    m, d_in, nheads, _ = _dims(cfg)
+    gn = m.ngroups * m.d_state
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : 2 * d_in + 2 * gn]
+    dt = zxbcdt[..., 2 * d_in + 2 * gn :]
+    return z, xbc, dt
+
+
+def _conv1d(w, b, x, state=None):
+    """Causal depthwise conv. x: [B,S,C]; w: [K,C]. With ``state`` [B,K-1,C]
+    (decode) returns (y, new_state) for S==1."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i : xp.shape[1] - (k - 1 - i)] * w[i] for i in range(k))
+    y = jax.nn.silu((y + b).astype(F32)).astype(x.dtype)
+    return y, xp[:, -(k - 1) :]
+
+
+def _segsum(a):
+    """a: [..., Q] -> L[..., i, j] = sum_{j<m<=i} a_m, -inf above diagonal."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    l = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(q)
+    return jnp.where(i[:, None] >= i[None, :], l, -jnp.inf)
+
+
+def ssd_scan(
+    x: jnp.ndarray,    # [B, S, H, P]
+    dt: jnp.ndarray,   # [B, S, H] (post-softplus)
+    a: jnp.ndarray,    # [H] (negative)
+    bmat: jnp.ndarray, # [B, S, G, N]
+    cmat: jnp.ndarray, # [B, S, G, N]
+    chunk: int,
+    init_state=None,   # [B, H, P, N]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD. Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    q = min(chunk, s)
+    pad = -s % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // q
+    rep = h // g
+
+    xc = x.reshape(b, nc, q, h, p).swapaxes(0, 1)          # [nc,B,Q,H,P]
+    dtc = dt.reshape(b, nc, q, h).swapaxes(0, 1)
+    bc = bmat.reshape(b, nc, q, g, n).swapaxes(0, 1)
+    cc = cmat.reshape(b, nc, q, g, n).swapaxes(0, 1)
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), F32)
+
+    def step(state, inp):
+        xq, dtq, bq, cq = inp                              # per-chunk
+        da = dtq.astype(F32) * a                           # [B,Q,H]
+        da_t = da.swapaxes(1, 2)                           # [B,H,Q]
+        acum = jnp.cumsum(da_t, axis=-1)                   # [B,H,Q]
+        bqh = jnp.repeat(bq, rep, axis=2).astype(F32)      # [B,Q,H,N]
+        cqh = jnp.repeat(cq, rep, axis=2).astype(F32)
+        xdt = xq.astype(F32) * dtq.astype(F32)[..., None]  # [B,Q,H,P]
+        # off-diagonal (state -> outputs): y_off = C · exp(acum) · state
+        y_off = jnp.einsum("bqhn,bhpn,bhq->bqhp", cqh, state, jnp.exp(acum))
+        # diagonal (intra-chunk): decay matrix per head
+        lmat = jnp.exp(_segsum(da_t))                      # [B,H,Q,Q]
+        scores = jnp.einsum("bqhn,bshn->bhqs", cqh, bqh) * lmat
+        y_diag = jnp.einsum("bhqs,bshp->bqhp", scores, xdt)
+        # state update: state' = state*exp(sum da) + sum_j exp(acum_last-acum_j) B_j x_j
+        decay = jnp.exp(acum[..., -1:] - acum)             # [B,H,Q]
+        new_state = state * jnp.exp(acum[..., -1])[..., None, None] + jnp.einsum(
+            "bqhn,bhq,bqhp->bhpn", bqh, decay, xdt
+        )
+        return new_state, (y_off + y_diag).astype(x.dtype)
+
+    state, yc = jax.lax.scan(step, init_state, (xc, dtc, bc, cc))
+    y = yc.swapaxes(0, 1).reshape(b, nc * q, h, p)[:, :s]
+    return y, state
+
+
+def ssm_forward(params, cfg: ModelConfig, x, cache=None, want_cache=False):
+    """x: [B,S,d]. cache (decode): (conv_state [B,K-1,C], ssm_state [B,H,P,N]).
+    ``want_cache`` (prefill) returns the cache built from a multi-token pass.
+    Returns (out, new_cache)."""
+    m, d_in, nheads, _ = _dims(cfg)
+    b, s, d = x.shape
+    zxbcdt = x @ params["in_proj"]
+    zxbcdt = shard.constraint(zxbcdt, "data_b", None, "tensor")
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    conv_state = cache[0] if cache is not None else None
+    xbc, new_conv = _conv1d(params["conv_w"], params["conv_b"], xbc, conv_state)
+    gn = m.ngroups * m.d_state
+    xin = xbc[..., :d_in].reshape(b, s, nheads, m.headdim)
+    bmat = xbc[..., d_in : d_in + gn].reshape(b, s, m.ngroups, m.d_state)
+    cmat = xbc[..., d_in + gn :].reshape(b, s, m.ngroups, m.d_state)
+    dt = jax.nn.softplus(dt.astype(F32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"].astype(F32))
+
+    if cache is None and s > 1:
+        y, state = ssd_scan(xin, dt, a, bmat, cmat, m.chunk)
+    else:
+        # O(1) recurrent step (decode): h' = h*exp(dt a) + dt B x
+        state0 = cache[1] if cache is not None else jnp.zeros(
+            (b, nheads, m.headdim, m.d_state), F32
+        )
+        rep = nheads // m.ngroups
+        bqh = jnp.repeat(bmat[:, 0], rep, axis=1).astype(F32)   # [B,H,N]
+        cqh = jnp.repeat(cmat[:, 0], rep, axis=1).astype(F32)
+        da = jnp.exp(dt[:, 0] * a)                               # [B,H]
+        xdt = (xin[:, 0].astype(F32) * dt[:, 0, :, None])        # [B,H,P]
+        state = state0 * da[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhpn", bqh, xdt
+        )
+        y = jnp.einsum("bhn,bhpn->bhp", cqh, state)[:, None]     # [B,1,H,P]
+        y = y.astype(x.dtype)
+
+    y = y + (params["D"][:, None] * xin.astype(F32)).astype(x.dtype)
+    y = y.reshape(b, s, d_in)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z.astype(F32)).astype(x.dtype),
+                cfg.norm_eps)
+    out = y @ params["out_proj"]
+    new_cache = (new_conv, state) if (cache is not None or want_cache) else None
+    return out, new_cache

@@ -1,0 +1,14 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    AdamWState,
+    global_norm,
+    init,
+    schedule,
+    update,
+)
+from repro.optim.compression import (  # noqa: F401
+    EFState,
+    compressed_psum,
+    ef_compress,
+    ef_init,
+)

@@ -1,0 +1,253 @@
+"""Roofline: three terms from the compiled dry-run artifact (DESIGN.md §g).
+
+  compute   = HLO_FLOPs_per_device / peak_FLOPs          (197 TF/s bf16, v5e)
+  memory    = HLO_bytes_per_device / HBM_bw              (819 GB/s)
+  collective= per-device collective bytes / link_bw      (~50 GB/s/link ICI)
+
+cost_analysis() reports the per-device SPMD program (verified empirically),
+so FLOPs/bytes are used as-is. collective bytes are parsed from the compiled
+HLO text: for each all-gather/all-reduce/reduce-scatter/all-to-all/
+collective-permute op we take the op's *full* (group-wide) payload and
+convert to per-device ring-transfer bytes:
+
+  all-gather:      out_bytes × (g-1)/g        (receives everyone else's shard)
+  reduce-scatter:  in_bytes  × (g-1)/g        (sends everyone else's shard)
+  all-reduce:      2 × bytes × (g-1)/g        (ring RS + AG)
+  all-to-all:      bytes × (g-1)/g
+  collective-permute: bytes                   (point-to-point)
+
+MODEL_FLOPS is the analytic useful-work floor (6·N_active·D for training,
+2·N_active·D for inference, + exact causal/window attention terms); the
+ratio MODEL_FLOPS / HLO_FLOPs exposes remat/padding/moe-capacity waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12        # bf16 per chip, TPU v5e
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9\[\],{}:\s]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d_ in dims.split(","):
+            if d_:
+                n *= int(d_)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo: str) -> Dict[str, Dict[str, float]]:
+    """Per collective kind: total payload bytes, per-device transfer bytes."""
+    out: Dict[str, Dict[str, float]] = {}
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:          # async pair: count only the -start
+            continue
+        kind = m.group(2)
+        result_bytes = _shape_bytes(m.group(1))
+        if result_bytes == 0:         # fall back: largest shape on line
+            result_bytes = _shape_bytes(line)
+        g = _group_size(line)
+        frac = (g - 1) / g if g > 1 else 0.0
+        if kind == "all-gather":
+            xfer = result_bytes * frac
+        elif kind == "reduce-scatter":
+            xfer = result_bytes * g * frac            # result is the shard
+        elif kind == "all-reduce":
+            xfer = 2 * result_bytes * frac
+        elif kind == "all-to-all":
+            xfer = result_bytes * frac
+        else:                                         # collective-permute
+            xfer = result_bytes
+        rec = out.setdefault(kind, {"count": 0, "payload_bytes": 0.0,
+                                    "transfer_bytes": 0.0})
+        rec["count"] += 1
+        rec["payload_bytes"] += result_bytes
+        rec["transfer_bytes"] += xfer
+    return out
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS
+# ---------------------------------------------------------------------------
+
+def _matmul_params_per_token(cfg: ModelConfig) -> Tuple[float, float]:
+    """(active, total) matmul params touched per token (excl. norms/lookup)."""
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    h, hkv = cfg.num_heads, cfg.num_kv_heads
+    active = total = 0.0
+    for kind in cfg.block_kinds():
+        if kind in ("attn", "moe", "local"):
+            if cfg.mla:
+                m = cfg.mla
+                qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+                a = (d * m.q_lora_rank + m.q_lora_rank * h * qk
+                     + d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                     + m.kv_lora_rank * h * (m.qk_nope_head_dim + m.v_head_dim)
+                     + h * m.v_head_dim * d)
+            else:
+                a = d * (h + 2 * hkv) * dh + h * dh * d
+            active += a
+            total += a
+            if kind == "moe":
+                mo = cfg.moe
+                e_p = 3 * d * mo.d_ff_expert          # swiglu: wi(2f)+wo(f)
+                shared = mo.num_shared * 3 * d * (mo.d_ff_shared or mo.d_ff_expert)
+                active += d * mo.num_experts + mo.top_k * e_p + shared
+                total += d * mo.num_experts + mo.num_experts * e_p + shared
+            else:
+                f_mult = 3 if cfg.mlp_style in ("swiglu", "geglu") else 2
+                active += f_mult * d * cfg.d_ff
+                total += f_mult * d * cfg.d_ff
+        elif kind == "rec":
+            r = cfg.rglru
+            dr = r.width or d
+            nb = cfg.num_heads
+            a = 2 * d * dr + 2 * dr * (dr // nb) + dr * d
+            f_mult = 3 if cfg.mlp_style in ("swiglu", "geglu") else 2
+            a += f_mult * d * cfg.d_ff
+            active += a; total += a
+        elif kind == "ssm":
+            s = cfg.ssm
+            d_in = s.expand * d
+            nh = d_in // s.headdim
+            a = d * (2 * d_in + 2 * s.ngroups * s.d_state + nh) + d_in * d
+            active += a; total += a
+    head = d * cfg.vocab_size
+    active += head; total += head
+    if cfg.mtp:
+        # one extra block + projection (head shared) per token
+        active += 2 * d * d
+        total += 2 * d * d
+    return active, total
+
+
+def _attention_context_flops(cfg: ModelConfig, s: int, decode_pos: Optional[int]) -> float:
+    """Per-example fwd FLOPs of the S×ctx attention matmuls (QK^T + PV)."""
+    dh = cfg.resolved_head_dim
+    h = cfg.num_heads
+    fl = 0.0
+    for kind in cfg.block_kinds():
+        if kind in ("attn", "moe"):
+            if cfg.mla:
+                m = cfg.mla
+                dims = (m.qk_nope_head_dim + m.qk_rope_head_dim) + m.v_head_dim
+            else:
+                dims = 2 * dh
+            if decode_pos is not None:
+                fl += 2 * h * dims * decode_pos
+            elif cfg.causal:
+                fl += 2 * h * dims * s * (s + 1) / 2
+            else:
+                fl += 2 * h * dims * s * s
+        elif kind == "local":
+            w = cfg.window or s
+            if decode_pos is not None:
+                fl += 2 * h * 2 * dh * min(w, decode_pos)
+            else:
+                avg = min(w, s)  # upper bound of windowed context
+                fl += 2 * h * 2 * dh * s * avg
+        elif kind == "ssm":
+            ss = cfg.ssm
+            d_in = ss.expand * cfg.d_model
+            nh = d_in // ss.headdim
+            if decode_pos is not None:
+                fl += 2 * nh * ss.headdim * ss.d_state * 2
+            else:
+                q = ss.chunk
+                # intra-chunk scores + state in/out per token
+                fl += 2 * nh * (q * ss.headdim + q * ss.d_state
+                                + 2 * ss.headdim * ss.d_state) * s
+        elif kind == "rec":
+            pass  # recurrence flops are elementwise (not matmul roofline)
+    return fl
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Analytic useful FLOPs per step for the cell (global, all devices)."""
+    b, s = shape.global_batch, shape.seq_len
+    active, _ = _matmul_params_per_token(cfg)
+    if shape.kind == "train":
+        tok = b * s
+        return 6.0 * active * tok + 3.0 * b * _attention_context_flops(cfg, s, None)
+    if shape.kind == "prefill":
+        tok = b * s
+        return 2.0 * active * tok + b * _attention_context_flops(cfg, s, None)
+    # decode: one token against a cache of length s
+    return 2.0 * active * b + b * _attention_context_flops(cfg, s, s)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_transfer_per_dev: float
+    chips: int
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float
+
+    def row(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+
+def roofline(
+    cost: Dict[str, float],
+    collectives: Dict[str, Dict[str, float]],
+    chips: int,
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+) -> Roofline:
+    fl = float(cost.get("flops", 0.0))
+    by = float(cost.get("bytes accessed", 0.0))
+    co = sum(k_["transfer_bytes"] for k_ in collectives.values())
+    t_c, t_m, t_x = fl / PEAK_FLOPS, by / HBM_BW, co / LINK_BW
+    bn = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    mf = model_flops(cfg, shape)
+    return Roofline(
+        flops_per_dev=fl, bytes_per_dev=by, coll_transfer_per_dev=co,
+        chips=chips, t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=bn, model_flops=mf,
+        useful_ratio=(mf / (fl * chips)) if fl else 0.0,
+    )

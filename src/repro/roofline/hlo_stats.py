@@ -1,0 +1,390 @@
+"""HLO-text statistics with control-flow awareness.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE — under
+scan-over-layers that understates FLOPs/bytes by ~num_layers. This parser
+builds a per-computation symbol table (scheduled HLO does not inline operand
+shapes), multiplies while bodies by their trip counts (from
+``backend_config={"known_trip_count":{"n":...}}``), and accumulates:
+
+  * dot FLOPs: 2 · |result| · contraction (lhs shape via symbol table),
+  * an HBM-traffic estimate: per top-level op, operand + result bytes
+    (post-fusion HLO ≈ one HBM round-trip per materialized buffer),
+  * collective transfer bytes per kind (ring model; see analysis.py).
+
+Structural estimator: feeds the roofline terms, where model-level consistency
+matters more than byte-exactness.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*([a-z0-9\-]+)\(")
+_PARAM_RE = re.compile(r"([\w.\-]+)\s*:\s*([a-z0-9]+\[[0-9,]*\])")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r"known_trip_count[\"':{\s]+n[\"':\s]+(\d+)")
+_COND_CONST_RE = re.compile(r"s(?:32|64)\[\]\s+constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_DOT_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# ops that move no HBM data (or whose motion is an aliasing artifact)
+_NO_BYTES = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "while", "conditional", "after-all", "partition-id", "replica-id",
+             "iota"}
+
+
+def _prod(xs) -> int:
+    n = 1
+    for x in xs:
+        n *= x
+    return n
+
+
+def _shape_list(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype in _DTYPE_BYTES:
+            out.append((dtype, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of_shapes(shapes) -> int:
+    return sum(_prod(d) * _DTYPE_BYTES[t] for t, d in shapes)
+
+
+class _Op:
+    __slots__ = ("name", "kind", "result_shapes", "line")
+
+    def __init__(self, name, kind, result_shapes, line):
+        self.name, self.kind = name, kind
+        self.result_shapes = result_shapes
+        self.line = line
+
+
+class HloStats:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, List[_Op]] = {}
+        self.symtab: Dict[str, Dict[str, List[Tuple[str, List[int]]]]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, Dict] = {}
+        self._fused_bodies: set = set()
+
+    # ------------------------------------------------------------- parsing
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            if not line.startswith(" "):
+                if line.startswith("}"):
+                    cur = None
+                    continue
+                m = _COMP_HDR_RE.match(line)
+                if m and "->" in line and line.endswith("{"):
+                    cur = m.group(2)
+                    self.comps[cur] = []
+                    self.symtab[cur] = {}
+                    if m.group(1):
+                        self.entry = cur
+                    # header params into the symbol table
+                    for pname, pshape in _PARAM_RE.findall(line):
+                        self.symtab[cur][pname] = _shape_list(pshape)
+                continue
+            if cur is None:
+                continue
+            md = _DEF_RE.match(line)
+            if not md:
+                continue
+            name, shape_txt, kind = md.group(1), md.group(2), md.group(3)
+            shapes = _shape_list(shape_txt)
+            self.symtab[cur][name] = shapes
+            self.comps[cur].append(_Op(name, kind, shapes, line))
+
+    # ------------------------------------------------------------- helpers
+    def _operands(self, comp: str, op: _Op) -> List[List[Tuple[str, List[int]]]]:
+        # operand list = %refs inside the first (...) after the op kind
+        idx = op.line.find(op.kind + "(")
+        if idx < 0:
+            return []
+        depth, j = 0, idx + len(op.kind)
+        end = j
+        for j in range(idx + len(op.kind), len(op.line)):
+            ch = op.line[j]
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = j
+                    break
+        inner = op.line[idx + len(op.kind) + 1 : end]
+        tab = self.symtab.get(comp, {})
+        return [tab[r] for r in _OPERANDS_RE.findall(inner) if r in tab]
+
+    def _trip_count(self, line: str, cond: str) -> int:
+        m = _TRIP_RE.search(line)
+        if m:
+            return int(m.group(1))
+        consts = []
+        for op in self.comps.get(cond, []):
+            consts += [int(c) for c in _COND_CONST_RE.findall(op.line)]
+        return max(consts) if consts else 1
+
+    @staticmethod
+    def _group_size(line: str) -> int:
+        m = _GROUPS_RE.search(line)
+        if m:
+            return len(m.group(1).split(","))
+        m = _GROUPS_IOTA_RE.search(line)
+        if m:
+            return int(m.group(2))
+        return 2
+
+    def _coll_transfer(self, op: _Op) -> float:
+        rb = _bytes_of_shapes(op.result_shapes)
+        g = self._group_size(op.line)
+        frac = (g - 1) / g if g > 1 else 0.0
+        kind = op.kind.replace("-start", "")
+        if kind == "all-gather":
+            return rb * frac
+        if kind == "reduce-scatter":
+            return rb * g * frac
+        if kind == "all-reduce":
+            return 2 * rb * frac
+        if kind == "all-to-all":
+            return rb * frac
+        return rb  # collective-permute
+
+    _SLICING = ("dynamic-slice", "slice", "gather")
+
+    def _fusion_bytes(self, fused: str, call_op: _Op) -> float:
+        """HBM traffic of one fusion call: for each fused parameter, count the
+        *touched* bytes (slice result if the param is only sliced — the
+        scan-over-layers weight reads); for a DUS root count the update slice
+        (in-place carry write), else the result."""
+        ops = self.comps.get(fused, [])
+        if not ops:
+            return _bytes_of_shapes(call_op.result_shapes)
+        total = 0.0
+        # parameters: how is each first consumed? Consider ALL consumers and
+        # take the smallest touched footprint (a param consumed only via
+        # slices costs only the slices).
+        for p in ops:
+            if p.kind != "parameter":
+                continue
+            full = _bytes_of_shapes(p.result_shapes)
+            touched = None
+            sliced_total = 0.0
+            for q in ops:
+                if q.kind == "parameter" or f"%{p.name}" not in q.line:
+                    continue
+                if q.kind in self._SLICING:
+                    sliced_total += _bytes_of_shapes(q.result_shapes)
+                elif q.kind == "dynamic-update-slice" and re.search(
+                    r"dynamic-update-slice\(\s*%" + re.escape(p.name) + r"[,)]",
+                    q.line,
+                ):
+                    sliced_total += 0.0   # in-place carry: operand 0 aliased
+                else:
+                    touched = full        # consumed wholesale somewhere
+                    break
+            if touched is None:
+                touched = min(full, sliced_total) if sliced_total else full
+            total += touched
+        root = next((o for o in reversed(ops) if "ROOT" in o.line), ops[-1])
+        if root.kind == "dynamic-update-slice":
+            upd = self._operands(fused, root)
+            total += _bytes_of_shapes(upd[1] if len(upd) > 1 else root.result_shapes)
+        else:
+            total += _bytes_of_shapes(call_op.result_shapes)
+        return total
+
+    # ---------------------------------------------------------- evaluation
+    def eval_comp(self, name: str) -> Dict:
+        if name in self._memo:
+            return self._memo[name]
+        stats = {"flops": 0.0, "bytes": 0.0,
+                 "coll": {k: {"count": 0.0, "transfer_bytes": 0.0}
+                          for k in _COLLECTIVES}}
+        self._memo[name] = stats
+        for op in self.comps.get(name, []):
+            kind = op.kind
+            if kind == "while":
+                mw = _WHILE_RE.search(op.line)
+                if not mw:
+                    continue
+                trips = self._trip_count(op.line, mw.group(1))
+                sub = self.eval_comp(mw.group(2))
+                stats["flops"] += trips * sub["flops"]
+                stats["bytes"] += trips * sub["bytes"]
+                for k in _COLLECTIVES:
+                    for f in ("count", "transfer_bytes"):
+                        stats["coll"][k][f] += trips * sub["coll"][k][f]
+                continue
+            base = kind.replace("-start", "")
+            if base in _COLLECTIVES and not kind.endswith("-done"):
+                stats["coll"][base]["count"] += 1
+                stats["coll"][base]["transfer_bytes"] += self._coll_transfer(op)
+                stats["bytes"] += _bytes_of_shapes(op.result_shapes)
+                continue
+            if kind == "fusion" or kind == "call":
+                mc = _CALLS_RE.search(op.line)
+                if mc:
+                    sub = self.eval_comp(mc.group(1))
+                    stats["flops"] += sub["flops"]
+                    for k in _COLLECTIVES:
+                        for f in ("count", "transfer_bytes"):
+                            stats["coll"][k][f] += sub["coll"][k][f]
+                    stats["bytes"] += self._fusion_bytes(mc.group(1), op)
+                else:
+                    stats["bytes"] += _bytes_of_shapes(op.result_shapes)
+                continue
+            if kind == "dot":
+                operands = self._operands(name, op)
+                flops = 0.0
+                if operands:
+                    lhs = operands[0][0][1] if operands[0] else []
+                    mcd = _DOT_LHS_CONTRACT_RE.search(op.line)
+                    contract = 1
+                    if mcd and mcd.group(1):
+                        for ax in mcd.group(1).split(","):
+                            if ax and int(ax) < len(lhs):
+                                contract *= lhs[int(ax)]
+                    flops = 2.0 * _prod(op.result_shapes[0][1]) * contract
+                stats["flops"] += flops
+                stats["bytes"] += _bytes_of_shapes(op.result_shapes)
+                stats["bytes"] += sum(
+                    _bytes_of_shapes(o) for o in self._operands(name, op))
+                continue
+            if kind in _NO_BYTES or kind.endswith("-done"):
+                continue
+            # slicing ops touch only the slice, not the full operand
+            if kind in ("dynamic-slice", "slice", "gather"):
+                stats["bytes"] += 2 * _bytes_of_shapes(op.result_shapes)
+                continue
+            if kind == "dynamic-update-slice":
+                ops_ = self._operands(name, op)
+                upd = ops_[1] if len(ops_) > 1 else op.result_shapes
+                stats["bytes"] += 2 * _bytes_of_shapes(upd)
+                continue
+            if kind == "scatter":
+                ops_ = self._operands(name, op)
+                upd = ops_[2] if len(ops_) > 2 else op.result_shapes
+                idx = ops_[1] if len(ops_) > 1 else []
+                stats["bytes"] += 2 * _bytes_of_shapes(upd) + _bytes_of_shapes(idx)
+                continue
+            # generic op: result + operands traffic
+            stats["bytes"] += _bytes_of_shapes(op.result_shapes)
+            stats["bytes"] += sum(
+                _bytes_of_shapes(o) for o in self._operands(name, op))
+        return stats
+
+    # ------------------------------------------------------------ breakdown
+    def _comp_multipliers(self) -> Dict[str, float]:
+        """Effective execution count of every computation (while-trips
+        multiplied along call paths)."""
+        mult: Dict[str, float] = {self.entry: 1.0}
+        order = [self.entry]
+        i = 0
+        while i < len(order):
+            comp = order[i]
+            i += 1
+            m0 = mult[comp]
+            for op in self.comps.get(comp, []):
+                if op.kind == "while":
+                    mw = _WHILE_RE.search(op.line)
+                    if not mw:
+                        continue
+                    trips = self._trip_count(op.line, mw.group(1))
+                    for callee in (mw.group(2), mw.group(1)):
+                        mult[callee] = mult.get(callee, 0.0) + m0 * trips
+                        order.append(callee)
+                elif op.kind in ("fusion", "call"):
+                    mc = _CALLS_RE.search(op.line)
+                    if mc:
+                        mult[mc.group(1)] = mult.get(mc.group(1), 0.0) + m0
+                        order.append(mc.group(1))
+                        self._fused_bodies.add(mc.group(1))
+        return mult
+
+    def breakdown(self, top: int = 25) -> List[Dict]:
+        """Top byte/flop contributors: (computation, op-kind) with effective
+        multipliers. The §Perf hypothesis generator."""
+        mult = self._comp_multipliers()
+        agg: Dict[Tuple[str, str], Dict[str, float]] = {}
+        for comp, m in mult.items():
+            fused_body = comp in self._fused_bodies
+            for op in self.comps.get(comp, []):
+                kind = op.kind
+                if kind in _NO_BYTES or kind in ("while",) or kind.endswith("-done"):
+                    continue
+                if fused_body and kind != "dot":
+                    continue   # bytes already charged at the fusion call site
+                if kind in ("fusion", "call"):
+                    mc = _CALLS_RE.search(op.line)
+                    b = self._fusion_bytes(mc.group(1), op) if mc else 0.0
+                    fl = 0.0
+                elif kind == "dot":
+                    ops_ = self._operands(comp, op)
+                    b = _bytes_of_shapes(op.result_shapes) + sum(
+                        _bytes_of_shapes(o) for o in ops_)
+                    lhs = ops_[0][0][1] if ops_ and ops_[0] else []
+                    mcd = _DOT_LHS_CONTRACT_RE.search(op.line)
+                    contract = 1
+                    if mcd and mcd.group(1):
+                        for ax in mcd.group(1).split(","):
+                            if ax and int(ax) < len(lhs):
+                                contract *= lhs[int(ax)]
+                    fl = 2.0 * _prod(op.result_shapes[0][1]) * contract
+                elif kind in ("dynamic-slice", "slice", "gather"):
+                    b, fl = 2 * _bytes_of_shapes(op.result_shapes), 0.0
+                elif kind == "dynamic-update-slice":
+                    ops_ = self._operands(comp, op)
+                    upd = ops_[1] if len(ops_) > 1 else op.result_shapes
+                    b, fl = 2 * _bytes_of_shapes(upd), 0.0
+                else:
+                    b = _bytes_of_shapes(op.result_shapes) + sum(
+                        _bytes_of_shapes(o) for o in self._operands(comp, op))
+                    fl = 0.0
+                key = (comp, kind)
+                rec = agg.setdefault(key, {"bytes": 0.0, "flops": 0.0, "count": 0.0})
+                rec["bytes"] += b * m
+                rec["flops"] += fl * m
+                rec["count"] += m
+        rows = [
+            {"comp": c, "kind": k, **v}
+            for (c, k), v in agg.items()
+        ]
+        rows.sort(key=lambda r: -r["bytes"])
+        return rows[:top]
+
+    def totals(self) -> Dict:
+        assert self.entry, "no ENTRY computation found"
+        t = self.eval_comp(self.entry)
+        coll_total = sum(v["transfer_bytes"] for v in t["coll"].values())
+        return {
+            "flops": t["flops"],
+            "bytes": t["bytes"],
+            "collectives": {k: v for k, v in t["coll"].items() if v["count"]},
+            "collective_transfer_bytes": coll_total,
+        }
+
+
+def hlo_stats(hlo_text: str) -> Dict:
+    return HloStats(hlo_text).totals()

@@ -1,0 +1,132 @@
+"""Serving: continuous batching with hybrid k-priority admission.
+
+The paper's structure is the admission control plane: every front-end host is
+a *place* pushing requests into a HybridKQueue (priority = user-supplied,
+e.g. deadline or shortest-job-first); a request becomes globally visible
+after its front-end has admitted k requests (or on flush), and slot
+assembly pops the best visible requests — so a request is never overtaken by
+more than ρ = places·k later arrivals (tested), while front-ends stay
+uncoordinated between publishes. This is the paper's scalability/ordering
+trade applied to continuous batching.
+
+The engine itself is vLLM-style: a fixed decode batch of slots; prefill runs
+per-admission (batch 1) and its cache is spliced into the slot; decode steps
+the whole active batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.host_queue import HybridKQueue
+from repro.models import decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray           # prompt [S]
+    max_new: int
+    priority: float              # smaller = more urgent
+    out: List[int] = dataclasses.field(default_factory=list)
+    admitted_at: int = -1
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        slots: int = 8,
+        max_len: int = 512,
+        frontends: int = 4,
+        k: int = 4,
+    ):
+        self.cfg, self.params = cfg, params
+        self.slots, self.max_len = slots, max_len
+        self.queue = HybridKQueue(frontends, k)
+        self.frontends = frontends
+        self.caches = init_cache(cfg, slots, max_len)
+        self.cur_tok = np.zeros((slots,), np.int32)
+        self.pos = np.zeros((slots,), np.int32)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.clock = 0
+        self.admission_log: List[int] = []
+
+        self._decode = jax.jit(
+            lambda p, c, t, q: decode_step(p, cfg, c, t, q)
+        )
+        self._prefill = jax.jit(
+            lambda p, t: prefill(p, cfg, {"tokens": t}, max_len)
+        )
+
+    # ------------------------------------------------------------ submission
+    def submit(self, req: Request, frontend: int):
+        self.queue.push(frontend, req.priority, req)
+
+    def flush_frontends(self):
+        for p in range(self.frontends):
+            self.queue.flush(p)
+
+    # ----------------------------------------------------------------- admit
+    def _splice_cache(self, slot: int, new_cache):
+        def splice(full, one):
+            return full.at[:, slot].set(one[:, 0].astype(full.dtype))
+        self.caches = jax.tree.map(splice, self.caches, new_cache)
+
+    def _admit(self):
+        for slot in range(self.slots):
+            if self.active[slot] is not None:
+                continue
+            got = self.queue.pop(slot % self.frontends)
+            if got is None:
+                return
+            _, req = got
+            req.admitted_at = self.clock
+            self.admission_log.append(req.rid)
+            prompt = jnp.asarray(req.tokens[None, :], jnp.int32)
+            logits, cache = self._prefill(self.params, prompt)
+            self._splice_cache(slot, cache)
+            self.cur_tok[slot] = int(jnp.argmax(logits[0]))
+            self.pos[slot] = len(req.tokens)
+            req.out.append(int(self.cur_tok[slot]))
+            self.active[slot] = req
+
+    # ------------------------------------------------------------------ step
+    def step(self) -> List[Request]:
+        """Admit + one decode step for all active slots; returns finished."""
+        self.clock += 1
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return []
+        logits, self.caches = self._decode(
+            self.params, self.caches,
+            jnp.asarray(self.cur_tok), jnp.asarray(self.pos),
+        )
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        done: List[Request] = []
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.pos[slot] += 1
+            self.cur_tok[slot] = nxt[slot]
+            req.out.append(int(nxt[slot]))
+            if len(req.out) >= req.max_new or self.pos[slot] >= self.max_len - 1:
+                done.append(req)
+                self.active[slot] = None
+        return done
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        finished: List[Request] = []
+        for _ in range(max_steps):
+            finished.extend(self.step())
+            if (not any(self.active)) and len(self.queue) == 0:
+                break
+        return finished

@@ -1,0 +1,16 @@
+"""shard_map hybrid k-priority engine: exactly-once across 8 devices
+(subprocess: device count locks at jax init)."""
+import os
+import subprocess
+import sys
+
+
+def test_distributed_selftest():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.core.distributed", "--selftest"],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert "DISTRIBUTED_OK" in out.stdout, (out.stdout[-500:], out.stderr[-2000:])

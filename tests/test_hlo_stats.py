@@ -1,0 +1,82 @@
+"""HLO statistics parser: exact FLOPs on a known program, while-trip
+multiplication, collective accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.hlo_stats import HloStats, hlo_stats
+
+
+def test_scan_matmul_flops_exact():
+    """scan of L matmuls: flops must be L * 2*m*n*k (cost_analysis gets this
+    wrong by counting the body once)."""
+    L, m, k, n = 7, 32, 64, 48
+
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((L, k, k), jnp.float32),
+    ).compile()
+    s = hlo_stats(c.as_text())
+    assert s["flops"] == L * 2 * m * k * k, s["flops"]
+    xla = c.cost_analysis()["flops"]
+    assert xla < s["flops"]  # documents the cost_analysis undercount
+
+
+def test_single_matmul_flops():
+    c = jax.jit(lambda a, b: a @ b).lower(
+        jax.ShapeDtypeStruct((128, 256), jnp.bfloat16),
+        jax.ShapeDtypeStruct((256, 64), jnp.bfloat16),
+    ).compile()
+    s = hlo_stats(c.as_text())
+    assert s["flops"] == 2 * 128 * 256 * 64
+
+
+def test_no_collectives_single_device():
+    c = jax.jit(lambda a: jnp.sum(a * 2)).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+    s = hlo_stats(c.as_text())
+    assert s["collective_transfer_bytes"] == 0
+
+
+def test_bytes_reasonable_for_elementwise():
+    """y = x*2 + 1 on 1 MiB: traffic should be ~2 MiB (one read, one write),
+    not orders of magnitude more."""
+    n = 256 * 1024  # f32 -> 1 MiB
+    c = jax.jit(lambda x: x * 2 + 1).lower(
+        jax.ShapeDtypeStruct((n,), jnp.float32)).compile()
+    s = hlo_stats(c.as_text())
+    assert 1.5e6 < s["bytes"] < 8e6, s["bytes"]
+
+
+def test_parser_handles_tuples_with_index_comments():
+    txt = """HloModule m, entry_computation_layout={()->f32[]}
+
+%body (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %p = (s32[], /*index=1*/f32[4,4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[4,4]{1,0} get-tuple-element(%p), index=1
+  %d = f32[4,4]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[4,4]) tuple(%i, %d)
+}
+
+%cond (p: (s32[], f32[4,4])) -> pred[] {
+  %p = (s32[], /*index=1*/f32[4,4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main () -> f32[] {
+  %init = (s32[], f32[4,4]) tuple()
+  %w = (s32[], /*index=1*/f32[4,4]) while(%init), condition=%cond, body=%body
+  ROOT %r = f32[] constant(0)
+}
+"""
+    s = hlo_stats(txt)
+    assert s["flops"] == 5 * 2 * 4 * 4 * 4, s["flops"]

@@ -1,0 +1,155 @@
+"""Property tests for the k-priority structures (paper §2.2, §4).
+
+Invariants (structural ρ-relaxation, §5.3):
+  * exactly-once: every pushed task is popped exactly once,
+  * bounded ignorance: per phase, #(active items better than the worst pop,
+    not popped) <= ρ  (ideal: 0, centralized: k, hybrid: P·k),
+  * progress: while tasks remain active, >= 1 task pops per phase.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kpriority as kp
+
+POLICIES = [
+    (kp.Policy.IDEAL, 4),
+    (kp.Policy.CENTRALIZED, 4),
+    (kp.Policy.HYBRID, 3),
+    (kp.Policy.WORK_STEALING, 4),
+]
+
+
+def run_schedule(policy, k, num_places, pushes, seed=0):
+    """pushes: list of phases, each a list of (slot, prio, creator)."""
+    m = 64
+    state = kp.init_pool(m, num_places)
+    key = jax.random.PRNGKey(seed)
+    popped: list = []
+    violations = []
+    phase = 0
+    max_phases = len(pushes) + m + 8
+    while phase < max_phases:
+        batch = pushes[phase] if phase < len(pushes) else []
+        if batch:
+            mask = np.zeros(m, bool)
+            prios = np.zeros(m, np.float32)
+            creators = np.zeros(m, np.int32)
+            for slot, prio, creator in batch:
+                mask[slot], prios[slot], creators[slot] = True, prio, creator
+            key, sub = jax.random.split(key)
+            state = kp.push(
+                state, jnp.asarray(mask), jnp.asarray(prios),
+                jnp.asarray(creators), k=k, policy=policy, key=sub,
+            )
+        key, sub = jax.random.split(key)
+        before = state
+        state, res = kp.phase_pop(
+            state, sub, num_places=num_places, k=k, policy=policy
+        )
+        ignored = int(kp.ignored_count(before, res))
+        rho = kp.rho_bound(policy, k, num_places)
+        if ignored > rho:
+            violations.append((phase, ignored, rho))
+        n_active_before = int(jnp.sum(before.active))
+        n_popped = int(jnp.sum(res.valid))
+        if n_active_before > 0:
+            assert n_popped >= 1, "progress violated"
+        for i in range(num_places):
+            if bool(res.valid[i]):
+                popped.append(int(res.slot[i]))
+        phase += 1
+        if phase >= len(pushes) and int(jnp.sum(state.active)) == 0:
+            break
+    return popped, violations, state
+
+
+@pytest.mark.parametrize("policy,k", POLICIES)
+def test_exactly_once_and_rho(policy, k):
+    num_places = 4
+    rng = np.random.default_rng(0)
+    pushes = []
+    live = set()
+    for _ in range(6):
+        batch = []
+        for _ in range(rng.integers(1, 8)):
+            slot = int(rng.integers(0, 64))
+            if slot in live:
+                continue
+            live.add(slot)
+            batch.append((slot, float(rng.random()), int(rng.integers(0, 4))))
+        pushes.append(batch)
+    popped, violations, state = run_schedule(policy, k, num_places, pushes)
+    assert len(popped) == len(set(popped)), "task popped twice"
+    assert set(popped) == live, "task lost"
+    assert int(jnp.sum(state.active)) == 0
+    assert not violations, f"rho violations: {violations}"
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    k=st.integers(1, 8),
+    policy_i=st.integers(0, 2),
+)
+def test_rho_bound_hypothesis(seed, k, policy_i):
+    policy = [kp.Policy.IDEAL, kp.Policy.CENTRALIZED, kp.Policy.HYBRID][policy_i]
+    rng = np.random.default_rng(seed)
+    pushes = []
+    live = set()
+    for _ in range(4):
+        batch = []
+        for _ in range(rng.integers(1, 10)):
+            slot = int(rng.integers(0, 64))
+            if slot in live:
+                continue
+            live.add(slot)
+            batch.append((slot, float(rng.random()), int(rng.integers(0, 3))))
+        pushes.append(batch)
+    popped, violations, _ = run_schedule(policy, k, 3, pushes, seed)
+    assert not violations
+    assert set(popped) == live
+
+
+def test_ideal_pops_in_priority_order():
+    """With one place and no concurrent pushes, IDEAL == a priority queue."""
+    m = 16
+    state = kp.init_pool(m, 1)
+    prios = np.arange(m)[::-1].astype(np.float32)
+    state = kp.push(
+        state, jnp.ones(m, bool), jnp.asarray(prios),
+        jnp.zeros(m, jnp.int32), k=1, policy=kp.Policy.IDEAL,
+    )
+    key = jax.random.PRNGKey(0)
+    seen = []
+    for _ in range(m):
+        key, sub = jax.random.split(key)
+        state, res = kp.phase_pop(state, sub, num_places=1, k=1,
+                                  policy=kp.Policy.IDEAL)
+        seen.append(float(res.prio[0]))
+    assert seen == sorted(seen)
+
+
+def test_work_stealing_spreads_tasks():
+    """steal-half: tasks initially on one place end up executed by many."""
+    m, p = 32, 4
+    state = kp.init_pool(m, p)
+    state = kp.push(
+        state, jnp.ones(m, bool),
+        jnp.asarray(np.random.default_rng(0).random(m), jnp.float32),
+        jnp.zeros(m, jnp.int32), k=1, policy=kp.Policy.WORK_STEALING,
+    )
+    key = jax.random.PRNGKey(1)
+    pop_places = set()
+    for _ in range(m):
+        key, sub = jax.random.split(key)
+        state, res = kp.phase_pop(state, sub, num_places=p, k=1,
+                                  policy=kp.Policy.WORK_STEALING)
+        for i in range(p):
+            if bool(res.valid[i]):
+                pop_places.add(i)
+        if int(jnp.sum(state.active)) == 0:
+            break
+    assert len(pop_places) >= 2, "no stealing happened"

@@ -1,0 +1,103 @@
+"""Serving: host-side hybrid k-priority queue properties + engine e2e +
+ρ-bounded admission inversions."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.host_queue import HybridKQueue
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    places=st.integers(1, 6),
+    k=st.integers(1, 8),
+    n=st.integers(1, 60),
+)
+def test_host_queue_exactly_once(seed, places, k, n):
+    rng = np.random.default_rng(seed)
+    q = HybridKQueue(places, k, seed)
+    for i in range(n):
+        q.push(int(rng.integers(places)), float(rng.random()), i)
+    for p in range(places):
+        q.flush(p)
+    got = []
+    p = 0
+    while True:
+        r = q.pop(p % places)
+        p += 1
+        if r is None and len(q) == 0:
+            break
+        if r is not None:
+            got.append(r[1])
+    assert sorted(got) == list(range(n))
+
+
+def test_host_queue_rho_bound():
+    """A popped item is worse than at most rho = places*k live better items
+    (the k newest per place may be invisible)."""
+    places, k = 4, 3
+    q = HybridKQueue(places, k, 0)
+    rng = np.random.default_rng(1)
+    live = {}
+    worst_inversion = 0
+    for step in range(400):
+        if rng.random() < 0.6 or not live:
+            uid = step
+            prio = float(rng.random())
+            q.push(int(rng.integers(places)), prio, uid)
+            live[uid] = prio
+        else:
+            r = q.pop(int(rng.integers(places)))
+            if r is None:
+                continue
+            prio, uid = r[0], r[1]
+            better = sum(1 for v in live.values() if v < prio) - 1
+            worst_inversion = max(worst_inversion, better)
+            del live[uid]
+    assert worst_inversion <= places * k, worst_inversion
+
+
+def test_engine_end_to_end():
+    from repro.configs import get_reduced
+    from repro.models import materialize, model_p
+    from repro.serve.engine import Request, ServeEngine
+    cfg = get_reduced("qwen3_1_7b")
+    params = materialize(jax.random.PRNGKey(0), model_p(cfg))
+    eng = ServeEngine(cfg, params, slots=3, max_len=48, frontends=2, k=2)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(7):
+        r = Request(rid=i, tokens=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                    max_new=5, priority=float(i % 3))
+        reqs.append(r)
+        eng.submit(r, frontend=i % 2)
+    eng.flush_frontends()
+    done = eng.run()
+    assert len(done) == 7
+    assert all(len(r.out) == 5 for r in done)
+
+
+def test_engine_priority_respected():
+    """With all requests queued up-front, admission order must follow
+    priority up to the rho bound."""
+    from repro.configs import get_reduced
+    from repro.models import materialize, model_p
+    from repro.serve.engine import Request, ServeEngine
+    cfg = get_reduced("qwen3_1_7b")
+    params = materialize(jax.random.PRNGKey(0), model_p(cfg))
+    eng = ServeEngine(cfg, params, slots=2, max_len=32, frontends=2, k=2)
+    rng = np.random.default_rng(0)
+    prios = list(range(10))
+    rng.shuffle(prios)
+    for i, pr in enumerate(prios):
+        eng.submit(Request(rid=pr, tokens=rng.integers(0, cfg.vocab_size, 4).astype(np.int32),
+                           max_new=3, priority=float(pr)), frontend=i % 2)
+    eng.flush_frontends()
+    eng.run()
+    # each admitted request may be overtaken by at most rho = frontends*k
+    order = eng.admission_log
+    for i, rid in enumerate(order):
+        overtaken_by_worse = sum(1 for r2 in order[:i] if r2 > rid)
+        assert overtaken_by_worse <= 2 * 2, (rid, order)

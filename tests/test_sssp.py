@@ -1,0 +1,63 @@
+"""SSSP correctness + paper-qualitative behaviour (§5.5)."""
+import numpy as np
+import pytest
+
+from repro.core import Policy, run_sssp, simulate
+from repro.core.sssp import dijkstra_ref, make_er_graph
+
+
+@pytest.fixture(scope="module")
+def graph():
+    w = make_er_graph(1, 200, 0.15)
+    return w, dijkstra_ref(w)
+
+
+@pytest.mark.parametrize(
+    "policy,k",
+    [(Policy.IDEAL, 1), (Policy.CENTRALIZED, 8), (Policy.CENTRALIZED, 64),
+     (Policy.HYBRID, 4), (Policy.HYBRID, 32), (Policy.WORK_STEALING, 1)],
+)
+def test_sssp_correct_all_policies(graph, policy, k):
+    w, final = graph
+    r = run_sssp(w, num_places=8, k=k, policy=policy, final=final, seed=3)
+    assert r.correct, "distances differ from Dijkstra"
+    assert r.max_ignored <= {
+        Policy.IDEAL: 0, Policy.CENTRALIZED: k, Policy.HYBRID: 8 * k,
+    }.get(policy, 1 << 30)
+
+
+def test_kpriority_beats_work_stealing(graph):
+    """Fig. 4: work-stealing does substantially more useless work."""
+    w, final = graph
+    ws = run_sssp(w, num_places=8, k=1, policy=Policy.WORK_STEALING,
+                  final=final)
+    hy = run_sssp(w, num_places=8, k=8, policy=Policy.HYBRID, final=final)
+    ce = run_sssp(w, num_places=8, k=8, policy=Policy.CENTRALIZED,
+                  final=final)
+    assert ws.useless > 2 * max(hy.useless, 1)
+    assert ws.useless > 2 * max(ce.useless, 1)
+
+
+def test_simulator_matches_dijkstra():
+    w = make_er_graph(5, 150, 0.2)
+    final = dijkstra_ref(w)
+    for rho in (0, 16, 64):
+        r = simulate(w, num_places=8, rho=rho, final=final)
+        assert r.correct
+        # ideal (rho=0) relaxes every reachable node at least once
+        assert r.total_relaxed >= int(np.isfinite(final).sum()) - 1
+
+
+def test_simulator_rho_increases_work():
+    w = make_er_graph(7, 200, 0.2)
+    final = dijkstra_ref(w)
+    r0 = simulate(w, num_places=8, rho=0, final=final, seed=1)
+    r_big = simulate(w, num_places=8, rho=128, final=final, seed=1)
+    assert r_big.total_relaxed >= r0.total_relaxed
+
+
+def test_disconnected_graph_terminates():
+    w = make_er_graph(11, 60, 0.02)   # likely disconnected
+    final = dijkstra_ref(w)
+    r = run_sssp(w, num_places=4, k=4, policy=Policy.HYBRID, final=final)
+    assert r.correct
