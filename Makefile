@@ -1,0 +1,21 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test test-fast bench bench-full example
+
+# tier-1 verify (ROADMAP.md): full suite, stop at first failure
+test:
+	$(PY) -m pytest -x -q
+
+# fast loop: deselect the slow training/system tests (marker in pytest.ini)
+test-fast:
+	$(PY) -m pytest -x -q -m "not slow"
+
+bench:
+	$(PY) -m benchmarks.run
+
+bench-full:
+	$(PY) -m benchmarks.run --full
+
+example:
+	$(PY) examples/sssp_dijkstra.py

@@ -2,6 +2,11 @@
 
 Scaled defaults (n=2000, 5 graphs) keep CPU wall-time sane; pass --full for
 the paper's n=10000, P=80, p=0.5, 20 graphs. Output: CSV rows.
+
+The Fig. 4/5 scheduler sweeps run all G graphs of a configuration through
+``run_sssp_batched`` — one jitted program per (P, k, policy) instead of one
+phase-loop per graph — so compilation is amortized across the sweep and the
+reported ``us_per_node`` is true per-graph throughput (DESIGN.md §4).
 """
 from __future__ import annotations
 
@@ -10,7 +15,7 @@ from typing import Dict, List
 
 import numpy as np
 
-from repro.core import Policy, run_sssp, simulate
+from repro.core import Policy, run_sssp, run_sssp_batched, simulate
 from repro.core.sssp import dijkstra_ref, make_er_graph
 from repro.core.theory import useless_work_bound_hstar
 
@@ -19,6 +24,12 @@ def _graphs(n, p, count, seed0=100):
     for i in range(count):
         w = make_er_graph(seed0 + i, n, p)
         yield w, dijkstra_ref(w)
+
+
+def _graph_stack(n, p, count, seed0=100):
+    """Stacked [G,n,n] weights + [G,n] oracle distances for batched runs."""
+    ws, finals = zip(*_graphs(n, p, count, seed0))
+    return np.stack(ws), np.stack(finals)
 
 
 def fig3_simulation(n=2000, p=0.5, places=80, graphs=2, rhos=(0, 128, 512)):
@@ -45,59 +56,116 @@ def fig3_simulation(n=2000, p=0.5, places=80, graphs=2, rhos=(0, 128, 512)):
     return rows
 
 
+def _batched_row(ws, finals, *, places, k, pol):
+    """One batched multi-graph run -> aggregate stats + per-graph throughput."""
+    graphs, n = ws.shape[0], ws.shape[1]
+    br = run_sssp_batched(
+        ws, num_places=places, k=k, policy=pol,
+        seeds=list(range(graphs)), finals=finals,
+    )
+    for r in br.runs:
+        assert r.correct
+    return {
+        "relaxed_mean": round(float(np.mean([r.total_relaxed
+                                             for r in br.runs])), 1),
+        "useless_mean": round(float(np.mean([r.useless for r in br.runs])), 1),
+        "graphs": graphs,
+        "joint_phases": br.joint_phases,
+        "wall_s_batch": round(br.wall_s, 3),
+        # per-graph throughput: the batch advances G graphs per dispatch
+        "us_per_call": round(br.wall_s * 1e6 / (graphs * n), 2),
+    }
+
+
 def fig4_scaling(n=2000, p=0.5, k=512, graphs=2,
                  place_counts=(1, 2, 5, 10, 20, 40, 80)):
-    """Fig. 4: total work (nodes relaxed) + wall time vs P, all structures."""
+    """Fig. 4: total work (nodes relaxed) + wall time vs P, all structures.
+    All G graphs of a configuration run in one batched program."""
+    ws, finals = _graph_stack(n, p, graphs)
     rows = []
     policies = [("ws", Policy.WORK_STEALING), ("centralized", Policy.CENTRALIZED),
                 ("hybrid", Policy.HYBRID)]
     for places in place_counts:
         for name, pol in policies:
-            rel, use, secs = [], [], []
-            for gi, (w, final) in enumerate(_graphs(n, p, graphs)):
-                t0 = time.time()
-                r = run_sssp(w, num_places=places, k=k, policy=pol,
-                             final=final, seed=gi)
-                secs.append(time.time() - t0)
-                rel.append(r.total_relaxed)
-                use.append(r.useless)
-                assert r.correct
-            rows.append({
-                "fig": "fig4", "structure": name, "P": places, "k": k,
-                "relaxed_mean": round(float(np.mean(rel)), 1),
-                "useless_mean": round(float(np.mean(use)), 1),
-                "us_per_call": round(float(np.mean(secs)) * 1e6 / n, 1),
-            })
+            row = _batched_row(ws, finals, places=places, k=k, pol=pol)
+            row.update({"fig": "fig4", "structure": name, "P": places, "k": k})
+            rows.append(row)
     return rows
 
 
 def fig5_ksweep(n=2000, p=0.5, places=80, graphs=2,
                 ks=(1, 8, 32, 128, 512, 2048)):
     """Fig. 5: total work vs k for centralized + hybrid (P fixed)."""
+    ws, finals = _graph_stack(n, p, graphs)
     rows = []
     for k in ks:
         for name, pol in [("centralized", Policy.CENTRALIZED),
                           ("hybrid", Policy.HYBRID)]:
-            rel, use = [], []
-            for gi, (w, final) in enumerate(_graphs(n, p, graphs)):
-                r = run_sssp(w, num_places=places, k=k, policy=pol,
-                             final=final, seed=gi)
-                rel.append(r.total_relaxed)
-                use.append(r.useless)
-                assert r.correct
-            rows.append({
-                "fig": "fig5", "structure": name, "P": places, "k": k,
-                "relaxed_mean": round(float(np.mean(rel)), 1),
-                "useless_mean": round(float(np.mean(use)), 1),
-            })
+            row = _batched_row(ws, finals, places=places, k=k, pol=pol)
+            row.update({"fig": "fig5", "structure": name, "P": places, "k": k})
+            rows.append(row)
     # work-stealing reference line
-    rel, use = [], []
-    for gi, (w, final) in enumerate(_graphs(n, p, graphs)):
-        r = run_sssp(w, num_places=places, k=1, policy=Policy.WORK_STEALING,
-                     final=final, seed=gi)
-        rel.append(r.total_relaxed)
-        use.append(r.useless)
-    rows.append({"fig": "fig5", "structure": "ws", "P": places, "k": 0,
-                 "relaxed_mean": round(float(np.mean(rel)), 1),
-                 "useless_mean": round(float(np.mean(use)), 1)})
+    row = _batched_row(ws, finals, places=places, k=1,
+                       pol=Policy.WORK_STEALING)
+    row.update({"fig": "fig5", "structure": "ws", "P": places, "k": 0})
+    rows.append(row)
+    return rows
+
+
+def batched_speedup(n=1000, p=0.2, graphs=6, places=8, k=8):
+    """Batched multi-graph engine vs a sequential per-graph loop (same seeds,
+    same policy; run g of the batch is bit-identical to sequential run g,
+    see tests/test_batched.py).
+
+    Cold timings include each path's single compilation (caches cleared
+    first); warm timings are steady-state, which is what a G-graph sweep
+    pays after its first configuration. The batched program collapses
+    sum(phases_g) host->device dispatches into max(phases_g)."""
+    import jax
+
+    ws, finals = _graph_stack(n, p, graphs)
+    pol = Policy.HYBRID
+    rows = []
+    for batch in (1, max(4, graphs // 2), graphs):
+        def seq_pass():
+            return [
+                run_sssp(ws[g], num_places=places, k=k, policy=pol,
+                         final=finals[g], seed=g)
+                for g in range(batch)
+            ]
+
+        def batched_pass():
+            return run_sssp_batched(
+                ws[:batch], num_places=places, k=k, policy=pol,
+                seeds=list(range(batch)), finals=finals[:batch],
+            )
+
+        jax.clear_caches()
+        t0 = time.time()
+        seq_runs = seq_pass()
+        seq_cold = time.time() - t0
+        t0 = time.time()
+        seq_runs = seq_pass()
+        seq_warm = time.time() - t0
+
+        jax.clear_caches()
+        br = batched_pass()
+        batched_cold = br.wall_s
+        br = batched_pass()
+        batched_warm = br.wall_s
+
+        for g in range(batch):
+            assert np.array_equal(br.runs[g].dist, seq_runs[g].dist)
+        rows.append({
+            "fig": "batched", "B": batch, "P": places, "k": k, "n": n,
+            "seq_warm_s": round(seq_warm, 3),
+            "batched_warm_s": round(batched_warm, 3),
+            "speedup": round(seq_warm / max(batched_warm, 1e-9), 2),
+            "seq_cold_s": round(seq_cold, 3),
+            "batched_cold_s": round(batched_cold, 3),
+            "cold_speedup": round(seq_cold / max(batched_cold, 1e-9), 2),
+            "seq_phase_dispatches": int(sum(r.phases for r in seq_runs)),
+            "batched_phase_dispatches": br.joint_phases,
+            "us_per_call": round(batched_warm * 1e6 / (batch * n), 2),
+        })
     return rows

@@ -48,6 +48,9 @@ def main() -> None:
         "fig5_ksweep": lambda: paper.fig5_ksweep(
             n=n, graphs=graphs,
             ks=(1, 32, 512) if not args.full else (1, 8, 32, 128, 512, 2048)),
+        "batched_speedup": lambda: paper.batched_speedup(
+            n=2000 if args.full else 800,
+            graphs=8 if args.full else 6),
         "relaxed_topk": kernels_bench.bench_relaxed_topk,
         "flash_attention": kernels_bench.bench_flash_attention,
         "roofline": lambda: roofline_table.rows(),

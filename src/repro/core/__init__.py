@@ -1,9 +1,11 @@
-"""Core: the paper's k-priority scheduling data structures, the SSSP
-application, the Theorem-5 theory, and the phase simulator (§5.4)."""
+"""Core: the paper's k-priority scheduling data structures (single-instance
+and batched), the SSSP application, the Theorem-5 theory, and the phase
+simulator (§5.4)."""
 from repro.core.kpriority import (  # noqa: F401
     Policy,
     PoolState,
     PopResult,
+    common_visibility,
     ignored_count,
     init_pool,
     phase_pop,
@@ -11,7 +13,13 @@ from repro.core.kpriority import (  # noqa: F401
     rho_bound,
     visibility,
 )
-from repro.core.engine import SSSPRun, run_sssp  # noqa: F401
+from repro.core import batched  # noqa: F401
+from repro.core.engine import (  # noqa: F401
+    SSSPBatchRun,
+    SSSPRun,
+    run_sssp,
+    run_sssp_batched,
+)
 from repro.core.simulator import SimRun, simulate  # noqa: F401
 from repro.core.theory import (  # noqa: F401
     useless_work_bound,

@@ -1,0 +1,89 @@
+"""Batched multi-instance k-priority pools: B independent pool instances with
+a leading batch dimension on every array.
+
+Each op is the documented ``vmap`` wrapper of its single-instance counterpart
+in :mod:`repro.core.kpriority` — instance b of the batched op is bit-identical
+to running the unbatched op on instance b alone (tests/test_batched.py pins
+this). Static configuration (``num_places``, ``k``, ``policy``, arbitration)
+is shared across the batch; per-instance state, items, and PRNG keys are not.
+
+Use this to run B independent scheduler instances (e.g. B graphs' SSSP pools,
+B serving frontends) in a single XLA program: one dispatch per phase instead
+of B, and the fused arbitration kernel processes all instances in one launch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kpriority as kp
+
+
+def init_pool(num_slots: int, num_places: int, *, batch: int) -> kp.PoolState:
+    """B fresh pool instances; every PoolState leaf gains a leading [B] dim."""
+    single = kp.init_pool(num_slots, num_places)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.repeat(x[None], batch, axis=0), single
+    )
+
+
+def push(
+    state: kp.PoolState,
+    mask: jnp.ndarray,        # bool[B, M]
+    prios: jnp.ndarray,       # f32[B, M]
+    creators: jnp.ndarray,    # i32[B, M]
+    *,
+    k: int,
+    policy: kp.Policy,
+    key: Optional[jax.Array] = None,   # [B] batch of PRNG keys, or None
+) -> kp.PoolState:
+    """Batched :func:`kpriority.push` — independent push into each instance."""
+    if key is None:
+        fn = functools.partial(kp.push, k=k, policy=policy)
+        return jax.vmap(fn)(state, mask, prios, creators)
+
+    def fn(s, m, p, c, kk):
+        return kp.push(s, m, p, c, k=k, policy=policy, key=kk)
+
+    return jax.vmap(fn)(state, mask, prios, creators, key)
+
+
+def visibility(
+    state: kp.PoolState, *, num_places: int, k: int, policy: kp.Policy
+) -> jnp.ndarray:
+    """bool[B, P, M] — batched :func:`kpriority.visibility`."""
+    fn = functools.partial(
+        kp.visibility, num_places=num_places, k=k, policy=policy
+    )
+    return jax.vmap(fn)(state)
+
+
+def phase_pop(
+    state: kp.PoolState,
+    key: jax.Array,           # [B] batch of PRNG keys
+    *,
+    num_places: int,
+    k: int,
+    policy: kp.Policy,
+    arbitration: str = "fused",
+    topk_backend: str = "auto",
+    block_size: int = 1024,
+) -> Tuple[kp.PoolState, kp.PopResult]:
+    """Batched :func:`kpriority.phase_pop` — one phase on all B instances."""
+    fn = functools.partial(
+        kp.phase_pop,
+        num_places=num_places, k=k, policy=policy,
+        arbitration=arbitration, topk_backend=topk_backend,
+        block_size=block_size,
+    )
+    return jax.vmap(fn)(state, key)
+
+
+def ignored_count(
+    state_before: kp.PoolState, result: kp.PopResult
+) -> jnp.ndarray:
+    """i32[B] — batched :func:`kpriority.ignored_count`."""
+    return jax.vmap(kp.ignored_count)(state_before, result)

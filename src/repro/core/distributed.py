@@ -27,6 +27,20 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as PS
 
+# jax.shard_map is the post-0.4.x spelling; fall back to the experimental one
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def _axis_size(name: str) -> int:
+    """Static mapped-axis size (jax.lax.axis_size is post-0.4.x; on 0.4.x
+    jax.core.axis_frame returns the size directly)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    frame = jax.core.axis_frame(name)
+    return frame if isinstance(frame, int) else frame.size
+
 INF = jnp.inf
 AXIS = "place"
 
@@ -70,7 +84,7 @@ def phase(st: ShardState, k: int, k_buf: int) -> Tuple[ShardState, jnp.ndarray, 
     (state, popped_id i32[], popped_prio f32[]) — one pop per place (-1 if
     none visible)."""
     p = jax.lax.axis_index(AXIS)
-    nplaces = jax.lax.axis_size(AXIS)
+    nplaces = _axis_size(AXIS)
 
     # ---- publish: if >= k unpublished, move up to k_buf into the buffer ----
     must_pub = st.unpub >= k
@@ -134,7 +148,9 @@ def phase(st: ShardState, k: int, k_buf: int) -> Tuple[ShardState, jnp.ndarray, 
 
     claimed0 = jnp.full((nplaces,), -1, jnp.int32)
     # vma bookkeeping: the carry mixes with all_gather-derived (varying) data
-    claimed0 = jax.lax.pcast(claimed0, (AXIS,), to="varying")
+    # (post-0.4.x only; 0.4.x shard_map has no varying-axis tracking)
+    if hasattr(jax.lax, "pcast"):
+        claimed0 = jax.lax.pcast(claimed0, (AXIS,), to="varying")
     claimed, picks = jax.lax.scan(claim, claimed0, jnp.arange(nplaces))
     my_pick = picks[p]
     popped_id = my_pick
@@ -159,7 +175,7 @@ def make_engine(mesh: Mesh, m_loc: int, g_cap: int, k: int, k_buf: int):
     where pushes = (prio f32[P, n], id i32[P, n]) per-place new tasks."""
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        _shard_map, mesh=mesh,
         in_specs=(PS(AXIS), (PS(AXIS), PS(AXIS))),
         out_specs=(PS(AXIS), PS(AXIS), PS(AXIS)),
     )
@@ -181,8 +197,8 @@ def make_engine(mesh: Mesh, m_loc: int, g_cap: int, k: int, k_buf: int):
 
 def selftest(nplaces: int) -> None:  # pragma: no cover - exercised via subprocess
     import numpy as np
-    mesh = jax.make_mesh((nplaces,), (AXIS,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import axis_types_kwargs
+    mesh = jax.make_mesh((nplaces,), (AXIS,), **axis_types_kwargs(1))
     m_loc, g_cap, k, k_buf = 64, 512, 3, 8
     engine = make_engine(mesh, m_loc, g_cap, k, k_buf)
     state = jax.tree.map(

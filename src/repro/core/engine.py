@@ -4,12 +4,22 @@
 jitted phase step (one compilation per (policy, shapes)); per-phase statistics
 are collected host-side, which is what the paper's evaluation reports
 (Figs. 3–5).
+
+``run_sssp_batched`` runs G independent graphs under one policy in a single
+jitted program (vmap over the graph axis): one XLA dispatch per joint phase
+instead of one per graph per phase, and max(phases_g) dispatches instead of
+sum(phases_g). Graph g's trajectory is bit-identical to ``run_sssp`` on that
+graph alone with the same seed — finished graphs ride along as no-op phases
+(empty pool ⇒ no pops, no pushes, distances frozen) until the whole batch
+drains. This is what lets the benchmark sweeps amortize compilation and
+report per-graph throughput (DESIGN.md §4).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Optional
+import time
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -32,12 +42,25 @@ class SSSPRun:
     correct: bool
 
 
+@dataclasses.dataclass
+class SSSPBatchRun:
+    """Result of one batched multi-graph run: per-graph ``SSSPRun`` summaries
+    plus the joint loop's cost."""
+
+    runs: List[SSSPRun]
+    joint_phases: int               # phases executed by the batched loop
+    wall_s: float                   # wall-clock of the batched loop itself
+
+
 @functools.partial(
-    jax.jit, static_argnames=("num_places", "k", "policy")
+    jax.jit,
+    static_argnames=("num_places", "k", "policy", "arbitration", "topk_backend"),
 )
-def _phase(state, key, w, final, *, num_places, k, policy):
+def _phase(state, key, w, final, *, num_places, k, policy,
+           arbitration, topk_backend):
     return ss.sssp_phase(
-        state, key, w, final, num_places=num_places, k=k, policy=policy
+        state, key, w, final, num_places=num_places, k=k, policy=policy,
+        arbitration=arbitration, topk_backend=topk_backend,
     )
 
 
@@ -50,6 +73,8 @@ def run_sssp(
     seed: int = 0,
     max_phases: int = 100_000,
     final: Optional[np.ndarray] = None,
+    arbitration: str = "fused",
+    topk_backend: str = "auto",
 ) -> SSSPRun:
     """Run the parallel SSSP under a scheduling policy until no active tasks."""
     if final is None:
@@ -64,7 +89,8 @@ def run_sssp(
     while phases < max_phases:
         key, sub = jax.random.split(key)
         state, stats = _phase(
-            state, sub, wj, fj, num_places=num_places, k=k, policy=policy
+            state, sub, wj, fj, num_places=num_places, k=k, policy=policy,
+            arbitration=arbitration, topk_backend=topk_backend,
         )
         stats = jax.device_get(stats)
         for f in ss.PhaseStats._fields:
@@ -75,6 +101,17 @@ def run_sssp(
 
     per_phase = {f: np.asarray(v) for f, v in cols.items()}
     dist = np.asarray(jax.device_get(state.dist))
+    return _summarize_run(per_phase, dist, final, phases)
+
+
+def _summarize_run(
+    per_phase: Dict[str, np.ndarray],
+    dist: np.ndarray,
+    final: np.ndarray,
+    phases: int,
+) -> SSSPRun:
+    """Fold a per-phase stats table into the SSSPRun summary (shared by the
+    sequential and batched drivers so their reports cannot drift)."""
     total_relaxed = int(per_phase["relaxed"].sum())
     total_settled = int(per_phase["settled"].sum())
     return SSSPRun(
@@ -88,3 +125,95 @@ def run_sssp(
         per_phase=per_phase,
         correct=bool(np.allclose(dist, final, rtol=1e-6, atol=1e-6)),
     )
+
+
+# ---------------------------------------------------------------------------
+# batched multi-graph driver
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_places", "k", "policy", "arbitration", "topk_backend"),
+)
+def _phase_batched(state, keys, ws, finals, *, num_places, k, policy,
+                   arbitration, topk_backend):
+    """One joint phase over all G graphs. The per-graph PRNG chain (split,
+    use the second half) matches ``run_sssp``'s host-side chain exactly."""
+
+    def one(s, key, w, f):
+        key, sub = jax.random.split(key)
+        new_s, stats = ss.sssp_phase(
+            s, sub, w, f, num_places=num_places, k=k, policy=policy,
+            arbitration=arbitration, topk_backend=topk_backend,
+        )
+        return new_s, stats, key
+
+    return jax.vmap(one)(state, keys, ws, finals)
+
+
+def run_sssp_batched(
+    ws: np.ndarray,                     # [G, n, n] stacked weight matrices
+    *,
+    num_places: int,
+    k: int,
+    policy: kp.Policy,
+    seeds: Optional[Sequence[int]] = None,
+    max_phases: int = 100_000,
+    finals: Optional[np.ndarray] = None,  # [G, n] oracle distances
+    arbitration: str = "fused",
+    topk_backend: str = "auto",
+) -> SSSPBatchRun:
+    """Run G graphs × one policy as a single jitted batched program.
+
+    ``seeds[g]`` seeds graph g's PRNG chain (default ``range(G)``), matching
+    ``run_sssp(ws[g], seed=seeds[g], ...)`` bit-for-bit on distances and
+    per-phase statistics.
+    """
+    ws = np.asarray(ws)
+    num_graphs = ws.shape[0]
+    if seeds is None:
+        seeds = list(range(num_graphs))
+    if len(seeds) != num_graphs:
+        raise ValueError(f"{len(seeds)} seeds for {num_graphs} graphs")
+    if finals is None:
+        finals = np.stack([ss.dijkstra_ref(w) for w in ws])
+
+    t0 = time.time()
+    wj = jnp.asarray(ws)
+    fj = jnp.asarray(finals)
+    state = jax.vmap(
+        functools.partial(ss.init_sssp, num_places=num_places)
+    )(wj)
+    keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+
+    cols = {f: [] for f in ss.PhaseStats._fields}   # each entry: [G] per phase
+    done_at = np.full((num_graphs,), -1, np.int64)  # phase index where drained
+    phases = 0
+    while phases < max_phases:
+        state, stats, keys = _phase_batched(
+            state, keys, wj, fj, num_places=num_places, k=k, policy=policy,
+            arbitration=arbitration, topk_backend=topk_backend,
+        )
+        stats = jax.device_get(stats)
+        for f in ss.PhaseStats._fields:
+            cols[f].append(getattr(stats, f))
+        drained = (stats.active == 0) & (stats.relaxed == 0)
+        newly = (done_at < 0) & drained
+        done_at[newly] = phases
+        phases += 1
+        if (done_at >= 0).all():
+            break
+    done_at[done_at < 0] = phases - 1   # max_phases hit: truncate at the end
+
+    dist = np.asarray(jax.device_get(state.dist))   # [G, n]
+    wall = time.time() - t0
+
+    runs: List[SSSPRun] = []
+    for g in range(num_graphs):
+        g_phases = int(done_at[g]) + 1
+        per_phase = {
+            f: np.asarray([row[g] for row in cols[f][:g_phases]])
+            for f in ss.PhaseStats._fields
+        }
+        runs.append(_summarize_run(per_phase, dist[g], finals[g], g_phases))
+    return SSSPBatchRun(runs=runs, joint_phases=phases, wall_s=wall)

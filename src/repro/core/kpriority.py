@@ -19,9 +19,12 @@ more than ρ items, regardless of age. We therefore implement the structures as
   WORK_STEAL   owner-only visibility; empty places steal half the
                victim's tasks (destructive)                            (ρ = ∞)
 
-Exactly-once pop is guaranteed by deterministic greedy arbitration inside the
-phase (the analogue of the paper's CAS-on-tag: lowest-order claimant wins; the
-paper's "spurious failure" becomes an idle place for one phase).
+Exactly-once pop is guaranteed by deterministic arbitration inside the phase
+(the analogue of the paper's CAS-on-tag: lowest-order claimant wins; the
+paper's "spurious failure" becomes an idle place for one phase). The default
+arbiter is the fused two-stage selection built on the relaxed_topk kernel
+(DESIGN.md §3); the legacy sequential greedy scan is kept as an oracle.
+Batched multi-instance wrappers (leading [B] dim) live in core/batched.py.
 
 Task identity == pool slot. Re-pushing a slot overwrites its item, which is
 the paper's dead-task elimination (reinsert + lazy removal) performed eagerly.
@@ -37,6 +40,8 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.relaxed_topk import topk_select
 
 INF = jnp.inf
 
@@ -181,6 +186,25 @@ def visibility(state: PoolState, *, num_places: int, k: int, policy: Policy) -> 
     raise ValueError(policy)
 
 
+def common_visibility(state: PoolState, *, k: int, policy: Policy) -> jnp.ndarray:
+    """bool[M] — tasks visible to *every* place under the policy.
+
+    This is the place-independent part of :func:`visibility`; the fused
+    arbitration selects its top-P from this set in one kernel call and only
+    falls back to per-place visibility for places the selection left empty
+    (DESIGN.md §3).
+    """
+    if policy is Policy.IDEAL:
+        return state.active
+    if policy is Policy.CENTRALIZED:
+        return state.active & (state.seq < (state.next_seq - k))
+    if policy is Policy.HYBRID:
+        return state.active & state.published
+    if policy is Policy.WORK_STEALING:
+        return jnp.zeros_like(state.active)  # owner-only: nothing is common
+    raise ValueError(policy)
+
+
 # ---------------------------------------------------------------------------
 # phase pop (with steal-half / spying for empty places)
 # ---------------------------------------------------------------------------
@@ -206,6 +230,83 @@ def _greedy_assign(
     slots = jnp.zeros((num_places,), jnp.int32).at[order].set(slots_o)
     valid = jnp.zeros((num_places,), bool).at[order].set(valid_o)
     return slots, valid, taken
+
+
+def _fused_assign(
+    vis: jnp.ndarray,
+    common: jnp.ndarray,
+    prio: jnp.ndarray,
+    order: jnp.ndarray,
+    *,
+    c: int,
+    block_size: int,
+    backend: str,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused two-stage arbitration (replaces the O(P) sequential scan).
+
+    Stage 1 — one ``relaxed_topk`` call selects the (ρ-relaxed) top-P of the
+    *commonly visible* priorities; rank j is handed to place ``order[j]``.
+    This is exact (c = P) for IDEAL/CENTRALIZED and block-local top-c for
+    HYBRID, mirroring the hybrid structure's per-place publication budget.
+
+    Stage 2 — places the selection left empty fall back to their best
+    *per-place* visible item (own/spied/stolen tasks). Conflicting claims are
+    resolved in ``order``: the lowest-rank claimant wins, losers idle one
+    phase — the deterministic analogue of the paper's spurious CAS failure.
+
+    Preserves the structural ρ-relaxation bound (proof sketch in DESIGN.md
+    §3.2): the worst-popping place q either popped in stage 2 (every better
+    unpopped item is invisible to q, of which there are ≤ ρ) or in stage 1
+    (better unpopped items are ≤ max(0, P−c) selection-ignored commons plus
+    the non-common items, which the policy bounds by ρ).
+
+    Returns (slot[P], valid[P], taken[M]) indexed by place.
+    """
+    num_places, m = vis.shape
+
+    # ---- stage 1: kernel-backed top-P over the common set ----------------
+    scores = jnp.where(common, -prio, -INF)           # larger = better
+    top_v, top_i = topk_select(
+        scores, num_places, c=c, block_size=block_size, backend=backend
+    )
+    rank_valid = top_v > -INF                          # [P] by rank
+    rank_slot = jnp.where(rank_valid, top_i, 0).astype(jnp.int32)
+    s1_slot = jnp.zeros((num_places,), jnp.int32).at[order].set(rank_slot)
+    s1_valid = jnp.zeros((num_places,), bool).at[order].set(rank_valid)
+    taken1 = jnp.zeros((m,), bool).at[rank_slot].max(rank_valid)
+
+    # ---- stage 2: per-place fallback with order-rank conflict resolution -
+    avail = vis & ~taken1[None, :]                     # [P, M]
+    scores2 = jnp.where(avail, prio, INF)
+    cand = jnp.argmin(scores2, axis=1).astype(jnp.int32)          # [P]
+    cand_valid = jnp.isfinite(jnp.min(scores2, axis=1)) & ~s1_valid
+    rank_of = jnp.zeros((num_places,), jnp.int32).at[order].set(
+        jnp.arange(num_places, dtype=jnp.int32)
+    )
+    claim = jnp.where(cand_valid, rank_of, num_places)
+    best_claim = jnp.full((m,), num_places, jnp.int32).at[cand].min(claim)
+    win = cand_valid & (best_claim[cand] == rank_of)
+
+    slots = jnp.where(s1_valid, s1_slot, jnp.where(win, cand, 0))
+    valid = s1_valid | win
+    taken = taken1.at[jnp.where(win, cand, 0)].max(win)
+    return slots, valid, taken
+
+
+def _selection_c(policy: Policy, k: int, num_places: int, num_blocks: int) -> int:
+    """Per-block candidate budget for the fused stage-1 selection.
+
+    IDEAL/CENTRALIZED need the exact top-P (c = P ⇒ selection-ρ = 0) so the
+    policy's own bound (0 resp. k) is met. HYBRID may relax the selection
+    itself: with per-block budget c ≥ 1 the phase ignores at most
+    P·(k−1) unpublished + (P−c) selection-ignored < P·k items. We still take
+    at least ⌈P/B⌉ per block so a full phase's worth of candidates exists.
+    WORK_STEALING has an empty common set; c is irrelevant (kept ≥ 1).
+    """
+    if policy is Policy.HYBRID:
+        per_block_floor = -(-num_places // max(num_blocks, 1))  # ceil(P/B)
+        return max(1, min(num_places, max(k, per_block_floor)))
+    return max(1, num_places)
 
 
 def _steal_half(
@@ -271,8 +372,18 @@ def phase_pop(
     num_places: int,
     k: int,
     policy: Policy,
+    arbitration: str = "fused",
+    topk_backend: str = "auto",
+    block_size: int = 1024,
 ) -> Tuple[PoolState, PopResult]:
-    """One scheduling phase: every place pops its best visible task."""
+    """One scheduling phase: every place pops its best visible task.
+
+    ``arbitration`` selects the intra-phase arbiter: ``"fused"`` (default)
+    is the relaxed_topk-backed two-stage selection (Pallas on TPU, jnp
+    reference on CPU — override with ``topk_backend``); ``"scan"`` is the
+    legacy sequential O(P) greedy scan, kept as the equivalence oracle.
+    Both are bit-identical under IDEAL and preserve ignored ≤ ρ everywhere.
+    """
     k_steal, k_spy, k_order = jax.random.split(key, 3)
     if policy is Policy.WORK_STEALING:
         state = _steal_half(state, k_steal, num_places)
@@ -281,7 +392,19 @@ def phase_pop(
         vis, spied = _spy(state, vis, k_spy, num_places)
         state = state._replace(spied=spied)
     order = jax.random.permutation(k_order, num_places).astype(jnp.int32)
-    slots, valid, taken = _greedy_assign(vis, state.prio, order)
+    if arbitration == "scan":
+        slots, valid, taken = _greedy_assign(vis, state.prio, order)
+    elif arbitration == "fused":
+        common = common_visibility(state, k=k, policy=policy)
+        m = state.prio.shape[0]
+        num_blocks = -(-m // block_size)
+        c = _selection_c(policy, k, num_places, num_blocks)
+        slots, valid, taken = _fused_assign(
+            vis, common, state.prio, order,
+            c=c, block_size=block_size, backend=topk_backend,
+        )
+    else:
+        raise ValueError(f"unknown arbitration: {arbitration!r}")
     new_state = state._replace(
         active=state.active & ~taken,
         prio=jnp.where(taken, INF, state.prio),

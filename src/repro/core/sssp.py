@@ -105,12 +105,15 @@ def sssp_phase(
     num_places: int,
     k: int,
     policy: kp.Policy,
+    arbitration: str = "fused",
+    topk_backend: str = "auto",
 ) -> Tuple[SSSPState, PhaseStats]:
     """One phase: every place pops + relaxes its best visible node."""
     n = w.shape[0]
     k_pop, k_push = jax.random.split(key)
     pool, res = kp.phase_pop(
-        state.pool, k_pop, num_places=num_places, k=k, policy=policy
+        state.pool, k_pop, num_places=num_places, k=k, policy=policy,
+        arbitration=arbitration, topk_backend=topk_backend,
     )
     ignored = kp.ignored_count(state.pool, res)
 

@@ -111,3 +111,42 @@ def relaxed_topk(
         top_v = jnp.pad(top_v, (0, pad), constant_values=NEG_INF)
         top_i = jnp.pad(top_i, (0, pad), constant_values=-1)
     return top_v, top_i
+
+
+# ---------------------------------------------------------------------------
+# backend-selecting entry point (used by core.kpriority's fused arbitration)
+# ---------------------------------------------------------------------------
+
+def topk_select(
+    x: jnp.ndarray,
+    p: int,
+    *,
+    c: int | None = None,
+    block_size: int = 1024,
+    backend: str = "auto",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """ρ-relaxed top-p with an explicit backend choice.
+
+    ``backend``:
+      * ``"auto"``             — Pallas (compiled) on TPU, pure-jnp reference
+                                 everywhere else (interpret-mode Pallas is far
+                                 too slow to sit on a scheduler's hot path),
+      * ``"pallas"``           — compiled Pallas kernel,
+      * ``"pallas_interpret"`` — Pallas in interpret mode (CPU validation),
+      * ``"ref"``              — the pure-jnp oracle from kernels/ref.py.
+
+    All backends share the deterministic lowest-index tie-break, so the
+    selection is bit-identical across them (tests assert this).
+    """
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        from repro.kernels.ref import relaxed_topk_ref
+
+        return relaxed_topk_ref(x, p, c=c, block_size=block_size)
+    if backend in ("pallas", "pallas_interpret"):
+        return relaxed_topk(
+            x, p, c=c, block_size=block_size,
+            interpret=(backend == "pallas_interpret"),
+        )
+    raise ValueError(f"unknown topk backend: {backend!r}")

@@ -9,12 +9,20 @@ from typing import Dict
 import jax
 
 
+def axis_types_kwargs(n_axes: int) -> Dict[str, object]:
+    """``axis_types=`` kwargs for ``jax.make_mesh`` when this jax supports
+    them (jax.sharding.AxisType landed after 0.4.x; Auto is the 0.4.x
+    default, so omitting the kwarg is behaviour-preserving there)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **axis_types_kwargs(len(axes)))
 
 
 def logical_rules(multi_pod: bool = False) -> Dict[str, object]:
@@ -35,6 +43,4 @@ def logical_rules(multi_pod: bool = False) -> Dict[str, object]:
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for multi-device unit tests (host platform)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **axis_types_kwargs(len(axes)))

@@ -30,7 +30,9 @@ _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*([a-z0-9\-]+)\(")
 _PARAM_RE = re.compile(r"([\w.\-]+)\s*:\s*([a-z0-9]+\[[0-9,]*\])")
 _COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
-_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+# fusions say `calls=%comp`; plain call ops (CPU backend wraps parallel
+# fusions this way) say `to_apply=%comp` — both are call sites.
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
 _WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
 _TRIP_RE = re.compile(r"known_trip_count[\"':{\s]+n[\"':\s]+(\d+)")
 _COND_CONST_RE = re.compile(r"s(?:32|64)\[\]\s+constant\((\d+)\)")

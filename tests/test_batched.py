@@ -1,0 +1,192 @@
+"""Equivalence tests for the batched multi-instance engine and the fused
+arbitration (ISSUE 1 tentpole contract):
+
+  * batched ``phase_pop`` over B instances == a Python loop of unbatched
+    calls, bit-for-bit (states and PopResults),
+  * the relaxed_topk-backed fused arbitration == the legacy sequential scan
+    under IDEAL (ρ = 0), for both the jnp reference backend and the Pallas
+    kernel in interpret mode,
+  * ``run_sssp_batched`` == per-graph ``run_sssp`` on ≥ 3 seeds (identical
+    distances, phases, and work counters).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import batched, kpriority as kp
+from repro.core.engine import run_sssp, run_sssp_batched
+from repro.core.sssp import dijkstra_ref, make_er_graph
+
+POLICIES = [
+    (kp.Policy.IDEAL, 2),
+    (kp.Policy.CENTRALIZED, 3),
+    (kp.Policy.HYBRID, 3),
+    (kp.Policy.WORK_STEALING, 1),
+]
+
+
+def _random_batch(rng, batch, m, places):
+    mask = rng.random((batch, m)) < 0.25
+    prios = rng.random((batch, m)).astype(np.float32)
+    creators = rng.integers(0, places, (batch, m)).astype(np.int32)
+    return jnp.asarray(mask), jnp.asarray(prios), jnp.asarray(creators)
+
+
+def _assert_states_equal(batched_state, state, b):
+    for name, bl, sl in zip(
+        kp.PoolState._fields, batched_state, state
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(bl[b]), np.asarray(sl), err_msg=f"field {name}"
+        )
+
+
+@pytest.mark.parametrize("policy,k", POLICIES)
+def test_batched_matches_unbatched_loop(policy, k):
+    """B instances stepped together == each instance stepped alone."""
+    batch, m, places, phases = 3, 64, 4, 5
+    rng = np.random.default_rng(7)
+    bstate = batched.init_pool(m, places, batch=batch)
+    states = [kp.init_pool(m, places) for _ in range(batch)]
+
+    for t in range(phases):
+        mask, prios, creators = _random_batch(rng, batch, m, places)
+        push_keys = jnp.stack(
+            [jax.random.PRNGKey(1000 * t + b) for b in range(batch)]
+        )
+        pop_keys = jnp.stack(
+            [jax.random.PRNGKey(5000 * t + b) for b in range(batch)]
+        )
+        bstate = batched.push(
+            bstate, mask, prios, creators, k=k, policy=policy, key=push_keys
+        )
+        bvis = batched.visibility(
+            bstate, num_places=places, k=k, policy=policy
+        )
+        bstate, bres = batched.phase_pop(
+            bstate, pop_keys, num_places=places, k=k, policy=policy
+        )
+        for b in range(batch):
+            states[b] = kp.push(
+                states[b], mask[b], prios[b], creators[b],
+                k=k, policy=policy, key=jax.random.PRNGKey(1000 * t + b),
+            )
+            vis = kp.visibility(
+                states[b], num_places=places, k=k, policy=policy
+            )
+            np.testing.assert_array_equal(np.asarray(bvis[b]), np.asarray(vis))
+            states[b], res = kp.phase_pop(
+                states[b], jax.random.PRNGKey(5000 * t + b),
+                num_places=places, k=k, policy=policy,
+            )
+            np.testing.assert_array_equal(
+                np.asarray(bres.slot[b]), np.asarray(res.slot)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(bres.valid[b]), np.asarray(res.valid)
+            )
+            np.testing.assert_array_equal(
+                np.asarray(bres.prio[b]), np.asarray(res.prio)
+            )
+            _assert_states_equal(bstate, states[b], b)
+
+
+def _trace(arbitration, backend, *, seed=3, m=96, places=5, phases=16):
+    """Deterministic IDEAL push/pop trace; returns pop results + final state."""
+    rng = np.random.default_rng(seed)
+    state = kp.init_pool(m, places)
+    key = jax.random.PRNGKey(seed)
+    results = []
+    for t in range(phases):
+        if t < 8:
+            mask = np.zeros(m, bool)
+            prios = np.zeros(m, np.float32)
+            creators = np.zeros(m, np.int32)
+            for _ in range(int(rng.integers(1, 10))):
+                s = int(rng.integers(0, m))
+                mask[s] = True
+                prios[s] = rng.random()
+                creators[s] = rng.integers(0, places)
+            key, sub = jax.random.split(key)
+            state = kp.push(
+                state, jnp.asarray(mask), jnp.asarray(prios),
+                jnp.asarray(creators), k=1, policy=kp.Policy.IDEAL, key=sub,
+            )
+        key, sub = jax.random.split(key)
+        state, res = kp.phase_pop(
+            state, sub, num_places=places, k=1, policy=kp.Policy.IDEAL,
+            arbitration=arbitration, topk_backend=backend,
+        )
+        results.append(jax.device_get(res))
+    return results, jax.device_get(state)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas_interpret"])
+def test_fused_matches_legacy_scan_under_ideal(backend):
+    """ρ = 0 pins the arbitration: fused must equal the sequential scan."""
+    legacy, legacy_state = _trace("scan", "auto")
+    fused, fused_state = _trace("fused", backend)
+    for t, (a, b) in enumerate(zip(legacy, fused)):
+        np.testing.assert_array_equal(a.slot, b.slot, err_msg=f"phase {t}")
+        np.testing.assert_array_equal(a.valid, b.valid, err_msg=f"phase {t}")
+        np.testing.assert_array_equal(a.prio, b.prio, err_msg=f"phase {t}")
+    for name, la, lb in zip(
+        kp.PoolState._fields, legacy_state, fused_state
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb), err_msg=f"field {name}"
+        )
+
+
+def test_init_pool_batched_shapes():
+    batch, m, places = 4, 32, 3
+    st = batched.init_pool(m, places, batch=batch)
+    assert st.prio.shape == (batch, m)
+    assert st.spied.shape == (batch, places, m)
+    assert st.next_seq.shape == (batch,)
+
+
+@pytest.mark.parametrize("seeds", [(0, 1, 2), (5, 11, 17, 23)])
+def test_run_sssp_batched_matches_per_graph(seeds):
+    """Acceptance: identical distances to per-graph run_sssp on ≥ 3 seeds."""
+    graphs = len(seeds)
+    ws = np.stack([make_er_graph(50 + s, 100, 0.12) for s in seeds])
+    finals = np.stack([dijkstra_ref(w) for w in ws])
+    br = run_sssp_batched(
+        ws, num_places=6, k=4, policy=kp.Policy.HYBRID,
+        seeds=list(seeds), finals=finals,
+    )
+    assert len(br.runs) == graphs
+    assert br.joint_phases == max(r.phases for r in br.runs)
+    for g, seed in enumerate(seeds):
+        r = run_sssp(
+            ws[g], num_places=6, k=4, policy=kp.Policy.HYBRID,
+            seed=seed, final=finals[g],
+        )
+        np.testing.assert_array_equal(br.runs[g].dist, r.dist)
+        assert br.runs[g].phases == r.phases
+        assert br.runs[g].total_relaxed == r.total_relaxed
+        assert br.runs[g].total_pushes == r.total_pushes
+        assert br.runs[g].max_ignored == r.max_ignored
+        assert br.runs[g].correct and r.correct
+
+
+def test_run_sssp_batched_mixed_drain_times():
+    """Graphs that finish early must ride along untouched as no-op phases."""
+    dense = make_er_graph(3, 80, 0.3)
+    sparse = make_er_graph(9, 80, 0.03)     # likely disconnected, finishes odd
+    ws = np.stack([dense, sparse])
+    finals = np.stack([dijkstra_ref(dense), dijkstra_ref(sparse)])
+    br = run_sssp_batched(
+        ws, num_places=4, k=2, policy=kp.Policy.CENTRALIZED,
+        seeds=[0, 1], finals=finals,
+    )
+    for g in range(2):
+        r = run_sssp(
+            ws[g], num_places=4, k=2, policy=kp.Policy.CENTRALIZED,
+            seed=g, final=finals[g],
+        )
+        np.testing.assert_array_equal(br.runs[g].dist, r.dist)
+        assert br.runs[g].phases == r.phases
+        assert br.runs[g].correct

@@ -45,6 +45,7 @@ def test_async_save():
         assert mgr.latest_step() == 1
 
 
+@pytest.mark.slow
 def test_preemption_resume_bitwise():
     """Train 12 steps; kill at 6; resume; final params identical."""
     from repro.configs import get_reduced
@@ -69,18 +70,17 @@ import sys, tempfile
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint.manager import CheckpointManager
+from repro.launch.mesh import axis_types_kwargs
 
 d = sys.argv[1]
 t = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
-mesh_a = jax.make_mesh((2, 4), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh_a = jax.make_mesh((2, 4), ("data", "model"), **axis_types_kwargs(2))
 sh_a = {"w": NamedSharding(mesh_a, P("data", "model"))}
 t_a = jax.device_put(t["w"], sh_a["w"])
 mgr = CheckpointManager(d)
 mgr.save(1, {"w": t_a})
 # elastic: restore onto a DIFFERENT mesh shape (simulates node loss 8->4)
-mesh_b = jax.make_mesh((4, 1), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh_b = jax.make_mesh((4, 1), ("data", "model"), **axis_types_kwargs(2))
 sh_b = {"w": NamedSharding(mesh_b, P("data", "model"))}
 like = {"w": np.zeros((8, 8), np.float32)}
 r = mgr.restore_sharded(1, like, sh_b)
@@ -90,6 +90,7 @@ print("ELASTIC_OK")
 """
 
 
+@pytest.mark.slow
 def test_elastic_reshard_subprocess():
     """Save on a (2,4) mesh, restore on (4,1): elastic scaling after node
     failure. Subprocess because device count is locked at jax init."""

@@ -24,8 +24,10 @@ def test_scan_matmul_flops_exact():
     ).compile()
     s = hlo_stats(c.as_text())
     assert s["flops"] == L * 2 * m * k * k, s["flops"]
-    xla = c.cost_analysis()["flops"]
-    assert xla < s["flops"]  # documents the cost_analysis undercount
+    cost = c.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax returns [dict]
+        cost = cost[0]
+    assert cost["flops"] < s["flops"]  # documents the cost_analysis undercount
 
 
 def test_single_matmul_flops():

@@ -1,0 +1,164 @@
+"""Invariant property tests pinning the contract the fused arbitration must
+preserve (ISSUE 1): for every Policy × random phase traces,
+
+  * bounded ignorance — ``ignored_count(state, result) <= rho_bound``
+    at every phase (structural ρ-relaxation, paper §5.3),
+  * exactly-once pop — no slot is popped twice while active, and every
+    pushed task is eventually popped,
+  * progress — at least one pop per phase while tasks are active.
+
+Runs against the default (fused) arbitration; ``test_kpriority.py`` covers
+the same invariants through its own traces, and ``test_batched.py`` pins
+fused == legacy-scan under IDEAL.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import kpriority as kp
+
+ALL_POLICIES = [
+    kp.Policy.IDEAL,
+    kp.Policy.CENTRALIZED,
+    kp.Policy.HYBRID,
+    kp.Policy.WORK_STEALING,
+]
+
+
+def run_trace(policy, k, num_places, seed, *, m=48, push_phases=5):
+    """Random push/pop trace; returns (popped, live, violations, state)."""
+    rng = np.random.default_rng(seed)
+    state = kp.init_pool(m, num_places)
+    key = jax.random.PRNGKey(seed)
+    popped, violations = [], []
+    live = set()
+    phase, max_phases = 0, push_phases + m + 8
+    while phase < max_phases:
+        if phase < push_phases:
+            mask = np.zeros(m, bool)
+            prios = np.zeros(m, np.float32)
+            creators = np.zeros(m, np.int32)
+            for _ in range(int(rng.integers(1, 9))):
+                slot = int(rng.integers(0, m))
+                if slot in live:
+                    continue
+                live.add(slot)
+                mask[slot] = True
+                prios[slot] = rng.random()
+                creators[slot] = rng.integers(0, num_places)
+            key, sub = jax.random.split(key)
+            state = kp.push(
+                state, jnp.asarray(mask), jnp.asarray(prios),
+                jnp.asarray(creators), k=k, policy=policy, key=sub,
+            )
+        key, sub = jax.random.split(key)
+        before = state
+        state, res = kp.phase_pop(
+            state, sub, num_places=num_places, k=k, policy=policy
+        )
+        ignored = int(kp.ignored_count(before, res))
+        rho = kp.rho_bound(policy, k, num_places)
+        if ignored > rho:
+            violations.append((phase, ignored, rho))
+        n_popped = 0
+        for i in range(num_places):
+            if bool(res.valid[i]):
+                popped.append(int(res.slot[i]))
+                n_popped += 1
+        if int(jnp.sum(before.active)) > 0:
+            assert n_popped >= 1, f"progress violated at phase {phase}"
+        phase += 1
+        if phase >= push_phases and int(jnp.sum(state.active)) == 0:
+            break
+    return popped, live, violations, state
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(1, 6))
+def test_rho_bound_and_exactly_once(policy, seed, k):
+    """Acceptance: ignored_count <= rho_bound for all four policies, plus
+    exactly-once pop, over random traces."""
+    popped, live, violations, state = run_trace(policy, k, 4, seed)
+    assert not violations, f"rho violations: {violations}"
+    assert len(popped) == len(set(popped)), "a slot was popped twice"
+    assert set(popped) == live, "a task was lost or invented"
+    assert int(jnp.sum(state.active)) == 0, "pool failed to drain"
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_underfull_pool_drains_with_bounded_ignorance(policy):
+    """Fewer live tasks than places: the pool drains in a couple of phases,
+    each phase within the ρ bound, every task popped exactly once. (Not
+    necessarily one phase: under CENTRALIZED the k newest are visible only
+    to their creator, which can pop just one of them per phase.)"""
+    m, places, k = 32, 8, 2
+    slots = [3, 11, 29]
+    state = kp.init_pool(m, places)
+    mask = np.zeros(m, bool)
+    mask[slots] = True
+    prios = np.where(mask, np.linspace(0.1, 0.9, m), 0).astype(np.float32)
+    creators = np.zeros(m, np.int32)
+    creators[slots] = [0, 1, 2]
+    state = kp.push(
+        state, jnp.asarray(mask), jnp.asarray(prios),
+        jnp.asarray(creators), k=k, policy=policy,
+    )
+    key = jax.random.PRNGKey(0)
+    popped = []
+    for _ in range(4):
+        key, sub = jax.random.split(key)
+        before = state
+        state, res = kp.phase_pop(
+            state, sub, num_places=places, k=k, policy=policy
+        )
+        assert int(kp.ignored_count(before, res)) <= kp.rho_bound(
+            policy, k, places
+        )
+        popped += [int(s) for s, v in zip(res.slot, res.valid) if bool(v)]
+        if int(jnp.sum(state.active)) == 0:
+            break
+    assert sorted(popped) == slots, "not exactly-once"
+    assert int(jnp.sum(state.active)) == 0, "pool failed to drain"
+    if policy is kp.Policy.IDEAL:
+        assert len(popped) == 3  # IDEAL: everything pops in the first phase
+
+
+def test_rho_bound_table():
+    """DESIGN.md §2 table: the four policies' structural ρ bounds."""
+    P, k = 8, 16
+    assert kp.rho_bound(kp.Policy.IDEAL, k, P) == 0
+    assert kp.rho_bound(kp.Policy.CENTRALIZED, k, P) == k
+    assert kp.rho_bound(kp.Policy.HYBRID, k, P) == P * k
+    assert kp.rho_bound(kp.Policy.WORK_STEALING, k, P) == float("inf")
+
+
+def test_common_visibility_is_intersection():
+    """common_visibility must be exactly the all-places AND of visibility."""
+    m, places = 40, 4
+    rng = np.random.default_rng(0)
+    for policy, k in [
+        (kp.Policy.IDEAL, 2), (kp.Policy.CENTRALIZED, 3),
+        (kp.Policy.HYBRID, 2), (kp.Policy.WORK_STEALING, 1),
+    ]:
+        state = kp.init_pool(m, places)
+        key = jax.random.PRNGKey(1)
+        for t in range(3):
+            mask = rng.random(m) < 0.3
+            key, sub = jax.random.split(key)
+            state = kp.push(
+                state, jnp.asarray(mask),
+                jnp.asarray(rng.random(m).astype(np.float32)),
+                jnp.asarray(rng.integers(0, places, m).astype(np.int32)),
+                k=k, policy=policy, key=sub,
+            )
+        vis = kp.visibility(state, num_places=places, k=k, policy=policy)
+        common = kp.common_visibility(state, k=k, policy=policy)
+        inter = np.asarray(jnp.all(vis, axis=0))
+        # common ⊆ intersection always; equality unless a place owns every
+        # non-common item (creator arrays make strictness graph-dependent)
+        assert not np.any(np.asarray(common) & ~inter), policy
+        if policy in (kp.Policy.IDEAL,):
+            np.testing.assert_array_equal(np.asarray(common), inter)

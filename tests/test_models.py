@@ -13,6 +13,9 @@ from repro.models import (
     decode_step, materialize, model_p, prefill, train_loss,
 )
 
+# per-arch smoke training dominates suite wall-time (25 s+ per big arch)
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def rng():

@@ -12,6 +12,9 @@ from repro.core.sssp import dijkstra_ref, make_er_graph
 from repro.data.pipeline import DataConfig, PrioritySampler, SyntheticLM
 from repro.train.loop import train
 
+# end-to-end training runs dominate wall-time (~30 s)
+pytestmark = pytest.mark.slow
+
 
 def test_training_descends():
     cfg = get_reduced("qwen3_1_7b")
