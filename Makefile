@@ -1,11 +1,21 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-full example
+.PHONY: test test-fast bench bench-full bench-smoke example lint
 
 # tier-1 verify (ROADMAP.md): full suite, stop at first failure
 test:
 	$(PY) -m pytest -x -q
+
+# ruff check + format check (config in pyproject.toml). Gated: the dev
+# container ships without ruff (and nothing may be pip-installed into it);
+# CI installs ruff and runs this exact target as its first step.
+lint:
+	@if $(PY) -m ruff --version >/dev/null 2>&1; then \
+		$(PY) -m ruff check . && $(PY) -m ruff format --check .; \
+	else \
+		echo "ruff not installed; skipping lint (CI runs it)"; \
+	fi
 
 # fast loop: deselect the slow training/system tests (marker in pytest.ini)
 test-fast:
@@ -16,6 +26,10 @@ bench:
 
 bench-full:
 	$(PY) -m benchmarks.run --full
+
+# CI-budget benchmark pass (<2 min): tiny sizes, same sections/artifacts
+bench-smoke:
+	$(PY) -m benchmarks.run --smoke
 
 example:
 	$(PY) examples/sssp_dijkstra.py

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.ops import relaxed_topk
-from repro.kernels.ref import exact_topk_ref, relaxed_topk_ref
+from repro.kernels.ref import exact_topk_ref
 
 
 def bench_relaxed_topk(n=1 << 16, p=256, block=1024, cs=(256, 64, 16, 4)):

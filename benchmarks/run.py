@@ -2,10 +2,16 @@
 
   PYTHONPATH=src python -m benchmarks.run              # scaled defaults
   PYTHONPATH=src python -m benchmarks.run --full       # paper-scale (slow)
+  PYTHONPATH=src python -m benchmarks.run --smoke      # CI budget (<2 min)
   PYTHONPATH=src python -m benchmarks.run --only fig5
 
+The ``sharded`` section measures multi-device scaling; run it under
+XLA_FLAGS=--xla_force_host_platform_device_count=8 on a CPU host (on one
+device it emits a skip row).
+
 Prints ``name,us_per_call,derived`` CSV rows per the repo convention, plus
-the full row dicts to benchmarks/out/*.json.
+the full row dicts to benchmarks/out/BENCH_<section>.json (the files CI
+uploads as the perf-trajectory artifact).
 """
 from __future__ import annotations
 
@@ -17,7 +23,7 @@ import sys
 
 def _emit(section: str, rows):
     os.makedirs("benchmarks/out", exist_ok=True)
-    with open(f"benchmarks/out/{section}.json", "w") as f:
+    with open(f"benchmarks/out/BENCH_{section}.json", "w") as f:
         json.dump(rows, f, indent=1)
     for r in rows:
         us = r.get("us_per_call", "")
@@ -30,29 +36,44 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale (n=10000, P=80, 20 graphs)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI (<2 min budget)")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
+    if args.full and args.smoke:
+        ap.error("--full and --smoke are mutually exclusive")
 
     from benchmarks import kernels_bench, paper, roofline_table
 
-    n = 10000 if args.full else 4000
+    n = 10000 if args.full else (600 if args.smoke else 4000)
     graphs = 20 if args.full else 2
     sections = {
         "fig3_simulation": lambda: paper.fig3_simulation(
             n=n, graphs=graphs,
-            rhos=(0, 128, 512)),
+            rhos=(0, 128) if args.smoke else (0, 128, 512)),
         "fig4_scaling": lambda: paper.fig4_scaling(
             n=n, graphs=graphs,
-            place_counts=(1, 5, 20, 80) if not args.full
-            else (1, 2, 5, 10, 20, 40, 80)),
+            place_counts=(1, 2, 5, 10, 20, 40, 80) if args.full
+            else ((4, 16) if args.smoke else (1, 5, 20, 80))),
         "fig5_ksweep": lambda: paper.fig5_ksweep(
             n=n, graphs=graphs,
-            ks=(1, 32, 512) if not args.full else (1, 8, 32, 128, 512, 2048)),
+            places=16 if args.smoke else 80,
+            ks=(1, 8, 32, 128, 512, 2048) if args.full
+            else ((4, 64) if args.smoke else (1, 32, 512))),
         "batched_speedup": lambda: paper.batched_speedup(
-            n=2000 if args.full else 800,
-            graphs=8 if args.full else 6),
-        "relaxed_topk": kernels_bench.bench_relaxed_topk,
-        "flash_attention": kernels_bench.bench_flash_attention,
+            n=2000 if args.full else (300 if args.smoke else 800),
+            graphs=8 if args.full else (4 if args.smoke else 6)),
+        "sharded_speedup": lambda: paper.sharded_speedup(
+            n=1600 if args.full else (400 if args.smoke else 800),
+            graphs=8),
+        "relaxed_topk": (
+            (lambda: kernels_bench.bench_relaxed_topk(n=1 << 13, p=64,
+                                                      cs=(64, 8)))
+            if args.smoke else kernels_bench.bench_relaxed_topk),
+        "flash_attention": (
+            (lambda: kernels_bench.bench_flash_attention(
+                shapes=((1, 2, 256, 64),)))
+            if args.smoke else kernels_bench.bench_flash_attention),
         "roofline": lambda: roofline_table.rows(),
     }
     failures = 0

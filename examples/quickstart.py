@@ -7,7 +7,8 @@ under each policy, and prints the paper's core result: k-priority structures
 do near-zero useless work while work-stealing does ~2x relaxations — plus the
 structural ρ-relaxation bound observed vs allowed (paper §2.2/§5.3).
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import Policy, rho_bound, run_sssp

@@ -7,7 +7,8 @@ control).
 Submits requests with mixed SLA priorities from multiple front-ends and
 shows that admission order respects priority up to ρ = frontends·k.
 """
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
@@ -25,7 +26,6 @@ def main():
     eng = ServeEngine(cfg, params, slots=4, max_len=64,
                       frontends=frontends, k=k)
     rng = np.random.default_rng(0)
-    lat = {}
     for i in range(12):
         pr = float(i % 3)          # three SLA classes
         eng.submit(Request(rid=i, tokens=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),

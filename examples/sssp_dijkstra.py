@@ -10,7 +10,10 @@
 4. Batches several graphs through one jitted multi-instance engine
    (run_sssp_batched) and compares against the sequential per-graph loop.
 """
-import sys, os, argparse, time
+import argparse
+import os
+import sys
+import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np

@@ -7,7 +7,9 @@ hundred steps on the learnable synthetic stream, with checkpoints.
 tied embeddings (params ≈ 0.1 B). Loss should fall well below ln(V) as the
 model learns the affine next-token rule.
 """
-import sys, os, argparse, dataclasses
+import argparse
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs.base import ModelConfig

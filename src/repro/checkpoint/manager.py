@@ -12,7 +12,7 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Callable, List, Optional, Tuple
+from typing import Any, List, Optional, Tuple
 
 import jax
 import numpy as np

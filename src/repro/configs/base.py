@@ -103,7 +103,7 @@ class ModelConfig:
         return self.attn_pattern[layer % len(self.attn_pattern)]
 
     def block_kinds(self) -> Tuple[str, ...]:
-        return tuple(self.block_kind(l) for l in range(self.num_layers))
+        return tuple(self.block_kind(i) for i in range(self.num_layers))
 
     def supports_decode(self) -> bool:
         return self.causal             # encoder-only archs have no decode step

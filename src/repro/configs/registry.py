@@ -5,7 +5,6 @@ Every assigned arch has a module in repro/configs/<id>.py exporting CONFIG
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib
 from typing import Dict, List, Tuple
 

@@ -14,6 +14,7 @@ from repro.core.kpriority import (  # noqa: F401
     visibility,
 )
 from repro.core import batched  # noqa: F401
+from repro.core import sharded_batch  # noqa: F401
 from repro.core.engine import (  # noqa: F401
     SSSPBatchRun,
     SSSPRun,

@@ -72,14 +72,42 @@ def phase_pop(
     topk_backend: str = "auto",
     block_size: int = 1024,
 ) -> Tuple[kp.PoolState, kp.PopResult]:
-    """Batched :func:`kpriority.phase_pop` — one phase on all B instances."""
-    fn = functools.partial(
-        kp.phase_pop,
-        num_places=num_places, k=k, policy=policy,
-        arbitration=arbitration, topk_backend=topk_backend,
-        block_size=block_size,
+    """Batched :func:`kpriority.phase_pop` — one phase on all B instances.
+
+    The default ``"fused"`` arbitration is NATIVELY batched: the
+    pre-arbitration half (steal/spy/visibility/permutation — pure jnp) is
+    vmapped, then both stages of the fused selection run once for the whole
+    batch — stage 1 as ONE ``relaxed_topk_batched`` kernel launch (2-D grid
+    over (instance, block)) and the stage-2 per-place fallback fused into the
+    same batched program — instead of a vmap-lifted per-instance kernel.
+    Instance b stays bit-identical to the unbatched op on instance b alone
+    (tests/test_batched.py, tests/test_sharded_batch.py). The legacy
+    ``"scan"`` arbitration keeps the documented blanket-vmap form.
+    """
+    if arbitration != "fused":
+        fn = functools.partial(
+            kp.phase_pop,
+            num_places=num_places, k=k, policy=policy,
+            arbitration=arbitration, topk_backend=topk_backend,
+            block_size=block_size,
+        )
+        return jax.vmap(fn)(state, key)
+
+    prepare = functools.partial(
+        kp.phase_prepare, num_places=num_places, k=k, policy=policy
     )
-    return jax.vmap(fn)(state, key)
+    state, vis, order = jax.vmap(prepare)(state, key)    # vis[B,P,M] order[B,P]
+    common = jax.vmap(
+        functools.partial(kp.common_visibility, k=k, policy=policy)
+    )(state)                                             # bool[B, M]
+    c = kp.fused_selection_c(
+        policy, k, num_places, state.prio.shape[1], block_size
+    )
+    slots, valid, taken = kp.fused_assign_batched(
+        vis, common, state.prio, order,
+        c=c, block_size=block_size, backend=topk_backend,
+    )
+    return kp.phase_commit(state, slots, valid, taken)
 
 
 def ignored_count(

@@ -131,12 +131,8 @@ def _summarize_run(
 # batched multi-graph driver
 # ---------------------------------------------------------------------------
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("num_places", "k", "policy", "arbitration", "topk_backend"),
-)
-def _phase_batched(state, keys, ws, finals, *, num_places, k, policy,
-                   arbitration, topk_backend):
+def _phase_batched_impl(state, keys, ws, finals, *, num_places, k, policy,
+                        arbitration, topk_backend):
     """One joint phase over all G graphs. The per-graph PRNG chain (split,
     use the second half) matches ``run_sssp``'s host-side chain exactly."""
 
@@ -151,6 +147,62 @@ def _phase_batched(state, keys, ws, finals, *, num_places, k, policy,
     return jax.vmap(one)(state, keys, ws, finals)
 
 
+def _phase_chunk_impl(state, keys, ws, finals, *, chunk, num_places, k,
+                      policy, arbitration, topk_backend):
+    """``chunk`` joint phases as ONE dispatch (lax.scan over the phase step).
+
+    Per-phase stats come back stacked ([chunk, G] leaves) so the host loop
+    still sees every phase; phases past a graph's drain are the documented
+    no-op ride-along (empty pool ⇒ nothing pops, nothing pushes), so chunking
+    never changes per-graph trajectories — it only amortizes the dispatch
+    (and, under ``mesh=``, the multi-device launch) overhead across chunk
+    phases.
+    """
+    def step(carry, _):
+        st, ks = carry
+        st, stats, ks = _phase_batched_impl(
+            st, ks, ws, finals, num_places=num_places, k=k, policy=policy,
+            arbitration=arbitration, topk_backend=topk_backend,
+        )
+        return (st, ks), stats
+
+    (state, keys), stats = jax.lax.scan(
+        step, (state, keys), None, length=chunk
+    )
+    return state, stats, keys
+
+
+_phase_chunk = functools.partial(
+    jax.jit,
+    static_argnames=("chunk", "num_places", "k", "policy", "arbitration",
+                     "topk_backend"),
+)(_phase_chunk_impl)
+
+
+@functools.lru_cache(maxsize=None)
+def _phase_chunk_sharded(mesh, chunk, num_places, k, policy, arbitration,
+                         topk_backend):
+    """shard_map form of ``_phase_chunk``: graphs spread over the mesh's
+    ``batch`` axis, each device advancing its G/D graphs through ``chunk``
+    phases with the same batched program (zero cross-device traffic —
+    instances are independent, see core/sharded_batch.py)."""
+    from jax.sharding import PartitionSpec as PS
+
+    from repro.core.sharded_batch import BATCH_AXIS, _shard_map
+
+    local = functools.partial(
+        _phase_chunk_impl, chunk=chunk, num_places=num_places, k=k,
+        policy=policy, arbitration=arbitration, topk_backend=topk_backend,
+    )
+    f = _shard_map(
+        local, mesh=mesh,
+        in_specs=(PS(BATCH_AXIS),) * 4,
+        # stats leaves are [chunk, G]: batch axis is dim 1 there
+        out_specs=(PS(BATCH_AXIS), PS(None, BATCH_AXIS), PS(BATCH_AXIS)),
+    )
+    return jax.jit(f)
+
+
 def run_sssp_batched(
     ws: np.ndarray,                     # [G, n, n] stacked weight matrices
     *,
@@ -162,13 +214,32 @@ def run_sssp_batched(
     finals: Optional[np.ndarray] = None,  # [G, n] oracle distances
     arbitration: str = "fused",
     topk_backend: str = "auto",
+    mesh=None,
+    phase_chunk: Optional[int] = None,
 ) -> SSSPBatchRun:
     """Run G graphs × one policy as a single jitted batched program.
 
     ``seeds[g]`` seeds graph g's PRNG chain (default ``range(G)``), matching
     ``run_sssp(ws[g], seed=seeds[g], ...)`` bit-for-bit on distances and
     per-phase statistics.
+
+    ``mesh`` (a ``batch``-axis mesh, e.g. ``launch.mesh.make_batch_mesh()``)
+    shards the graph batch across devices: G/D graphs per device, same joint
+    phase loop, zero cross-device traffic, bit-identical per-graph results
+    (tests/test_sharded_batch.py). G need not divide D — the batch is padded
+    with inert empty graphs (drained after their first pop) and the padding
+    never appears in the returned runs.
+
+    ``phase_chunk`` fuses that many joint phases into one dispatch
+    (lax.scan); per-phase stats and per-graph trajectories are unchanged —
+    only the dispatch overhead amortizes. Defaults to 1 unsharded (keeps
+    ``joint_phases`` == max per-graph phases) and 16 under ``mesh=`` (the
+    multi-device launch overhead is what the chunk exists to bury).
     """
+    if phase_chunk is None:
+        phase_chunk = 1 if mesh is None else 16
+    if phase_chunk < 1:
+        raise ValueError(f"phase_chunk must be >= 1, got {phase_chunk}")
     ws = np.asarray(ws)
     num_graphs = ws.shape[0]
     if seeds is None:
@@ -178,6 +249,22 @@ def run_sssp_batched(
     if finals is None:
         finals = np.stack([ss.dijkstra_ref(w) for w in ws])
 
+    pad = 0
+    if mesh is not None:
+        from repro.core.sharded_batch import batch_axis_size
+
+        pad = -num_graphs % batch_axis_size(mesh)
+    if pad:
+        n = ws.shape[1]
+        # inert padding: no edges => the source task pops once, nothing
+        # improves, the instance drains and rides along as no-op phases
+        w_inert = np.full((pad, n, n), np.inf, np.float32)
+        f_inert = np.full((pad, n), np.inf, np.float64)
+        f_inert[:, 0] = 0.0
+        ws = np.concatenate([ws, w_inert], axis=0)
+        finals = np.concatenate([finals, f_inert.astype(finals.dtype)], axis=0)
+        seeds = list(seeds) + list(range(pad))
+
     t0 = time.time()
     wj = jnp.asarray(ws)
     fj = jnp.asarray(finals)
@@ -186,21 +273,34 @@ def run_sssp_batched(
     )(wj)
     keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
 
+    def phase_fn(chunk, state, keys):
+        if mesh is None:
+            return _phase_chunk(
+                state, keys, wj, fj, chunk=chunk, num_places=num_places,
+                k=k, policy=policy, arbitration=arbitration,
+                topk_backend=topk_backend,
+            )
+        return _phase_chunk_sharded(
+            mesh, chunk, num_places, k, policy, arbitration, topk_backend,
+        )(state, keys, wj, fj)
+
     cols = {f: [] for f in ss.PhaseStats._fields}   # each entry: [G] per phase
-    done_at = np.full((num_graphs,), -1, np.int64)  # phase index where drained
+    done_at = np.full((num_graphs + pad,), -1, np.int64)
     phases = 0
     while phases < max_phases:
-        state, stats, keys = _phase_batched(
-            state, keys, wj, fj, num_places=num_places, k=k, policy=policy,
-            arbitration=arbitration, topk_backend=topk_backend,
-        )
-        stats = jax.device_get(stats)
-        for f in ss.PhaseStats._fields:
-            cols[f].append(getattr(stats, f))
-        drained = (stats.active == 0) & (stats.relaxed == 0)
-        newly = (done_at < 0) & drained
-        done_at[newly] = phases
-        phases += 1
+        # shrink the final chunk so execution stops exactly at max_phases —
+        # a chunked run truncates bit-identically to an unchunked one (the
+        # tail chunk costs one extra compile, and only when the cap is hit)
+        chunk = min(phase_chunk, max_phases - phases)
+        state, stats, keys = phase_fn(chunk, state, keys)
+        stats = jax.device_get(stats)              # leaves [chunk, G]
+        for t in range(chunk):
+            for f in ss.PhaseStats._fields:
+                cols[f].append(getattr(stats, f)[t])
+            drained = (stats.active[t] == 0) & (stats.relaxed[t] == 0)
+            newly = (done_at < 0) & drained
+            done_at[newly] = phases
+            phases += 1
         if (done_at >= 0).all():
             break
     done_at[done_at < 0] = phases - 1   # max_phases hit: truncate at the end

@@ -35,13 +35,12 @@ places), `k` and the policy are static.
 from __future__ import annotations
 
 import enum
-import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.relaxed_topk import topk_select
+from repro.kernels.relaxed_topk import topk_select_batched
 
 INF = jnp.inf
 
@@ -232,6 +231,79 @@ def _greedy_assign(
     return slots, valid, taken
 
 
+def fused_assign_batched(
+    vis: jnp.ndarray,      # bool[B, P, M]
+    common: jnp.ndarray,   # bool[B, M]
+    prio: jnp.ndarray,     # f32[B, M]
+    order: jnp.ndarray,    # i32[B, P]
+    *,
+    c: int,
+    block_size: int,
+    backend: str,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused two-stage arbitration for B pool instances at once (replaces the
+    O(P) sequential scan; the single-instance form is the B = 1 slice).
+
+    Stage 1 — ONE ``relaxed_topk_batched`` call (2-D Pallas grid over
+    (instance, block)) selects the (ρ-relaxed) top-P of each instance's
+    *commonly visible* priorities; rank j is handed to place ``order[b, j]``.
+    This is exact (c = P) for IDEAL/CENTRALIZED and block-local top-c for
+    HYBRID, mirroring the hybrid structure's per-place publication budget.
+
+    Stage 2 — places the selection left empty fall back to their best
+    *per-place* visible item (own/spied/stolen tasks). The fallback is fused
+    into the same batched selection program (batched argmin + scatter-min
+    claim resolution): no per-instance host-side Python, no vmap-lifted
+    kernel. Conflicting claims are resolved in ``order``: the lowest-rank
+    claimant wins, losers idle one phase — the deterministic analogue of the
+    paper's spurious CAS failure.
+
+    Preserves the structural ρ-relaxation bound per instance (proof sketch in
+    DESIGN.md §3.2): the worst-popping place q either popped in stage 2
+    (every better unpopped item is invisible to q, of which there are ≤ ρ) or
+    in stage 1 (better unpopped items are ≤ max(0, P−c) selection-ignored
+    commons plus the non-common items, which the policy bounds by ρ).
+
+    Returns (slot[B, P], valid[B, P], taken[B, M]) indexed by place.
+    """
+    batch, num_places, m = vis.shape
+    b_ix = jnp.arange(batch, dtype=jnp.int32)[:, None]   # [B, 1] batch index
+
+    # ---- stage 1: one kernel launch — top-P over every common set --------
+    scores = jnp.where(common, -prio, -INF)              # larger = better
+    top_v, top_i = topk_select_batched(
+        scores, num_places, c=c, block_size=block_size, backend=backend
+    )
+    rank_valid = top_v > -INF                            # [B, P] by rank
+    rank_slot = jnp.where(rank_valid, top_i, 0).astype(jnp.int32)
+    s1_slot = jnp.zeros((batch, num_places), jnp.int32).at[
+        b_ix, order].set(rank_slot)
+    s1_valid = jnp.zeros((batch, num_places), bool).at[
+        b_ix, order].set(rank_valid)
+    taken1 = jnp.zeros((batch, m), bool).at[b_ix, rank_slot].max(rank_valid)
+
+    # ---- stage 2: per-place fallback with order-rank conflict resolution -
+    avail = vis & ~taken1[:, None, :]                    # [B, P, M]
+    scores2 = jnp.where(avail, prio[:, None, :], INF)
+    cand = jnp.argmin(scores2, axis=2).astype(jnp.int32)            # [B, P]
+    cand_valid = jnp.isfinite(jnp.min(scores2, axis=2)) & ~s1_valid
+    rank_of = jnp.zeros((batch, num_places), jnp.int32).at[b_ix, order].set(
+        jnp.broadcast_to(
+            jnp.arange(num_places, dtype=jnp.int32), (batch, num_places)
+        )
+    )
+    claim = jnp.where(cand_valid, rank_of, num_places)
+    best_claim = jnp.full((batch, m), num_places, jnp.int32).at[
+        b_ix, cand].min(claim)
+    win = cand_valid & (jnp.take_along_axis(best_claim, cand, axis=1)
+                        == rank_of)
+
+    slots = jnp.where(s1_valid, s1_slot, jnp.where(win, cand, 0))
+    valid = s1_valid | win
+    taken = taken1.at[b_ix, jnp.where(win, cand, 0)].max(win)
+    return slots, valid, taken
+
+
 def _fused_assign(
     vis: jnp.ndarray,
     common: jnp.ndarray,
@@ -242,55 +314,13 @@ def _fused_assign(
     block_size: int,
     backend: str,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Fused two-stage arbitration (replaces the O(P) sequential scan).
-
-    Stage 1 — one ``relaxed_topk`` call selects the (ρ-relaxed) top-P of the
-    *commonly visible* priorities; rank j is handed to place ``order[j]``.
-    This is exact (c = P) for IDEAL/CENTRALIZED and block-local top-c for
-    HYBRID, mirroring the hybrid structure's per-place publication budget.
-
-    Stage 2 — places the selection left empty fall back to their best
-    *per-place* visible item (own/spied/stolen tasks). Conflicting claims are
-    resolved in ``order``: the lowest-rank claimant wins, losers idle one
-    phase — the deterministic analogue of the paper's spurious CAS failure.
-
-    Preserves the structural ρ-relaxation bound (proof sketch in DESIGN.md
-    §3.2): the worst-popping place q either popped in stage 2 (every better
-    unpopped item is invisible to q, of which there are ≤ ρ) or in stage 1
-    (better unpopped items are ≤ max(0, P−c) selection-ignored commons plus
-    the non-common items, which the policy bounds by ρ).
-
-    Returns (slot[P], valid[P], taken[M]) indexed by place.
-    """
-    num_places, m = vis.shape
-
-    # ---- stage 1: kernel-backed top-P over the common set ----------------
-    scores = jnp.where(common, -prio, -INF)           # larger = better
-    top_v, top_i = topk_select(
-        scores, num_places, c=c, block_size=block_size, backend=backend
+    """Single-instance fused arbitration — the B = 1 slice of
+    :func:`fused_assign_batched` (one implementation, no drift)."""
+    slots, valid, taken = fused_assign_batched(
+        vis[None], common[None], prio[None], order[None],
+        c=c, block_size=block_size, backend=backend,
     )
-    rank_valid = top_v > -INF                          # [P] by rank
-    rank_slot = jnp.where(rank_valid, top_i, 0).astype(jnp.int32)
-    s1_slot = jnp.zeros((num_places,), jnp.int32).at[order].set(rank_slot)
-    s1_valid = jnp.zeros((num_places,), bool).at[order].set(rank_valid)
-    taken1 = jnp.zeros((m,), bool).at[rank_slot].max(rank_valid)
-
-    # ---- stage 2: per-place fallback with order-rank conflict resolution -
-    avail = vis & ~taken1[None, :]                     # [P, M]
-    scores2 = jnp.where(avail, prio, INF)
-    cand = jnp.argmin(scores2, axis=1).astype(jnp.int32)          # [P]
-    cand_valid = jnp.isfinite(jnp.min(scores2, axis=1)) & ~s1_valid
-    rank_of = jnp.zeros((num_places,), jnp.int32).at[order].set(
-        jnp.arange(num_places, dtype=jnp.int32)
-    )
-    claim = jnp.where(cand_valid, rank_of, num_places)
-    best_claim = jnp.full((m,), num_places, jnp.int32).at[cand].min(claim)
-    win = cand_valid & (best_claim[cand] == rank_of)
-
-    slots = jnp.where(s1_valid, s1_slot, jnp.where(win, cand, 0))
-    valid = s1_valid | win
-    taken = taken1.at[jnp.where(win, cand, 0)].max(win)
-    return slots, valid, taken
+    return slots[0], valid[0], taken[0]
 
 
 def _selection_c(policy: Policy, k: int, num_places: int, num_blocks: int) -> int:
@@ -365,6 +395,57 @@ def _spy(
     return vis | new_refs, spied
 
 
+def phase_prepare(
+    state: PoolState,
+    key: jax.Array,
+    *,
+    num_places: int,
+    k: int,
+    policy: Policy,
+) -> Tuple[PoolState, jnp.ndarray, jnp.ndarray]:
+    """Pre-arbitration half of a phase: steal (WS), visibility, spying
+    (HYBRID), and the phase's random arbitration permutation. Returns
+    (state, vis[P, M], order[P]). Shared by the single-instance
+    :func:`phase_pop` and the natively-batched engine (core/batched.py
+    vmaps exactly this, so the per-instance PRNG chain is identical)."""
+    k_steal, k_spy, k_order = jax.random.split(key, 3)
+    if policy is Policy.WORK_STEALING:
+        state = _steal_half(state, k_steal, num_places)
+    vis = visibility(state, num_places=num_places, k=k, policy=policy)
+    if policy is Policy.HYBRID:
+        vis, spied = _spy(state, vis, k_spy, num_places)
+        state = state._replace(spied=spied)
+    order = jax.random.permutation(k_order, num_places).astype(jnp.int32)
+    return state, vis, order
+
+
+def phase_commit(
+    state: PoolState,
+    slots: jnp.ndarray,
+    valid: jnp.ndarray,
+    taken: jnp.ndarray,
+) -> Tuple[PoolState, PopResult]:
+    """Post-arbitration half: deactivate taken slots, assemble the PopResult.
+    Rank-polymorphic — works on single ([M]/[P]) and batched ([B, M]/[B, P])
+    layouts alike (``take_along_axis`` on the trailing axis)."""
+    new_state = state._replace(
+        active=state.active & ~taken,
+        prio=jnp.where(taken, INF, state.prio),
+    )
+    prios = jnp.where(
+        valid, jnp.take_along_axis(state.prio, slots, axis=-1), INF
+    )
+    return new_state, PopResult(slot=slots, prio=prios, valid=valid)
+
+
+def fused_selection_c(
+    policy: Policy, k: int, num_places: int, num_slots: int, block_size: int
+) -> int:
+    """Resolve the fused stage-1 per-block budget for a pool of M slots."""
+    num_blocks = -(-num_slots // block_size)
+    return _selection_c(policy, k, num_places, num_blocks)
+
+
 def phase_pop(
     state: PoolState,
     key: jax.Array,
@@ -384,33 +465,23 @@ def phase_pop(
     legacy sequential O(P) greedy scan, kept as the equivalence oracle.
     Both are bit-identical under IDEAL and preserve ignored ≤ ρ everywhere.
     """
-    k_steal, k_spy, k_order = jax.random.split(key, 3)
-    if policy is Policy.WORK_STEALING:
-        state = _steal_half(state, k_steal, num_places)
-    vis = visibility(state, num_places=num_places, k=k, policy=policy)
-    if policy is Policy.HYBRID:
-        vis, spied = _spy(state, vis, k_spy, num_places)
-        state = state._replace(spied=spied)
-    order = jax.random.permutation(k_order, num_places).astype(jnp.int32)
+    state, vis, order = phase_prepare(
+        state, key, num_places=num_places, k=k, policy=policy
+    )
     if arbitration == "scan":
         slots, valid, taken = _greedy_assign(vis, state.prio, order)
     elif arbitration == "fused":
         common = common_visibility(state, k=k, policy=policy)
-        m = state.prio.shape[0]
-        num_blocks = -(-m // block_size)
-        c = _selection_c(policy, k, num_places, num_blocks)
+        c = fused_selection_c(
+            policy, k, num_places, state.prio.shape[0], block_size
+        )
         slots, valid, taken = _fused_assign(
             vis, common, state.prio, order,
             c=c, block_size=block_size, backend=topk_backend,
         )
     else:
         raise ValueError(f"unknown arbitration: {arbitration!r}")
-    new_state = state._replace(
-        active=state.active & ~taken,
-        prio=jnp.where(taken, INF, state.prio),
-    )
-    prios = jnp.where(valid, state.prio[slots], INF)
-    return new_state, PopResult(slot=slots, prio=prios, valid=valid)
+    return phase_commit(state, slots, valid, taken)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,347 @@
+"""Device-sharded batched k-priority engine: B pool instances over D devices.
+
+The batched engine (core/batched.py) advances B independent instances in one
+XLA program on ONE device. This module is the next scale step the paper's
+argument calls for: because instances are independent, the batch axis shards
+with ZERO cross-device traffic — ``shard_map`` over a ``batch`` mesh axis
+places B/D instances per device, each advanced by the same natively-batched
+program (one fused-arbitration kernel launch per device per phase). This is
+the Multi-Queues / k-LSM move ("distribute, then relax the ordering to bound
+coordination") with the coordination bound taken to its limit: the instances
+never coordinate at all, and the ρ-relaxation lives entirely inside each
+instance's fused arbitration.
+
+Layouts compose: a (batch × place) mesh runs B instances of the
+explicit-collective engine (core/distributed.py), each spanning its own
+``place`` sub-mesh — instance-parallel on ``batch``, the ρ-bounded
+publication/proposal collectives confined to ``place``
+(:func:`make_engine_batched`).
+
+Bit-identity contract (tests/test_sharded_batch.py): sharded == single-device
+batched == per-instance loop, including the B % D != 0 case, which pads with
+inert instances (empty pools — no pops, no pushes) and slices them back off.
+
+Run ``python -m repro.core.sharded_batch --selftest`` under
+XLA_FLAGS=--xla_force_host_platform_device_count=8.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as PS
+
+from repro.core import batched
+from repro.core import kpriority as kp
+from repro.launch.mesh import BATCH_AXIS
+
+# jax.shard_map is the post-0.4.x spelling; fall back to the experimental one
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def batch_axis_size(mesh: Mesh) -> int:
+    return mesh.shape[BATCH_AXIS]
+
+
+# ---------------------------------------------------------------------------
+# padding: B % D != 0 rides along as inert instances
+# ---------------------------------------------------------------------------
+
+def pad_batch_tree(tree, batch: int, multiple: int, pad_tree):
+    """Pad every leaf's leading ``batch`` dim up to a multiple of ``multiple``
+    by appending rows from ``pad_tree`` (an inert-instance tree of the same
+    structure with any leading dim >= the padding)."""
+    pad = -batch % multiple
+    if pad == 0:
+        return tree
+    return jax.tree.map(
+        lambda x, f: jnp.concatenate([x, f[:pad]], axis=0), tree, pad_tree
+    )
+
+
+def unpad_batch_tree(tree, batch: int):
+    return jax.tree.map(lambda x: x[:batch], tree)
+
+
+def inert_pool(num_slots: int, num_places: int, batch: int) -> kp.PoolState:
+    """Fresh (empty) pool instances: no active tasks, so a phase on them pops
+    nothing and pushes nothing — safe batch padding."""
+    return batched.init_pool(num_slots, num_places, batch=batch)
+
+
+# ---------------------------------------------------------------------------
+# sharded phase_pop
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _sharded_phase_pop_fn(
+    mesh: Mesh,
+    num_places: int,
+    k: int,
+    policy: kp.Policy,
+    arbitration: str,
+    topk_backend: str,
+    block_size: int,
+):
+    """Build (and cache per config) the jitted shard_map phase program: each
+    device advances its local B/D instances with the natively-batched engine
+    — one fused-arbitration kernel launch per device, no collectives."""
+
+    def local(state, keys):
+        return batched.phase_pop(
+            state, keys, num_places=num_places, k=k, policy=policy,
+            arbitration=arbitration, topk_backend=topk_backend,
+            block_size=block_size,
+        )
+
+    f = _shard_map(
+        local, mesh=mesh,
+        in_specs=(PS(BATCH_AXIS), PS(BATCH_AXIS)),
+        out_specs=(PS(BATCH_AXIS), PS(BATCH_AXIS)),
+    )
+    return jax.jit(f)
+
+
+def phase_pop_sharded(
+    state: kp.PoolState,
+    keys: jax.Array,          # [B] batch of PRNG keys
+    *,
+    mesh: Mesh,
+    num_places: int,
+    k: int,
+    policy: kp.Policy,
+    arbitration: str = "fused",
+    topk_backend: str = "auto",
+    block_size: int = 1024,
+) -> Tuple[kp.PoolState, kp.PopResult]:
+    """Batched :func:`kpriority.phase_pop` sharded over ``mesh``'s batch axis.
+
+    Bit-identical to :func:`batched.phase_pop` on one device (instances never
+    interact, so sharding the batch axis only changes placement). B need not
+    divide the device count: the batch is padded with inert instances and the
+    padding is sliced off the result.
+    """
+    b = state.prio.shape[0]
+    d = batch_axis_size(mesh)
+    pad = -b % d
+    if pad:
+        m, p = state.prio.shape[1], state.unpub_pushes.shape[1]
+        state = pad_batch_tree(state, b, d, inert_pool(m, p, pad))
+        keys = jnp.concatenate([keys, jnp.zeros((pad, 2), keys.dtype)], axis=0)
+    fn = _sharded_phase_pop_fn(
+        mesh, num_places, k, policy, arbitration, topk_backend, block_size
+    )
+    new_state, res = fn(state, keys)
+    if pad:
+        new_state = unpad_batch_tree(new_state, b)
+        res = unpad_batch_tree(res, b)
+    return new_state, res
+
+
+# ---------------------------------------------------------------------------
+# batch × place composition: B instances of the explicit-collective engine
+# ---------------------------------------------------------------------------
+
+def make_engine_batched(mesh: Mesh, m_loc: int, g_cap: int, k: int, k_buf: int):
+    """B instances of the shard_map hybrid engine (core/distributed.py) on a
+    (batch × place) mesh: state leaves are [B, P, ...]; the ``batch`` axis is
+    collective-free, the per-phase publication/proposal all_gathers run over
+    ``place`` only. Returns jitted (state, pushes) ->
+    (state, popped_ids [B, P], popped_prios [B, P])."""
+    from repro.core import distributed as dist
+
+    spec = PS(BATCH_AXIS, dist.AXIS)
+
+    @functools.partial(
+        _shard_map, mesh=mesh,
+        in_specs=(spec, (spec, spec)),
+        out_specs=(spec, spec, spec),
+    )
+    def step(state, pushes):
+        st = jax.tree.map(lambda a: a[0, 0], state)   # drop (batch, place)
+        prios, tids = pushes
+
+        def body(s, xy):
+            pr, ti = xy
+            return jax.lax.cond(
+                ti >= 0, lambda ss: dist._push_local(ss, pr, ti),
+                lambda ss: ss, s,
+            ), None
+
+        st, _ = jax.lax.scan(body, st, (prios[0, 0], tids[0, 0]))
+        st, pid, pprio = dist.phase(st, k, k_buf)
+        st = jax.tree.map(lambda a: a[None, None], st)
+        return st, pid[None, None], pprio[None, None]
+
+    return jax.jit(step)
+
+
+# ---------------------------------------------------------------------------
+# selftest (subprocess: device count locks at jax init)
+# ---------------------------------------------------------------------------
+
+def _assert_trees_equal(a, b, msg):  # pragma: no cover - selftest helper
+    import numpy as np
+
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=msg)
+
+
+def _selftest_pool_bit_identity(nbatch: int):  # pragma: no cover
+    """phase_pop_sharded == batched.phase_pop, bit-for-bit, over a multi-phase
+    push/pop trace (covers the padded B % D != 0 path when nbatch % D != 0)."""
+    import numpy as np
+
+    from repro.launch.mesh import make_batch_mesh
+
+    mesh = make_batch_mesh()
+    m, places, k, phases = 96, 4, 3, 6
+    policy = kp.Policy.HYBRID
+    rng = np.random.default_rng(11)
+    st_ref = batched.init_pool(m, places, batch=nbatch)
+    st_shard = batched.init_pool(m, places, batch=nbatch)
+
+    for t in range(phases):
+        mask = jnp.asarray(rng.random((nbatch, m)) < 0.2)
+        prios = jnp.asarray(rng.random((nbatch, m)).astype(np.float32))
+        creators = jnp.asarray(
+            rng.integers(0, places, (nbatch, m)).astype(np.int32))
+        push_keys = jnp.stack(
+            [jax.random.PRNGKey(100 * t + b) for b in range(nbatch)])
+        pop_keys = jnp.stack(
+            [jax.random.PRNGKey(900 * t + b) for b in range(nbatch)])
+        st_ref = batched.push(
+            st_ref, mask, prios, creators, k=k, policy=policy, key=push_keys)
+        st_shard = batched.push(
+            st_shard, mask, prios, creators, k=k, policy=policy, key=push_keys)
+        st_ref, res_ref = batched.phase_pop(
+            st_ref, pop_keys, num_places=places, k=k, policy=policy)
+        st_shard, res_shard = phase_pop_sharded(
+            st_shard, pop_keys, mesh=mesh,
+            num_places=places, k=k, policy=policy)
+        _assert_trees_equal(res_ref, res_shard, f"B={nbatch} phase {t} result")
+        _assert_trees_equal(st_ref, st_shard, f"B={nbatch} phase {t} state")
+    print(f"SHARDED_POOL_OK B={nbatch} D={batch_axis_size(mesh)}")
+
+
+def _selftest_sssp_bit_identity(graphs: int):  # pragma: no cover
+    """run_sssp_batched(mesh=) == run_sssp_batched() per graph."""
+    import numpy as np
+
+    from repro.core.engine import run_sssp_batched
+    from repro.core.sssp import dijkstra_ref, make_er_graph
+    from repro.launch.mesh import make_batch_mesh
+
+    ws = np.stack([make_er_graph(40 + g, 60, 0.15) for g in range(graphs)])
+    finals = np.stack([dijkstra_ref(w) for w in ws])
+    kwargs = dict(num_places=4, k=2, policy=kp.Policy.HYBRID,
+                  seeds=list(range(graphs)), finals=finals)
+    ref = run_sssp_batched(ws, **kwargs)
+    shard = run_sssp_batched(ws, mesh=make_batch_mesh(), **kwargs)
+    assert len(shard.runs) == graphs
+    for g in range(graphs):
+        np.testing.assert_array_equal(shard.runs[g].dist, ref.runs[g].dist)
+        assert shard.runs[g].phases == ref.runs[g].phases, g
+        assert shard.runs[g].total_relaxed == ref.runs[g].total_relaxed, g
+        assert shard.runs[g].total_pushes == ref.runs[g].total_pushes, g
+        assert shard.runs[g].correct
+    print(f"SHARDED_SSSP_OK G={graphs}")
+
+
+def _selftest_batch_place(nbatch: int, nplace: int):  # pragma: no cover
+    """Exactly-once per instance on the composed (batch × place) engine."""
+    import numpy as np
+
+    from repro.core import distributed as dist
+    from repro.launch.mesh import make_batch_place_mesh
+
+    mesh = make_batch_place_mesh(nbatch, nplace)
+    m_loc, g_cap, k, k_buf = 32, 256, 3, 8
+    engine = make_engine_batched(mesh, m_loc, g_cap, k, k_buf)
+    state = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (nbatch, nplace) + a.shape),
+        dist.init_state(m_loc, g_cap),
+    )
+    rng = np.random.default_rng(5)
+    n_push = 4
+    pushed = [set() for _ in range(nbatch)]
+    popped = [[] for _ in range(nbatch)]
+    tid = 0
+    for phase_i in range(120):
+        pr = np.full((nbatch, nplace, n_push), np.inf, np.float32)
+        ti = np.full((nbatch, nplace, n_push), -1, np.int32)
+        if phase_i < 5:
+            for b in range(nbatch):
+                for pl in range(nplace):
+                    for j in range(rng.integers(1, n_push)):
+                        pr[b, pl, j] = rng.random()
+                        ti[b, pl, j] = tid
+                        pushed[b].add(tid)
+                        tid += 1
+        state, pid, _ = engine(state, (jnp.asarray(pr), jnp.asarray(ti)))
+        ids = np.asarray(pid)
+        for b in range(nbatch):
+            popped[b].extend(int(i) for i in ids[b].ravel() if i >= 0)
+        if phase_i >= 5 and not (ids >= 0).any():
+            break
+    for b in range(nbatch):
+        assert sorted(popped[b]) == sorted(pushed[b]), (
+            f"instance {b}: {len(popped[b])} popped vs {len(pushed[b])} pushed")
+    print(f"BATCH_PLACE_OK B={nbatch} P={nplace}")
+
+
+def _selftest_serve_mesh():  # pragma: no cover
+    """ServeEngine(mesh=) must emit token streams identical to the unsharded
+    engine (decode is argmax-deterministic; slot axis shards D ways)."""
+    import numpy as np
+
+    from repro.configs import get_reduced
+    from repro.launch.mesh import make_batch_mesh
+    from repro.models import materialize, model_p
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_reduced("qwen3_1_7b")
+    params = materialize(jax.random.PRNGKey(0), model_p(cfg))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+               for _ in range(6)]
+
+    def run(mesh):
+        eng = ServeEngine(cfg, params, slots=len(jax.devices()), max_len=32,
+                          frontends=2, k=2, mesh=mesh)
+        for i, toks in enumerate(prompts):
+            eng.submit(Request(rid=i, tokens=toks, max_new=4,
+                               priority=float(i)), frontend=i % 2)
+        eng.flush_frontends()
+        return {r.rid: r.out for r in eng.run()}
+
+    ref = run(None)
+    sharded = run(make_batch_mesh())
+    assert ref.keys() == sharded.keys()
+    for rid in ref:
+        assert ref[rid] == sharded[rid], (rid, ref[rid], sharded[rid])
+    print(f"SERVE_MESH_OK slots={len(jax.devices())}")
+
+
+def selftest() -> None:  # pragma: no cover - exercised via subprocess
+    d = len(jax.devices())
+    _selftest_pool_bit_identity(d)            # B divisible by D
+    _selftest_pool_bit_identity(d - 2)        # B % D != 0: padded path
+    _selftest_sssp_bit_identity(d)
+    _selftest_sssp_bit_identity(d - 3)        # padded SSSP batch
+    if d >= 8:
+        _selftest_batch_place(2, 4)
+    _selftest_serve_mesh()
+    print(f"SHARDED_OK devices={d}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--selftest" in sys.argv:
+        selftest()

@@ -12,7 +12,7 @@ are pushed with the place that produced the improvement as creator.
 from __future__ import annotations
 
 import heapq
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -109,7 +109,6 @@ def sssp_phase(
     topk_backend: str = "auto",
 ) -> Tuple[SSSPState, PhaseStats]:
     """One phase: every place pops + relaxes its best visible node."""
-    n = w.shape[0]
     k_pop, k_push = jax.random.split(key)
     pool, res = kp.phase_pop(
         state.pool, k_pop, num_places=num_places, k=k, policy=policy,

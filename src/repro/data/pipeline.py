@@ -10,7 +10,7 @@ the same trade the paper makes for scalability, applied to data selection.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -79,9 +79,9 @@ def _flash_kernel(
 
     @pl.when(ik == num_kv_blocks - 1)
     def _finalize():
-        l = l_ref[:, :1]
+        lsum = l_ref[:, :1]
         o_ref[0, 0] = jnp.where(
-            l > 0, acc_ref[...] / jnp.where(l > 0, l, 1.0), 0.0
+            lsum > 0, acc_ref[...] / jnp.where(lsum > 0, lsum, 1.0), 0.0
         ).astype(o_ref.dtype)
 
 

@@ -1,9 +1,11 @@
 """Jitted public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True (this container validates on CPU); on real TPU
-pass ``interpret=False``. The model stack selects kernels via
-``ModelConfig.attention_impl`` — the dry-run/roofline path always uses the
-pure-XLA implementations (see DESIGN.md §7.2).
+``relaxed_topk``'s ``interpret`` defaults to None, which resolves through the
+backend logic (compiled on TPU, interpret elsewhere — see kernels/
+relaxed_topk.py). ``flash_attention`` still defaults to interpret=True (this
+container validates on CPU); pass ``interpret=False`` on real TPU. The model
+stack selects kernels via ``ModelConfig.attention_impl`` — the dry-run/
+roofline path always uses the pure-XLA implementations (see DESIGN.md §7.2).
 """
 from __future__ import annotations
 
@@ -15,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.relaxed_topk import relaxed_topk as _rtopk
+from repro.kernels.relaxed_topk import relaxed_topk_batched as _rtopk_batched
 
 
 @functools.partial(
@@ -25,10 +28,25 @@ def relaxed_topk(
     p: int,
     c: Optional[int] = None,
     block_size: int = 1024,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """ρ-relaxed top-p (ρ = max(0, p-c)); see kernels/relaxed_topk.py."""
     return _rtopk(x, p, c=c, block_size=block_size, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("p", "c", "block_size", "interpret")
+)
+def relaxed_topk_batched(
+    x: jnp.ndarray,
+    p: int,
+    c: Optional[int] = None,
+    block_size: int = 1024,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched ρ-relaxed top-p ([B, N] → [B, p]), one 2-D-grid kernel launch
+    for all B instances; see kernels/relaxed_topk.py."""
+    return _rtopk_batched(x, p, c=c, block_size=block_size, interpret=interpret)
 
 
 @functools.partial(

@@ -43,6 +43,35 @@ def relaxed_topk_ref(
     return top_v, top_i
 
 
+def relaxed_topk_batched_ref(
+    x: jnp.ndarray, p: int, *, c: int | None = None, block_size: int = 1024
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched oracle ([B, N] → [B, p]): per-instance block top-c then exact
+    per-instance top-p, all along trailing axes so row b is bit-identical to
+    :func:`relaxed_topk_ref` on ``x[b]`` alone."""
+    if c is None:
+        c = p
+    batch, n = x.shape
+    n_pad = -n % block_size
+    xp = jnp.pad(
+        x.astype(jnp.float32), ((0, 0), (0, n_pad)), constant_values=NEG_INF
+    )
+    nb = xp.shape[1] // block_size
+    c_eff = min(c, block_size)
+    blocks = xp.reshape(batch, nb, block_size)
+    bv, bi = jax.lax.top_k(blocks, c_eff)                       # [B, nb, c]
+    gi = bi + (jnp.arange(nb) * block_size)[None, :, None]
+    flat_v = bv.reshape(batch, -1)
+    flat_i = gi.reshape(batch, -1).astype(jnp.int32)
+    top_v, pos = jax.lax.top_k(flat_v, min(p, flat_v.shape[1]))
+    top_i = jnp.take_along_axis(flat_i, pos, axis=1)
+    if top_v.shape[1] < p:
+        pad = p - top_v.shape[1]
+        top_v = jnp.pad(top_v, ((0, 0), (0, pad)), constant_values=NEG_INF)
+        top_i = jnp.pad(top_i, ((0, 0), (0, pad)), constant_values=-1)
+    return top_v, top_i
+
+
 def exact_topk_ref(x: jnp.ndarray, p: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
     v, i = jax.lax.top_k(x.astype(jnp.float32), p)
     return v, i.astype(jnp.int32)

@@ -31,6 +31,15 @@ from jax.experimental import pallas as pl
 NEG_INF = float("-inf")
 
 
+def _default_interpret() -> bool:
+    """Backend-derived default for ``interpret=`` (mirrors ``topk_select``'s
+    backend logic exactly): compiled Pallas on TPU only — the kernel is
+    written for Mosaic (lane-aligned reshapes, scalar stores) and has never
+    been validated under a Triton lowering — interpret mode everywhere else
+    (CPU/GPU; interpret is the validation vehicle, DESIGN.md §7.2)."""
+    return jax.default_backend() != "tpu"
+
+
 def _block_topc_kernel(x_ref, vals_ref, idx_ref, *, c: int, block_size: int):
     """Extract the top-c values (+global indices) of one block.
 
@@ -69,14 +78,19 @@ def relaxed_topk(
     *,
     c: int | None = None,
     block_size: int = 1024,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """ρ-relaxed top-p of a 1-D priority array.
 
     Returns (values[p], indices[p]) sorted descending. ρ = max(0, p - c).
     ``x`` is padded with -inf to a multiple of ``block_size`` (padding can
-    never be selected unless p > N).
+    never be selected unless p > N). ``interpret=None`` (default) resolves
+    through the backend logic (:func:`_default_interpret`): compiled on
+    TPU, interpret elsewhere — a direct caller on TPU gets the compiled
+    kernel, not silent interpret-mode Pallas.
     """
+    if interpret is None:
+        interpret = _default_interpret()
     if c is None:
         c = p  # exact by default
     n = x.shape[0]
@@ -114,6 +128,106 @@ def relaxed_topk(
 
 
 # ---------------------------------------------------------------------------
+# natively-batched kernel: B instances × NB blocks as one 2-D grid
+# ---------------------------------------------------------------------------
+
+def _block_topc_kernel_batched(
+    x_ref, vals_ref, idx_ref, *, c: int, block_size: int
+):
+    """Per-(instance, block) top-c. Grid axis 0 is the instance, axis 1 the
+    block; the block body is identical to :func:`_block_topc_kernel` with the
+    block index taken from grid axis 1, so row b of the batched kernel is
+    bit-identical to the 1-D kernel on instance b alone."""
+    j = pl.program_id(1)
+    rows = block_size // 128
+    x = x_ref[...].reshape(rows, 128).astype(jnp.float32)
+    base = j * block_size
+    gidx = (
+        jax.lax.broadcasted_iota(jnp.int32, (rows, 128), 0) * 128
+        + jax.lax.broadcasted_iota(jnp.int32, (rows, 128), 1)
+        + base
+    )
+
+    def body(i, carry):
+        x, = carry
+        m = jnp.max(x)
+        is_max = x >= m
+        cand_idx = jnp.where(is_max, gidx, jnp.iinfo(jnp.int32).max)
+        jj = jnp.min(cand_idx)
+        vals_ref[0, 0, i] = m
+        idx_ref[0, 0, i] = jj
+        x = jnp.where(gidx == jj, NEG_INF, x)
+        return (x,)
+
+    jax.lax.fori_loop(0, c, body, (x,))
+
+
+def relaxed_topk_batched(
+    x: jnp.ndarray,
+    p: int,
+    *,
+    c: int | None = None,
+    block_size: int = 1024,
+    interpret: bool | None = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """ρ-relaxed top-p of B independent priority arrays — ONE kernel launch.
+
+    ``x`` is [B, N]; returns (values[B, p], indices[B, p]), row b bit-identical
+    to ``relaxed_topk(x[b], p, ...)``. The Pallas grid is 2-D over
+    (instance, block): all B instances' block-local top-c extractions run in
+    the same launch (no per-instance host-side Python, no vmap-lifted kernel),
+    then one batched exact top-p merges each row's B·c candidates.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    if c is None:
+        c = p
+    batch, n = x.shape
+    assert block_size % 128 == 0, "block_size must be lane-aligned (128)"
+    n_pad = -n % block_size
+    xp = jnp.pad(
+        x.astype(jnp.float32), ((0, 0), (0, n_pad)), constant_values=NEG_INF
+    )
+    nb = xp.shape[1] // block_size
+    c_eff = min(c, block_size)
+
+    vals, idx = pl.pallas_call(
+        functools.partial(
+            _block_topc_kernel_batched, c=c_eff, block_size=block_size
+        ),
+        grid=(batch, nb),
+        in_specs=[pl.BlockSpec((1, block_size), lambda b, j: (b, j))],
+        out_specs=[
+            pl.BlockSpec((1, 1, c_eff), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, 1, c_eff), lambda b, j: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((batch, nb, c_eff), jnp.float32),
+            jax.ShapeDtypeStruct((batch, nb, c_eff), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xp)
+
+    return _merge_topp_batched(vals, idx, p)
+
+
+def _merge_topp_batched(
+    vals: jnp.ndarray, idx: jnp.ndarray, p: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact per-row top-p over each instance's [nb, c] candidates (tiny)."""
+    batch = vals.shape[0]
+    flat_v = vals.reshape(batch, -1)
+    flat_i = idx.reshape(batch, -1)
+    top_v, pos = jax.lax.top_k(flat_v, min(p, flat_v.shape[1]))
+    top_i = jnp.take_along_axis(flat_i, pos, axis=1)
+    if top_v.shape[1] < p:  # degenerate: fewer candidates than p
+        pad = p - top_v.shape[1]
+        top_v = jnp.pad(top_v, ((0, 0), (0, pad)), constant_values=NEG_INF)
+        top_i = jnp.pad(top_i, ((0, 0), (0, pad)), constant_values=-1)
+    return top_v, top_i
+
+
+# ---------------------------------------------------------------------------
 # backend-selecting entry point (used by core.kpriority's fused arbitration)
 # ---------------------------------------------------------------------------
 
@@ -146,6 +260,35 @@ def topk_select(
         return relaxed_topk_ref(x, p, c=c, block_size=block_size)
     if backend in ("pallas", "pallas_interpret"):
         return relaxed_topk(
+            x, p, c=c, block_size=block_size,
+            interpret=(backend == "pallas_interpret"),
+        )
+    raise ValueError(f"unknown topk backend: {backend!r}")
+
+
+def topk_select_batched(
+    x: jnp.ndarray,
+    p: int,
+    *,
+    c: int | None = None,
+    block_size: int = 1024,
+    backend: str = "auto",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched ρ-relaxed top-p ([B, N] → [B, p]) with explicit backend choice.
+
+    Same backend semantics as :func:`topk_select`; row b of every backend is
+    bit-identical to the single-instance call on ``x[b]`` (pinned in
+    tests/test_sharded_batch.py), and the Pallas backends run all B instances
+    as ONE 2-D-grid kernel launch.
+    """
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        from repro.kernels.ref import relaxed_topk_batched_ref
+
+        return relaxed_topk_batched_ref(x, p, c=c, block_size=block_size)
+    if backend in ("pallas", "pallas_interpret"):
+        return relaxed_topk_batched(
             x, p, c=c, block_size=block_size,
             interpret=(backend == "pallas_interpret"),
         )

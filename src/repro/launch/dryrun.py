@@ -11,11 +11,10 @@ print memory/cost analysis, extract roofline terms (DESIGN.md §e/§g).
   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 
@@ -29,7 +28,6 @@ from repro.models import (
 from repro.models import shard as lshard
 from repro.optim import adamw
 from repro.roofline.analysis import roofline
-from repro.roofline.hlo_stats import hlo_stats
 
 _BREAKDOWN = False
 from repro.train.loop import TrainState, make_train_step

@@ -44,3 +44,27 @@ def logical_rules(multi_pod: bool = False) -> Dict[str, object]:
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for multi-device unit tests (host platform)."""
     return jax.make_mesh(shape, axes, **axis_types_kwargs(len(axes)))
+
+
+BATCH_AXIS = "batch"
+
+
+def make_batch_mesh(num_devices: int | None = None):
+    """1-D mesh over the ``batch`` axis: B independent scheduler/pool
+    instances spread across D devices with zero cross-device traffic between
+    instances (core/sharded_batch.py). Defaults to all local devices."""
+    d = len(jax.devices()) if num_devices is None else num_devices
+    return jax.make_mesh((d,), (BATCH_AXIS,), **axis_types_kwargs(1))
+
+
+def make_batch_place_mesh(batch: int, place: int):
+    """2-D (batch × place) mesh composing the instance axis with the
+    explicit-collective engine's ``place`` axis (core/distributed.py): B
+    scheduler instances, each spanning ``place`` devices. Instance traffic is
+    zero on ``batch``; the ρ-bounded publication/proposal collectives of each
+    instance stay inside its ``place`` sub-mesh."""
+    from repro.core.distributed import AXIS as PLACE_AXIS
+
+    return jax.make_mesh(
+        (batch, place), (BATCH_AXIS, PLACE_AXIS), **axis_types_kwargs(2)
+    )

@@ -3,8 +3,6 @@ fallback (a dim that doesn't divide its mesh axes is replicated — e.g. the
 batch=1 long_500k cell)."""
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
@@ -45,6 +43,23 @@ def tree_shardings(abstract_tree, logical_spec_tree, mesh: Mesh):
     assert len(flat_a) == len(flat_s), (len(flat_a), len(flat_s))
     resolved = [resolve(a, s, mesh) for a, s in zip(flat_a, flat_s)]
     return jax.tree.unflatten(jax.tree.structure(abstract_tree), resolved)
+
+
+def batch_shardings(tree, mesh: Mesh, axis: str = "batch"):
+    """NamedSharding tree sharding every leaf's LEADING dim over ``axis``
+    (the multi-instance batch layout of core/batched.py), with the same
+    divisibility fallback as :func:`resolve` — a leaf whose leading dim does
+    not divide the axis (or a scalar leaf) is replicated."""
+    size = mesh.shape[axis]
+
+    def one(x):
+        if x.ndim >= 1 and x.shape[0] % size == 0:
+            spec = PartitionSpec(axis, *(None,) * (x.ndim - 1))
+        else:
+            spec = PartitionSpec()
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, tree)
 
 
 def opt_state_pspecs(param_pspecs, eightbit: bool):

@@ -9,8 +9,7 @@ dry-run so cost_analysis sees every FLOP (DESIGN.md §7.2).
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -87,8 +86,8 @@ def blockwise_attention(
             jnp.zeros((b, hkv, g, bq, 1), F32),
             jnp.zeros((b, hkv, g, bq, dv), F32),
         )
-        (m, l, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
-        return jnp.where(l > 0, acc / jnp.where(l > 0, l, 1.0), 0.0)
+        (m, lsum, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        return jnp.where(lsum > 0, acc / jnp.where(lsum > 0, lsum, 1.0), 0.0)
 
     out = jax.lax.map(q_block, jnp.arange(nq))             # [nq,B,Hkv,G,Bq,Dv]
     out = jnp.moveaxis(out, 0, 3).reshape(b, hq, nq * bq, dv)

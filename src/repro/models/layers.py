@@ -1,8 +1,7 @@
 """Shared layers: norms, RoPE/M-RoPE, MLPs, embeddings, chunked loss."""
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ keeping parameters, shapes and shardings impossible to drift apart.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

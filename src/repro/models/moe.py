@@ -17,7 +17,6 @@ same block-local-top-c construction as kernels/relaxed_topk.
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
@@ -26,7 +25,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, MoEConfig
 from repro.models import shard
 from repro.models.layers import mlp, mlp_p
-from repro.models.module import FSDP, TENSOR, P
+from repro.models.module import P
 
 F32 = jnp.float32
 

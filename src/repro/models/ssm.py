@@ -75,9 +75,9 @@ def _segsum(a):
     """a: [..., Q] -> L[..., i, j] = sum_{j<m<=i} a_m, -inf above diagonal."""
     q = a.shape[-1]
     cs = jnp.cumsum(a, axis=-1)
-    l = cs[..., :, None] - cs[..., None, :]
+    lmat = cs[..., :, None] - cs[..., None, :]
     i = jnp.arange(q)
-    return jnp.where(i[:, None] >= i[None, :], l, -jnp.inf)
+    return jnp.where(i[:, None] >= i[None, :], lmat, -jnp.inf)
 
 
 def ssd_scan(

@@ -13,8 +13,7 @@ Three entry points:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +26,7 @@ from repro.models.attention import (
 from repro.models.layers import (
     chunked_softmax_xent, embed, embed_p, mlp, mlp_p, rmsnorm, rmsnorm_p,
 )
-from repro.models.module import DATA, FSDP, P, TENSOR, abstract, materialize, pspecs, stack
+from repro.models.module import DATA, FSDP, P, TENSOR, stack
 from repro.models.moe import moe_forward, moe_p
 from repro.models.rglru import rglru_forward, rglru_p
 from repro.models.ssm import ssm_forward, ssm_p

@@ -7,8 +7,7 @@ axis), the standard trick that makes 671B-param optimizer state fit v5e HBM
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -16,8 +16,7 @@ the whole active batch.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,12 +47,35 @@ class ServeEngine:
         max_len: int = 512,
         frontends: int = 4,
         k: int = 4,
+        mesh=None,
     ):
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
         self.queue = HybridKQueue(frontends, k)
         self.frontends = frontends
         self.caches = init_cache(cfg, slots, max_len)
+        self.mesh = mesh
+        if mesh is not None:
+            # decode data-parallelism: shard the slot axis (dim 1 of every
+            # cache leaf) over the mesh's batch axis so each device decodes
+            # slots/D sequences per step; admission stays host-side (the
+            # hybrid k-priority queue is the uncoordinated control plane).
+            # Leaves whose slot dim doesn't divide the axis are replicated
+            # (same divisibility fallback as launch/sharding.py).
+            from jax.sharding import NamedSharding, PartitionSpec as PS
+
+            from repro.core.sharded_batch import BATCH_AXIS, batch_axis_size
+
+            d = batch_axis_size(mesh)
+
+            def shard_slots(x):
+                spec = (
+                    PS(None, BATCH_AXIS)
+                    if x.ndim >= 2 and x.shape[1] % d == 0 else PS()
+                )
+                return jax.device_put(x, NamedSharding(mesh, spec))
+
+            self.caches = jax.tree.map(shard_slots, self.caches)
         self.cur_tok = np.zeros((slots,), np.int32)
         self.pos = np.zeros((slots,), np.int32)
         self.active: List[Optional[Request]] = [None] * slots

@@ -3,9 +3,8 @@ driver (checkpoint/resume, deterministic restart), metrics log."""
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -47,12 +46,12 @@ def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, grad_accum: in
         else:
             def micro(carry, mb):
                 g_acc, l_acc = carry
-                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                (lval, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
                     state.params, mb
                 )
                 g_acc = jax.tree.map(
                     lambda a, b: a + b.astype(a.dtype), g_acc, g)
-                return (g_acc, l_acc + l), None
+                return (g_acc, l_acc + lval), None
 
             def split_mb(key_, x):
                 if key_ == "positions":   # m-rope: (3, B, S) — batch is dim 1

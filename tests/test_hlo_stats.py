@@ -2,9 +2,8 @@
 multiplication, collective accounting."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.roofline.hlo_stats import HloStats, hlo_stats
+from repro.roofline.hlo_stats import hlo_stats
 
 
 def test_scan_matmul_flops_exact():

@@ -1,7 +1,6 @@
 """Model correctness: per-arch smoke, prefill+decode == full-context
 consistency, MoE vs dense-dispatch oracle, SSD vs naive recurrence,
 RG-LRU associative vs sequential scan."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

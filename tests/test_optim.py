@@ -80,7 +80,6 @@ def test_ef_compression_preserves_signal():
 
 
 def test_compressed_psum_single_member():
-    f = jax.jit(lambda x: compressed_psum(x, "i"))
     # axis of size 1 via vmap
     x = jax.random.normal(jax.random.PRNGKey(1), (1, 64))
     out = jax.vmap(lambda v: compressed_psum(v, "i"), axis_name="i")(x)

@@ -2,7 +2,6 @@
 ρ-bounded admission inversions."""
 import jax
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.host_queue import HybridKQueue
