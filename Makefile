@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-full bench-smoke example lint
+.PHONY: test test-fast bench bench-full bench-smoke example lint docs-check
 
 # tier-1 verify (ROADMAP.md): full suite, stop at first failure
 test:
@@ -20,6 +20,10 @@ lint:
 # fast loop: deselect the slow training/system tests (marker in pytest.ini)
 test-fast:
 	$(PY) -m pytest -x -q -m "not slow"
+
+# docs gate: README module map must import, DESIGN.md section refs must resolve
+docs-check:
+	$(PY) -m pytest -x -q tests/test_docs.py
 
 bench:
 	$(PY) -m benchmarks.run

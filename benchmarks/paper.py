@@ -182,6 +182,95 @@ def sharded_speedup(n=800, p=0.2, graphs=8, places=8, k=8, phase_chunk=16):
     return rows
 
 
+def admission_throughput(requests=2000, frontends=4, k=4, fold_every=32,
+                         repeats=3):
+    """Serving admission throughput: host ``HybridKQueue`` vs the
+    device-resident ``StreamingAdmitter`` (DESIGN.md §9), same request trace,
+    same admission order (asserted per run — the equivalence contract of
+    tests/test_streaming.py is re-checked here, not assumed).
+
+    The trace pushes ``requests`` items round-robin across ``frontends``
+    (priorities from a coarse grid so ties exercise the uid tie-break),
+    folding the device buffers every ``fold_every`` pushes (the engine folds
+    once per decode step), then drains everything via pops. ``push_us`` is
+    the front-end cost per push, ``pop_us`` the per-admission cost,
+    ``us_per_call`` the full push+fold+pop cycle per request. On a CPU host
+    the device plane pays a dispatch premium per op — the point of the
+    section is tracking the *trajectory* of that premium (on TPU the fold
+    and pops ride device programs and the host queue's serialization is the
+    bottleneck at fleet scale)."""
+    import jax
+
+    from repro.core.host_queue import HybridKQueue
+    from repro.serve.streaming import StreamingAdmitter
+
+    rng = np.random.default_rng(0)
+    trace = [
+        (i % frontends, float(rng.integers(0, 64)) / 8.0)
+        for i in range(requests)
+    ]
+
+    def run_host():
+        q = HybridKQueue(frontends, k, spy="min_index")
+        t0 = time.time()
+        for uid, (p, pr) in enumerate(trace):
+            q.push(p, pr, uid)
+        t_push = time.time() - t0
+        for p in range(frontends):
+            q.flush(p)
+        order = []
+        t0 = time.time()
+        p = 0
+        while len(q):
+            r = q.pop(p % frontends)
+            p += 1
+            if r is not None:
+                order.append(r[1])
+        t_pop = time.time() - t0
+        return t_push, t_pop, order
+
+    def run_device():
+        adm = StreamingAdmitter(frontends, k, capacity=requests,
+                                buffer_cap=max(fold_every, 2 * frontends))
+        t0 = time.time()
+        for uid, (p, pr) in enumerate(trace):
+            adm.push(p, pr, uid)
+            if (uid + 1) % fold_every == 0:
+                adm.fold()
+        jax.block_until_ready(adm.buf.count)
+        t_push = time.time() - t0
+        adm.flush()
+        order = []
+        t0 = time.time()
+        p = 0
+        while len(adm):
+            r = adm.pop(p % frontends)
+            p += 1
+            if r is not None:
+                order.append(r[1])
+        t_pop = time.time() - t0
+        return t_push, t_pop, order
+
+    rows = []
+    for name, fn in (("host", run_host), ("device", run_device)):
+        fn()                                        # warm (compile) pass
+        best = min((fn() for _ in range(repeats)), key=lambda r: r[0] + r[1])
+        t_push, t_pop, order = best
+        rows.append({
+            "fig": "admission", "plane": name, "requests": requests,
+            "frontends": frontends, "k": k, "fold_every": fold_every,
+            "push_us": round(t_push * 1e6 / requests, 2),
+            "pop_us": round(t_pop * 1e6 / requests, 2),
+            "order": order,
+            "us_per_call": round((t_push + t_pop) * 1e6 / requests, 2),
+        })
+    assert rows[0]["order"] == rows[1]["order"], "admission order diverged"
+    for r in rows:
+        r["order_len"] = len(r.pop("order"))
+        r["order_identical"] = True
+    return rows
+
+
 def batched_speedup(n=1000, p=0.2, graphs=6, places=8, k=8):
     """Batched multi-graph engine vs a sequential per-graph loop (same seeds,
     same policy; run g of the batch is bit-identical to sequential run g,

@@ -66,6 +66,9 @@ def main() -> None:
         "sharded_speedup": lambda: paper.sharded_speedup(
             n=1600 if args.full else (400 if args.smoke else 800),
             graphs=8),
+        "admission": lambda: paper.admission_throughput(
+            requests=5000 if args.full else (400 if args.smoke else 2000),
+            repeats=1 if args.smoke else 3),
         "relaxed_topk": (
             (lambda: kernels_bench.bench_relaxed_topk(n=1 << 13, p=64,
                                                       cs=(64, 8)))

@@ -9,8 +9,11 @@ from repro.core.kpriority import (  # noqa: F401
     ignored_count,
     init_pool,
     phase_pop,
+    publish,
     push,
+    push_batch,
     rho_bound,
+    stream_pop,
     visibility,
 )
 from repro.core import batched  # noqa: F401

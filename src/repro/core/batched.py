@@ -51,6 +51,42 @@ def push(
     return jax.vmap(fn)(state, mask, prios, creators, key)
 
 
+def push_batch(
+    state: kp.PoolState,
+    mask: jnp.ndarray,        # bool[B, M]
+    prios: jnp.ndarray,       # f32[B, M]
+    creators: jnp.ndarray,    # i32[B, M]
+    *,
+    key: Optional[jax.Array] = None,   # [B] batch of PRNG keys, or None
+    tie: Optional[jnp.ndarray] = None,  # f32/i32[B, M] explicit seq order
+) -> kp.PoolState:
+    """Batched :func:`kpriority.push_batch` — stage items into each of the B
+    instances without publishing (DESIGN.md §4, §9). Pair with
+    :func:`publish` to make them visible; instance b stays bit-identical to
+    the unbatched op on instance b alone."""
+    if key is None and tie is None:
+        return jax.vmap(kp.push_batch)(state, mask, prios, creators)
+    if tie is not None:
+        def fn_tie(s, m, p, c, t):
+            return kp.push_batch(s, m, p, c, tie=t)
+
+        return jax.vmap(fn_tie)(state, mask, prios, creators, tie)
+
+    def fn_key(s, m, p, c, kk):
+        return kp.push_batch(s, m, p, c, key=kk)
+
+    return jax.vmap(fn_key)(state, mask, prios, creators, key)
+
+
+def publish(
+    state: kp.PoolState, *, k: int, force: bool = False
+) -> kp.PoolState:
+    """Batched :func:`kpriority.publish` — publish-on-k (or flush, with
+    ``force``) independently in each instance; preserves ignored ≤ P·k per
+    instance (DESIGN.md §2, §9)."""
+    return jax.vmap(functools.partial(kp.publish, k=k, force=force))(state)
+
+
 def visibility(
     state: kp.PoolState, *, num_places: int, k: int, policy: kp.Policy
 ) -> jnp.ndarray:

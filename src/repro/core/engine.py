@@ -31,6 +31,11 @@ from repro.core import sssp as ss
 
 @dataclasses.dataclass
 class SSSPRun:
+    """Per-run summary of one SSSP trajectory (the paper's Figs. 3–5 raw
+    material; DESIGN.md §5). ``max_ignored`` is the observed per-phase
+    ρ-relaxation — the §2 bound demands it never exceed
+    ``rho_bound(policy, k, P)``."""
+
     dist: np.ndarray
     phases: int
     total_relaxed: int
@@ -76,7 +81,12 @@ def run_sssp(
     arbitration: str = "fused",
     topk_backend: str = "auto",
 ) -> SSSPRun:
-    """Run the parallel SSSP under a scheduling policy until no active tasks."""
+    """Run the parallel SSSP under a scheduling policy until no active tasks
+    (DESIGN.md §5; ``w`` f32[n, n] dense weights, ``final`` f64[n] oracle
+    distances). One jitted phase per dispatch; per-phase stats are collected
+    host-side (the paper's Figs. 3–5 evaluation). The phase inherits the
+    policy's ignored ≤ ρ guarantee (§2) — ``max_ignored`` in the result is
+    the observed value."""
     if final is None:
         final = ss.dijkstra_ref(w)
     wj = jnp.asarray(w)
@@ -217,7 +227,9 @@ def run_sssp_batched(
     mesh=None,
     phase_chunk: Optional[int] = None,
 ) -> SSSPBatchRun:
-    """Run G graphs × one policy as a single jitted batched program.
+    """Run G graphs × one policy as a single jitted batched program
+    (DESIGN.md §4; ``ws`` f32[G, n, n], ``finals`` f64[G, n]). Per-graph
+    ρ guarantees are untouched — batching/sharding only change placement.
 
     ``seeds[g]`` seeds graph g's PRNG chain (default ``range(G)``), matching
     ``run_sssp(ws[g], seed=seeds[g], ...)`` bit-for-bit on distances and

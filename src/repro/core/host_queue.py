@@ -14,9 +14,21 @@ from typing import Any, List, Optional, Tuple
 
 
 class HybridKQueue:
-    def __init__(self, num_places: int, k: int, seed: int = 0):
+    """Sequential host-side hybrid k-priority queue (DESIGN.md §2 row HYBRID,
+    §9). ``spy="random"`` (default) picks a uniform random victim, as the
+    paper's lock-free structure does; ``spy="min_index"`` picks the
+    lowest-index victim — the deterministic choice the device-resident
+    admission path (serve/streaming.py) mirrors, so host and device admission
+    orders can be compared bit-for-bit. Either choice preserves the
+    ρ = P·k ordering bound; only tie-breaking among victims differs."""
+
+    def __init__(self, num_places: int, k: int, seed: int = 0,
+                 spy: str = "random"):
+        if spy not in ("random", "min_index"):
+            raise ValueError(f"unknown spy policy: {spy!r}")
         self.num_places = num_places
         self.k = k
+        self.spy = spy
         self._rng = random.Random(seed)
         self._counter = itertools.count()
         self._local: List[List[tuple]] = [[] for _ in range(num_places)]
@@ -72,7 +84,7 @@ class HybridKQueue:
             ]
             if not victims:
                 return None
-            v = self._rng.choice(victims)
+            v = victims[0] if self.spy == "min_index" else self._rng.choice(victims)
             for rec in self._local[v]:
                 if rec[1] not in self._taken:
                     heapq.heappush(h, rec)

@@ -79,6 +79,10 @@ class PopResult(NamedTuple):
 
 
 def init_pool(num_slots: int, num_places: int) -> PoolState:
+    """Fresh empty pool: M = ``num_slots`` task slots, P = ``num_places``
+    places (DESIGN.md §1). Leaf shapes as documented on :class:`PoolState`;
+    an empty pool is inert — a phase on it pops nothing (the batch-padding
+    property §8 relies on)."""
     return PoolState(
         prio=jnp.full((num_slots,), INF, jnp.float32),
         active=jnp.zeros((num_slots,), bool),
@@ -95,6 +99,91 @@ def init_pool(num_slots: int, num_places: int) -> PoolState:
 # push
 # ---------------------------------------------------------------------------
 
+def push_batch(
+    state: PoolState,
+    mask: jnp.ndarray,
+    prios: jnp.ndarray,
+    creators: jnp.ndarray,
+    *,
+    key: Optional[jax.Array] = None,
+    tie: Optional[jnp.ndarray] = None,
+) -> PoolState:
+    """Stage a batch of items into the pool WITHOUT publishing (DESIGN.md §9).
+
+    This is the streaming half of :func:`push`: the functional analogue of
+    ``HybridKQueue.push`` appending to a place's *local list*. Items are
+    written to their slots, marked unpublished, and each creator's
+    ``unpub_pushes`` counter advances — but no publication decision is taken;
+    pair with :func:`publish` (phase granularity) or a stream-accurate fold
+    (serve/streaming.py) to make them globally visible. Pure jnp and
+    jit/vmap/shard_map-compatible.
+
+    Shapes: ``mask`` bool[M] selects slots to (over)write (an already-active
+    slot is overwritten — eager dead-task elimination, §1); ``prios`` f32[M],
+    ``creators`` i32[M]. Sequence numbers are assigned within the batch in
+    ascending ``tie`` order when given (f32[M] or i32[M]; e.g. the exact
+    arrival index for streaming admission — integer ties are ranked without
+    a float cast, so uid order survives past 2^24), else in a random order
+    from ``key`` (the paper's simulator shuffles new nodes), else by slot
+    index.
+    """
+    m = mask.shape[0]
+    # --- sequence-number assignment ------------------------------------
+    if tie is None:
+        if key is not None:
+            tie = jax.random.uniform(key, (m,))
+        else:
+            tie = jnp.arange(m, dtype=jnp.float32) / m
+    # rank new items among themselves: items not in the batch rank last.
+    if jnp.issubdtype(tie.dtype, jnp.integer):
+        order_key = jnp.where(mask, tie, jnp.iinfo(tie.dtype).max)
+    else:
+        order_key = jnp.where(mask, tie, jnp.inf)
+    rank = jnp.argsort(jnp.argsort(order_key)).astype(jnp.int32)  # 0..m-1
+    new_seq = state.next_seq + rank
+    n_new = jnp.sum(mask).astype(jnp.int32)
+
+    creator = jnp.where(mask, creators.astype(jnp.int32), state.creator)
+    num_places = state.unpub_pushes.shape[0]
+    counts = jnp.zeros((num_places,), jnp.int32).at[
+        jnp.where(mask, creator, 0)
+    ].add(mask.astype(jnp.int32))
+
+    return PoolState(
+        prio=jnp.where(mask, prios, state.prio),
+        active=state.active | mask,
+        creator=creator,
+        seq=jnp.where(mask, new_seq, state.seq),
+        published=jnp.where(mask, False, state.published),
+        unpub_pushes=state.unpub_pushes + counts,
+        next_seq=state.next_seq + n_new,
+        # a re-pushed slot is a NEW task: stale spy refs die with the old one
+        spied=jnp.where(mask[None, :], False, state.spied),
+    )
+
+
+def publish(state: PoolState, *, k: int, force: bool = False) -> PoolState:
+    """Publish-on-k at phase granularity (DESIGN.md §2, §9): every place whose
+    ``unpub_pushes`` counter has reached ``k`` (all places when ``force`` —
+    the ``HybridKQueue.flush`` analogue) publishes its whole local list, i.e.
+    all its active unpublished items become visible to every place, and its
+    counter resets.
+
+    The paper publishes after *exactly* k pushes; publishing a whole phase's
+    accumulation at once only tightens the structural bound (a place still
+    holds ≤ k−1 unpublished items after any publish, so ignored ≤ P·k is
+    preserved). Pure jnp, jit/vmap/shard_map-compatible; pairs with
+    :func:`push_batch` — ``publish(push_batch(s, ...), k=k)`` is exactly the
+    HYBRID :func:`push`.
+    """
+    pub_place = (state.unpub_pushes >= k) | force          # bool[P]
+    item_pub = pub_place[state.creator] & state.active
+    return state._replace(
+        published=state.published | item_pub,
+        unpub_pushes=jnp.where(pub_place, 0, state.unpub_pushes),
+    )
+
+
 def push(
     state: PoolState,
     mask: jnp.ndarray,
@@ -105,62 +194,33 @@ def push(
     policy: Policy,
     key: Optional[jax.Array] = None,
 ) -> PoolState:
-    """Batch-push items into the pool (one phase's spawned tasks).
+    """Batch-push items into the pool (one phase's spawned tasks; DESIGN.md
+    §1–§2).
 
     ``mask[m]`` selects slots to (over)write; an already-active slot is
     overwritten (dead-task elimination). Sequence numbers are assigned in a
     random order within the batch when ``key`` is given (the paper's simulator
     shuffles new nodes before assigning sequence ids), else by slot index.
+
+    Composition of the streaming pair: :func:`push_batch` stages the items,
+    then HYBRID applies :func:`publish` (publish-on-k ⇒ ignored ≤ P·k);
+    IDEAL/CENTRALIZED mark items published immediately (visibility is derived
+    from ``seq`` for CENTRALIZED, so ρ = 0 resp. k); WORK_STEALING never
+    publishes (ρ = ∞).
     """
-    m = mask.shape[0]
-    # --- sequence-number assignment ------------------------------------
-    if key is not None:
-        tie = jax.random.uniform(key, (m,))
-    else:
-        tie = jnp.arange(m, dtype=jnp.float32) / m
-    # rank new items among themselves: items not in the batch rank last.
-    order_key = jnp.where(mask, tie, jnp.inf)
-    rank = jnp.argsort(jnp.argsort(order_key)).astype(jnp.int32)  # 0..m-1
-    new_seq = state.next_seq + rank
-    n_new = jnp.sum(mask).astype(jnp.int32)
-
-    prio = jnp.where(mask, prios, state.prio)
-    active = state.active | mask
-    creator = jnp.where(mask, creators.astype(jnp.int32), state.creator)
-    seq = jnp.where(mask, new_seq, state.seq)
-    published = jnp.where(mask, False, state.published)
-    # a re-pushed slot is a NEW task: stale spy refs die with the old one
-    spied = jnp.where(mask[None, :], False, state.spied)
-    unpub = state.unpub_pushes
-
+    unpub_before = state.unpub_pushes
+    state = push_batch(state, mask, prios, creators, key=key)
     if policy is Policy.HYBRID:
-        num_places = state.unpub_pushes.shape[0]
-        counts = jnp.zeros((num_places,), jnp.int32).at[
-            jnp.where(mask, creator, 0)
-        ].add(mask.astype(jnp.int32))
-        new_unpub = unpub + counts
-        # Phase-granularity publication: once a place has accumulated >= k
-        # unpublished pushes it publishes its whole local list (the paper
-        # publishes after exactly k pushes; publishing *more* only tightens
-        # the structural rho-relaxation bound, see DESIGN.md §2).
-        pub_place = new_unpub >= k                      # bool[P]
-        item_pub = pub_place[creator] & active
-        published = published | item_pub
-        unpub = jnp.where(pub_place, 0, new_unpub)
-    elif policy in (Policy.IDEAL, Policy.CENTRALIZED):
-        published = published | mask  # bookkeeping only; visibility is derived
+        return publish(state, k=k)
+    if policy in (Policy.IDEAL, Policy.CENTRALIZED):
+        # bookkeeping only (visibility is derived); the unpub counters are
+        # HYBRID-only state — keep them untouched on the non-streaming paths
+        return state._replace(
+            published=state.published | mask,
+            unpub_pushes=unpub_before,
+        )
     # WORK_STEALING: never published.
-
-    return PoolState(
-        prio=prio,
-        active=active,
-        creator=creator,
-        seq=seq,
-        published=published,
-        unpub_pushes=unpub,
-        next_seq=state.next_seq + n_new,
-        spied=spied,
-    )
+    return state._replace(unpub_pushes=unpub_before)
 
 
 # ---------------------------------------------------------------------------
@@ -168,7 +228,8 @@ def push(
 # ---------------------------------------------------------------------------
 
 def visibility(state: PoolState, *, num_places: int, k: int, policy: Policy) -> jnp.ndarray:
-    """bool[P, M] — task m visible to place p under the policy."""
+    """bool[P, M] — task m visible to place p under the policy (the DESIGN.md
+    §2 table; what a pop may not see is exactly what the ρ bound counts)."""
     places = jnp.arange(num_places, dtype=jnp.int32)[:, None]       # [P,1]
     own = state.creator[None, :] == places                           # [P,M]
     act = state.active[None, :]
@@ -403,11 +464,12 @@ def phase_prepare(
     k: int,
     policy: Policy,
 ) -> Tuple[PoolState, jnp.ndarray, jnp.ndarray]:
-    """Pre-arbitration half of a phase: steal (WS), visibility, spying
-    (HYBRID), and the phase's random arbitration permutation. Returns
-    (state, vis[P, M], order[P]). Shared by the single-instance
-    :func:`phase_pop` and the natively-batched engine (core/batched.py
-    vmaps exactly this, so the per-instance PRNG chain is identical)."""
+    """Pre-arbitration half of a phase (DESIGN.md §3): steal (WS),
+    visibility, spying (HYBRID), and the phase's random arbitration
+    permutation. Returns (state, vis[P, M], order[P]). Shared by the
+    single-instance :func:`phase_pop` and the natively-batched engine
+    (core/batched.py vmaps exactly this, so the per-instance PRNG chain is
+    identical — the §4 bit-identity contract)."""
     k_steal, k_spy, k_order = jax.random.split(key, 3)
     if policy is Policy.WORK_STEALING:
         state = _steal_half(state, k_steal, num_places)
@@ -425,9 +487,10 @@ def phase_commit(
     valid: jnp.ndarray,
     taken: jnp.ndarray,
 ) -> Tuple[PoolState, PopResult]:
-    """Post-arbitration half: deactivate taken slots, assemble the PopResult.
-    Rank-polymorphic — works on single ([M]/[P]) and batched ([B, M]/[B, P])
-    layouts alike (``take_along_axis`` on the trailing axis)."""
+    """Post-arbitration half of a phase (DESIGN.md §3): deactivate taken
+    slots (exactly-once), assemble the PopResult. Rank-polymorphic — works on
+    single ([M]/[P]) and batched ([B, M]/[B, P]) layouts alike
+    (``take_along_axis`` on the trailing axis)."""
     new_state = state._replace(
         active=state.active & ~taken,
         prio=jnp.where(taken, INF, state.prio),
@@ -441,7 +504,9 @@ def phase_commit(
 def fused_selection_c(
     policy: Policy, k: int, num_places: int, num_slots: int, block_size: int
 ) -> int:
-    """Resolve the fused stage-1 per-block budget for a pool of M slots."""
+    """Resolve the fused stage-1 per-block budget for a pool of M slots
+    (DESIGN.md §3.1; the c that keeps selection-ρ inside the policy's
+    bound — see :func:`_selection_c`)."""
     num_blocks = -(-num_slots // block_size)
     return _selection_c(policy, k, num_places, num_blocks)
 
@@ -457,13 +522,15 @@ def phase_pop(
     topk_backend: str = "auto",
     block_size: int = 1024,
 ) -> Tuple[PoolState, PopResult]:
-    """One scheduling phase: every place pops its best visible task.
+    """One scheduling phase: every place pops its best visible task
+    (DESIGN.md §3; state leaves [M]/[P]/[P, M], result leaves [P]).
 
     ``arbitration`` selects the intra-phase arbiter: ``"fused"`` (default)
     is the relaxed_topk-backed two-stage selection (Pallas on TPU, jnp
     reference on CPU — override with ``topk_backend``); ``"scan"`` is the
     legacy sequential O(P) greedy scan, kept as the equivalence oracle.
-    Both are bit-identical under IDEAL and preserve ignored ≤ ρ everywhere.
+    Both are bit-identical under IDEAL and preserve ignored ≤ ρ everywhere
+    (§3.2 proof sketch; pinned per phase by tests/test_invariants.py).
     """
     state, vis, order = phase_prepare(
         state, key, num_places=num_places, k=k, policy=policy
@@ -485,10 +552,75 @@ def phase_pop(
 
 
 # ---------------------------------------------------------------------------
+# streaming single-place pop (device admission, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def stream_pop(
+    state: PoolState, place: jnp.ndarray
+) -> Tuple[PoolState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One place pops its best visible task — the pure functional mirror of
+    ``HybridKQueue.pop`` under the deterministic min-index spy (DESIGN.md §9).
+
+    HYBRID visibility for ``place`` (i32[], traced): published ∪ own ∪
+    persistent spy refs, restricted to active. If that set is empty, the
+    place *spies* (non-destructively) on the lowest-index other place holding
+    an active unpublished item; the refs persist in ``spied[place]`` exactly
+    like the host queue's heap entries (paper §4.2.2). Ties in priority break
+    by ``seq`` — the device analogue of the host queue's (priority, uid) heap
+    key — so the admission order is bit-identical to the host oracle on the
+    same push/publish trace (tests/test_streaming.py pins this).
+
+    Preserves ignored ≤ P·k: the pop is the minimum over the visible set and
+    at most P·k better items are unpublished-and-unspied (§2).
+
+    Returns ``(state, slot i32[], prio f32[], valid bool[])``; the popped
+    slot is deactivated (exactly-once, the taken-set analogue).
+    """
+    num_places, m = state.spied.shape
+    places = jnp.arange(num_places, dtype=jnp.int32)
+    own = state.creator == place                                     # [M]
+    vis = state.active & (state.published | own | state.spied[place])
+    empty = ~jnp.any(vis)
+
+    # --- deterministic spy: lowest-index victim with unpublished work ----
+    unpub = state.active & ~state.published                          # [M]
+    counts = jnp.zeros((num_places,), jnp.int32).at[state.creator].add(
+        unpub.astype(jnp.int32)
+    )
+    w = (counts > 0) & (places != place)                             # [P]
+    victim = jnp.argmax(w).astype(jnp.int32)                         # first True
+    can_spy = empty & jnp.any(w)
+    new_refs = (state.creator == victim) & unpub & can_spy           # [M]
+    spied = state.spied.at[place].set(state.spied[place] | new_refs)
+    vis = vis | new_refs
+
+    # --- min over (prio, seq): heapq's lexicographic (priority, uid) -----
+    best = jnp.min(jnp.where(vis, state.prio, INF))
+    valid = jnp.isfinite(best)
+    cand = vis & (state.prio == best)
+    slot = jnp.argmin(
+        jnp.where(cand, state.seq, jnp.iinfo(jnp.int32).max)
+    ).astype(jnp.int32)
+
+    is_slot = jnp.arange(m) == slot
+    new_state = state._replace(
+        active=state.active & ~(is_slot & valid),
+        prio=jnp.where(is_slot & valid, INF, state.prio),
+        spied=spied,
+    )
+    prio_out = jnp.where(valid, state.prio[slot], INF)
+    return new_state, slot, prio_out, valid
+
+
+# ---------------------------------------------------------------------------
 # invariant checking (structural rho-relaxation, §5.3)
 # ---------------------------------------------------------------------------
 
 def rho_bound(policy: Policy, k: int, num_places: int) -> float:
+    """The structural relaxation each policy guarantees (the DESIGN.md §2
+    table): IDEAL 0, CENTRALIZED k, HYBRID P·k, WORK_STEALING ∞. Every pop
+    path in the repo — phase arbitration (§3), batched/sharded engines
+    (§4/§8), streaming admission (§9) — preserves ignored ≤ this bound."""
     if policy is Policy.IDEAL:
         return 0
     if policy is Policy.CENTRALIZED:
@@ -501,9 +633,10 @@ def rho_bound(policy: Policy, k: int, num_places: int) -> float:
 def ignored_count(
     state_before: PoolState, result: PopResult
 ) -> jnp.ndarray:
-    """Number of items *ignored* in this phase: active items strictly better
-    than the worst popped item that were not popped. Structural ρ-relaxation
-    (§5.3) demands this never exceed ρ."""
+    """i32[] — number of items *ignored* in this phase: items active before
+    the phase, strictly better than the worst popped item, and not popped.
+    Structural ρ-relaxation (paper §5.3, DESIGN.md §2) demands this never
+    exceed :func:`rho_bound`."""
     worst = jnp.max(jnp.where(result.valid, result.prio, -INF))
     # .max (not .set): an invalid place's placeholder slot must not clobber
     # a valid pop of the same slot index.

@@ -44,6 +44,8 @@ if _shard_map is None:
 
 
 def batch_axis_size(mesh: Mesh) -> int:
+    """D = devices along the ``batch`` axis (works on the plain 1-D batch
+    mesh and on composed batch × … meshes, DESIGN.md §8/§9)."""
     return mesh.shape[BATCH_AXIS]
 
 
@@ -118,11 +120,13 @@ def phase_pop_sharded(
     topk_backend: str = "auto",
     block_size: int = 1024,
 ) -> Tuple[kp.PoolState, kp.PopResult]:
-    """Batched :func:`kpriority.phase_pop` sharded over ``mesh``'s batch axis.
+    """Batched :func:`kpriority.phase_pop` sharded over ``mesh``'s batch axis
+    (DESIGN.md §8; state leaves [B, M]/[B, P]/[B, P, M], keys [B]).
 
     Bit-identical to :func:`batched.phase_pop` on one device (instances never
-    interact, so sharding the batch axis only changes placement). B need not
-    divide the device count: the batch is padded with inert instances and the
+    interact, so sharding the batch axis only changes placement — each
+    instance's ignored ≤ ρ guarantee (§2) is untouched). B need not divide
+    the device count: the batch is padded with inert instances and the
     padding is sliced off the result.
     """
     b = state.prio.shape[0]
@@ -143,14 +147,58 @@ def phase_pop_sharded(
 
 
 # ---------------------------------------------------------------------------
+# admission-pool placement on a composed serving mesh (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+# per-place / scalar bookkeeping leaves of PoolState and AdmissionBuffer:
+# always replicated — sharding tiny [P] counters over batch would force
+# gratuitous collectives into every fold/pop
+_ADMISSION_REPLICATED_FIELDS = frozenset({"unpub_pushes", "next_seq", "count"})
+
+
+def admission_shardings(mesh: Mesh, tree):
+    """NamedShardings placing a device-resident admission pool (or its
+    staging buffers) on a composed serving mesh
+    (``launch.mesh.make_production_batch_mesh``): leaves whose trailing dim
+    is slot-like — the [M]/[P, M] ``PoolState`` task leaves, the [P, C]
+    ``AdmissionBuffer`` staging rows — shard over ``batch`` when divisible;
+    the per-place/scalar bookkeeping fields (``unpub_pushes``, ``next_seq``,
+    ``count``) and non-divisible leaves replicate; everything replicates
+    over the data/model axes, i.e. the pool co-locates with the model shards
+    it schedules for. Placement only: the admission ops are ordinary jit
+    programs, so GSPMD inserts whatever collectives the sharded argmin/
+    scatter need — semantics (and the host-oracle equivalence, §9) are
+    unchanged on any mesh."""
+    from jax.sharding import NamedSharding
+
+    d = batch_axis_size(mesh)
+
+    def spec_for(name, x):
+        if (name in _ADMISSION_REPLICATED_FIELDS or x.ndim == 0
+                or x.shape[-1] % d != 0):
+            return NamedSharding(mesh, PS())
+        return NamedSharding(
+            mesh, PS(*((None,) * (x.ndim - 1) + (BATCH_AXIS,)))
+        )
+
+    if hasattr(tree, "_fields"):   # PoolState / AdmissionBuffer NamedTuples
+        return type(tree)(
+            *(spec_for(n, getattr(tree, n)) for n in tree._fields)
+        )
+    return jax.tree.map(lambda x: spec_for("", x), tree)
+
+
+# ---------------------------------------------------------------------------
 # batch × place composition: B instances of the explicit-collective engine
 # ---------------------------------------------------------------------------
 
 def make_engine_batched(mesh: Mesh, m_loc: int, g_cap: int, k: int, k_buf: int):
     """B instances of the shard_map hybrid engine (core/distributed.py) on a
-    (batch × place) mesh: state leaves are [B, P, ...]; the ``batch`` axis is
-    collective-free, the per-phase publication/proposal all_gathers run over
-    ``place`` only. Returns jitted (state, pushes) ->
+    (batch × place) mesh (DESIGN.md §8): state leaves are [B, P, ...]; the
+    ``batch`` axis is collective-free, the per-phase publication/proposal
+    all_gathers run over ``place`` only — so each instance keeps the hybrid
+    structure's ρ = P·k bound with traffic independent of queue depth.
+    Returns jitted (state, pushes) ->
     (state, popped_ids [B, P], popped_prios [B, P])."""
     from repro.core import distributed as dist
 

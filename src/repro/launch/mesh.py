@@ -57,6 +57,24 @@ def make_batch_mesh(num_devices: int | None = None):
     return jax.make_mesh((d,), (BATCH_AXIS,), **axis_types_kwargs(1))
 
 
+def make_production_batch_mesh(
+    *, multi_pod: bool = False, batch: int = 2, data: int = 16,
+    model: int = 16,
+):
+    """Compose the ``batch`` pool axis with :func:`make_production_mesh`'s
+    axes: ``(batch, [pod,] data, model)``. The serving layout of DESIGN.md
+    §9 — decode-cache slots and the device-resident admission pool shard
+    over the leading ``batch`` axis (each device group admits the slots it
+    decodes), the model shards over the trailing (pod ×) data × model axes
+    exactly as :func:`logical_rules` assigns them. Defaults are
+    production-scale; pass small ``batch``/``data``/``model`` for host tests
+    (e.g. ``batch=2, data=2, model=2`` under 8 forced host devices)."""
+    shape = (batch, 2, data, model) if multi_pod else (batch, data, model)
+    axes = ((BATCH_AXIS, "pod", "data", "model") if multi_pod
+            else (BATCH_AXIS, "data", "model"))
+    return jax.make_mesh(shape, axes, **axis_types_kwargs(len(axes)))
+
+
 def make_batch_place_mesh(batch: int, place: int):
     """2-D (batch × place) mesh composing the instance axis with the
     explicit-collective engine's ``place`` axis (core/distributed.py): B

@@ -12,6 +12,12 @@ trade applied to continuous batching.
 The engine itself is vLLM-style: a fixed decode batch of slots; prefill runs
 per-admission (batch 1) and its cache is spliced into the slot; decode steps
 the whole active batch.
+
+``admission=`` selects the control plane (DESIGN.md §9): ``"host"`` keeps the
+Python ``HybridKQueue`` (the equivalence oracle), ``"device"`` streams pushes
+into per-place device buffers and folds them into a device-resident pool
+between decode steps (serve/streaming.py) — same admission order bit-for-bit,
+no host queue on the hot path.
 """
 from __future__ import annotations
 
@@ -38,6 +44,22 @@ class Request:
 
 
 class ServeEngine:
+    """Continuous-batching serving engine with ρ-bounded priority admission.
+
+    Admission is the paper's HYBRID structure (DESIGN.md §2): a request is
+    overtaken by at most ρ = ``frontends``·``k`` later arrivals, while
+    front-ends stay uncoordinated between publishes. ``admission="host"``
+    (default) uses the sequential ``HybridKQueue`` oracle;
+    ``admission="device"`` uses the device-resident ``StreamingAdmitter``
+    (§9) — identical admission order, pinned by tests/test_streaming.py.
+    Both use the deterministic min-index spy so the two planes are
+    interchangeable mid-deployment.
+
+    ``mesh``: shard the decode-cache slot axis over the mesh's ``batch``
+    axis (§8) — with a composed ``make_production_batch_mesh`` the admission
+    pool co-locates with the decode slots it feeds.
+    """
+
     def __init__(
         self,
         cfg: ModelConfig,
@@ -48,10 +70,23 @@ class ServeEngine:
         frontends: int = 4,
         k: int = 4,
         mesh=None,
+        admission: str = "host",
+        admission_capacity: int = 256,
     ):
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
-        self.queue = HybridKQueue(frontends, k)
+        self.admission = admission
+        if admission == "host":
+            # min-index spy: pins the same victim choice as the device plane
+            # so "host" stays the bit-exact equivalence oracle (DESIGN.md §9)
+            self.queue = HybridKQueue(frontends, k, spy="min_index")
+        elif admission == "device":
+            from repro.serve.streaming import StreamingAdmitter
+
+            self.queue = StreamingAdmitter(
+                frontends, k, capacity=admission_capacity, mesh=mesh)
+        else:
+            raise ValueError(f"unknown admission plane: {admission!r}")
         self.frontends = frontends
         self.caches = init_cache(cfg, slots, max_len)
         self.mesh = mesh
@@ -91,11 +126,25 @@ class ServeEngine:
 
     # ------------------------------------------------------------ submission
     def submit(self, req: Request, frontend: int):
-        self.queue.push(frontend, req.priority, req)
+        """Front-end push (lower priority = admitted first). Host plane:
+        appends to the Python queue; device plane: one async device-buffer
+        scatter — no host queue state on the submission path (§9).
+
+        Priorities are quantized to float32 on BOTH planes: the device pool
+        stores f32, so comparing full-precision host floats against it would
+        let f64-distinct/f32-equal priorities order differently — quantizing
+        at the boundary keeps the two planes bit-identical for arbitrary
+        float inputs (e.g. epoch-seconds deadlines)."""
+        self.queue.push(frontend, float(np.float32(req.priority)), req)
 
     def flush_frontends(self):
-        for p in range(self.frontends):
-            self.queue.flush(p)
+        """Make every front-end's unpublished requests globally visible
+        (shutdown / straggler handoff; the ρ bound only ever tightens)."""
+        if self.admission == "device":
+            self.queue.flush()
+        else:
+            for p in range(self.frontends):
+                self.queue.flush(p)
 
     # ----------------------------------------------------------------- admit
     def _splice_cache(self, slot: int, new_cache):
@@ -104,6 +153,12 @@ class ServeEngine:
         self.caches = jax.tree.map(splice, self.caches, new_cache)
 
     def _admit(self):
+        """Fill empty decode slots from the admission plane. The device plane
+        folds its buffers first (one fused device program per step) so pops
+        see every request submitted before this step — the same visible set
+        the host oracle has at this point (§9 equivalence contract)."""
+        if self.admission == "device":
+            self.queue.fold()
         for slot in range(self.slots):
             if self.active[slot] is not None:
                 continue
@@ -146,6 +201,9 @@ class ServeEngine:
         return done
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Step until every submitted request finishes (or ``max_steps``).
+        Unflushed requests are still admitted — own-place visibility and
+        spying reach them — just possibly later (the ρ trade, §2)."""
         finished: List[Request] = []
         for _ in range(max_steps):
             finished.extend(self.step())

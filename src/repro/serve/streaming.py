@@ -1,0 +1,401 @@
+"""Device-resident streaming admission (DESIGN.md §9).
+
+The serving hot loop used to route every front-end push through the host-side
+``HybridKQueue`` — the exact centralization the paper's hybrid structure
+exists to avoid. This module is the device-resident port: front-end pushes
+append to **per-place device buffers** (one jitted scatter, no host queue, no
+readback), and between decode steps a single jitted **fold** drains the
+buffers into the device-resident ``PoolState`` with *stream-accurate*
+publish-on-k — each place publishes its local list at exactly the push that
+brings its unpublished count to k, replayed from the buffered arrival order,
+so the visible set at every pop equals the host queue's bit-for-bit.
+Admission pops are :func:`repro.core.kpriority.stream_pop` (published ∪ own ∪
+persistent spy refs, deterministic min-index spy, (priority, seq) tie-break
+== the host heap's (priority, uid)).
+
+Equivalence contract (tests/test_streaming.py, and under the 8-device
+composed mesh via ``python -m repro.serve.streaming --selftest``): on any
+trace of push bursts / folds / pop bursts, :class:`StreamingAdmitter` pops
+the same (priority, item) sequence as ``HybridKQueue(spy="min_index")`` with
+pushes applied at the preceding fold point. The ρ = P·k ordering bound holds
+throughout (the pool is the §2 HYBRID structure; the fold publishes exactly
+the host queue's publication set, never less).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kpriority as kp
+
+INF = jnp.inf
+
+
+class AdmissionBuffer(NamedTuple):
+    """Per-place device staging buffers — the local lists' streaming inbox.
+
+    ``arrival`` is the global submission index (the host queue's uid): the
+    fold assigns pool ``seq`` in arrival order so priority ties break
+    identically to the host heap. C (buffer capacity) is static; ``count[p]``
+    is the live prefix length of place p's rows.
+    """
+
+    prio: jnp.ndarray      # f32[P, C]
+    slot: jnp.ndarray      # i32[P, C]  pool slot reserved for the item
+    arrival: jnp.ndarray   # i32[P, C]  global arrival index (uid analogue)
+    count: jnp.ndarray     # i32[P]
+
+
+def init_buffer(num_places: int, cap: int) -> AdmissionBuffer:
+    return AdmissionBuffer(
+        prio=jnp.full((num_places, cap), INF, jnp.float32),
+        slot=jnp.full((num_places, cap), -1, jnp.int32),
+        arrival=jnp.zeros((num_places, cap), jnp.int32),
+        count=jnp.zeros((num_places,), jnp.int32),
+    )
+
+
+def buffer_push(
+    buf: AdmissionBuffer,
+    place: jnp.ndarray,     # i32[]
+    slot: jnp.ndarray,      # i32[]
+    prio: jnp.ndarray,      # f32[]
+    arrival: jnp.ndarray,   # i32[]
+) -> AdmissionBuffer:
+    """Append one push to ``place``'s device buffer (pure jnp scatter; the
+    whole front-end push path — no host-side queue state). The caller
+    guarantees room (StreamingAdmitter auto-folds on a full buffer)."""
+    i = buf.count[place]
+    return AdmissionBuffer(
+        prio=buf.prio.at[place, i].set(jnp.float32(prio)),
+        slot=buf.slot.at[place, i].set(jnp.int32(slot)),
+        arrival=buf.arrival.at[place, i].set(jnp.int32(arrival)),
+        count=buf.count.at[place].add(1),
+    )
+
+
+def fold(
+    pool: kp.PoolState,
+    buf: AdmissionBuffer,
+    *,
+    k: int,
+    force: bool = False,
+) -> Tuple[kp.PoolState, AdmissionBuffer]:
+    """Drain the buffers into the pool with stream-accurate publish-on-k.
+
+    Replays each place's buffered pushes in arrival order against its
+    ``unpub_pushes`` counter u (< k between folds, the host invariant):
+    with c buffered pushes there are ``(u + c) // k`` publish events; the
+    first publishes the place's pre-existing unpublished items too, and
+    buffered item j (0-based stream index) is published iff
+    ``j < ((u + c) // k) * k - u``. The new counter is ``(u + c) mod k`` —
+    exactly ``len(local)`` after the host queue processed the same pushes,
+    so the post-fold visible set matches ``HybridKQueue`` bit-for-bit
+    (DESIGN.md §9). ``force`` (or k == 0) publishes everything — the
+    ``flush`` analogue. Publishing is monotone ⇒ ignored ≤ P·k is preserved.
+
+    One fused device program: pure jnp, jit/shard_map-compatible; returns
+    the updated pool and an empty buffer.
+    """
+    num_places, cap = buf.prio.shape
+    m = pool.prio.shape[0]
+    j = jnp.arange(cap, dtype=jnp.int32)[None, :]           # [1, C]
+    valid = j < buf.count[:, None]                          # [P, C]
+
+    if force or k == 0:
+        limit = buf.count                                   # publish all
+        pub_prev = jnp.ones((num_places,), bool)
+        new_unpub = jnp.zeros((num_places,), jnp.int32)
+    else:
+        total = pool.unpub_pushes + buf.count               # [P]
+        events = total // k
+        limit = events * k - pool.unpub_pushes
+        pub_prev = events >= 1
+        new_unpub = total - events * k
+
+    # scatter the buffered items into slot-indexed [M] layouts (invalid rows
+    # target index M and are dropped; live slots are unique by construction —
+    # a slot is only re-buffered after its previous item was popped)
+    tgt = jnp.where(valid, buf.slot, m).reshape(-1)
+    places = jnp.broadcast_to(
+        jnp.arange(num_places, dtype=jnp.int32)[:, None], (num_places, cap)
+    )
+    mask_m = jnp.zeros((m,), bool).at[tgt].set(True, mode="drop")
+    prio_m = jnp.full((m,), INF, jnp.float32).at[tgt].set(
+        buf.prio.reshape(-1), mode="drop")
+    creator_m = jnp.zeros((m,), jnp.int32).at[tgt].set(
+        places.reshape(-1), mode="drop")
+    # keep arrivals integer end-to-end: a float32 tie would collide uids
+    # past 2^24 and silently break the (priority, uid) host-oracle tie-break
+    arr_m = jnp.zeros((m,), jnp.int32).at[tgt].set(
+        buf.arrival.reshape(-1), mode="drop")
+    pub_new_m = jnp.zeros((m,), bool).at[tgt].set(
+        (j < limit[:, None]).reshape(-1), mode="drop")
+
+    st = kp.push_batch(pool, mask_m, prio_m, creator_m, tie=arr_m)
+    published = (
+        st.published
+        | (mask_m & pub_new_m)
+        | (~mask_m & st.active & pub_prev[st.creator])
+    )
+    st = st._replace(published=published, unpub_pushes=new_unpub)
+    return st, init_buffer(num_places, cap)
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_fold(k: int, force: bool):
+    """Compile-once fold per (k, force): admitter instances (and serving
+    restarts) share the cache instead of re-jitting per instance."""
+    return jax.jit(
+        functools.partial(fold, k=k, force=force), donate_argnums=(0, 1)
+    )
+
+
+_jitted_buffer_push = jax.jit(buffer_push, donate_argnums=(0,))
+_jitted_stream_pop = jax.jit(kp.stream_pop, donate_argnums=(0,))
+
+
+class StreamingAdmitter:
+    """Device-resident drop-in for the serving ``HybridKQueue`` (DESIGN.md §9).
+
+    ``push`` appends to a per-place device buffer (one async dispatch, no
+    host queue, no readback); ``fold`` — called by the engine between decode
+    steps — drains the buffers into the device pool with stream-accurate
+    publish-on-k; ``pop`` is the functional :func:`kpriority.stream_pop`.
+    Items themselves (request objects) stay host-side keyed by pool slot —
+    only priorities, slots, and arrival order live on device, which is all
+    admission arbitration needs.
+
+    ``mesh``: place the pool on a composed serving mesh
+    (``launch.mesh.make_production_batch_mesh``) — slot-indexed leaves shard
+    over the ``batch`` axis (co-located with the decode slots they feed) and
+    replicate over data/model, via ``sharded_batch.admission_shardings``.
+
+    Pop order is bit-identical to ``HybridKQueue(spy="min_index")`` on the
+    same trace with pushes applied at fold points (tests/test_streaming.py);
+    admission therefore inherits the host path's ρ = P·k guarantee: a
+    request is overtaken by at most places·k later arrivals. One contract
+    caveat: the device pool stores priorities as float32, so the host
+    comparison must see f32-quantized priorities too — ``ServeEngine.submit``
+    quantizes at the boundary for both planes; feed this class f32-exact
+    priorities when driving it directly against a host oracle.
+    """
+
+    def __init__(
+        self,
+        num_places: int,
+        k: int,
+        *,
+        capacity: int = 256,
+        buffer_cap: int = 64,
+        mesh=None,
+    ):
+        self.num_places = num_places
+        self.k = k
+        self.capacity = capacity
+        self.buffer_cap = buffer_cap
+        self.pool = kp.init_pool(capacity, num_places)
+        self.buf = init_buffer(num_places, buffer_cap)
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.core.sharded_batch import admission_shardings
+
+            self.pool = jax.tree.map(
+                jax.device_put, self.pool, admission_shardings(mesh, self.pool)
+            )
+        self._items = {}                       # slot -> item (host-side)
+        self._next_slot = 0
+        self._arrival = 0
+        self._staged = [0] * num_places        # unfolded pushes (host mirror)
+        self._unpub = [0] * num_places         # device unpub_pushes mirror
+        self._push_fn = _jitted_buffer_push
+        self._fold_fn = _jitted_fold(k, False)
+        self._flush_fn = _jitted_fold(k, True)
+        self._pop_fn = _jitted_stream_pop
+
+    # ------------------------------------------------------------------ push
+    def _alloc_slot(self) -> int:
+        if len(self._items) >= self.capacity:
+            raise RuntimeError(
+                f"admission pool full ({self.capacity} in-flight requests); "
+                "raise capacity= or pop before pushing")
+        while self._next_slot in self._items:
+            self._next_slot = (self._next_slot + 1) % self.capacity
+        s = self._next_slot
+        self._next_slot = (s + 1) % self.capacity
+        return s
+
+    def push(self, place: int, priority: float, item: Any,
+             k: Optional[int] = None):
+        """Stream one request into ``place``'s device buffer (lower priority
+        value = admitted first, matching ``HybridKQueue.push``). ``k`` is
+        accepted for signature parity but must equal the constructor's —
+        per-push k-override stays a host-queue-only feature."""
+        if k is not None and min(self.k, k) != self.k:
+            raise ValueError("StreamingAdmitter folds with a fixed k; "
+                             "per-push k overrides are host-queue-only")
+        if self._staged[place] >= self.buffer_cap:
+            self.fold()
+        slot = self._alloc_slot()
+        self._items[slot] = item
+        self.buf = self._push_fn(
+            self.buf, place, slot, float(priority), self._arrival)
+        self._arrival += 1
+        self._staged[place] += 1
+
+    # ------------------------------------------------------------------ fold
+    def _account_fold(self, force: bool):
+        for p in range(self.num_places):
+            total = self._unpub[p] + self._staged[p]
+            if force or self.k == 0:
+                self._unpub[p] = 0
+            else:
+                self._unpub[p] = total % self.k
+            self._staged[p] = 0
+
+    def fold(self):
+        """Drain buffered pushes into the pool (stream-accurate publish-on-k);
+        the engine calls this once per decode step, before admission pops."""
+        self.pool, self.buf = self._fold_fn(self.pool, self.buf)
+        self._account_fold(force=False)
+
+    def flush(self, place: Optional[int] = None):
+        """Publish EVERY place's staged + unpublished requests (the
+        all-frontends ``HybridKQueue.flush`` loop as one device program).
+        Per-place flush is deliberately not supported — silently flushing
+        all places on ``flush(0)`` would diverge from the host oracle's
+        visible set, so a specific ``place`` raises instead."""
+        if place is not None:
+            raise ValueError(
+                "StreamingAdmitter.flush publishes all places in one fused "
+                "program; per-place flush is host-queue-only")
+        self.pool, self.buf = self._flush_fn(self.pool, self.buf)
+        self._account_fold(force=True)
+
+    # ------------------------------------------------------------------- pop
+    def pop(self, place: int) -> Optional[Tuple[float, Any]]:
+        """Pop ``place``'s best visible request — one device call, host
+        readback only for the winning (slot, valid) pair (the admitted
+        request must be prefetched host-side anyway)."""
+        self.pool, slot, prio, valid = self._pop_fn(
+            self.pool, jnp.int32(place))
+        if not bool(valid):
+            return None
+        return float(prio), self._items.pop(int(slot))
+
+    # --------------------------------------------------------------- queries
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def pending(self, place: int) -> int:
+        """Unpublished + still-buffered pushes of ``place`` (the host queue's
+        ``len(local)`` analogue, mirrored host-side — no device readback)."""
+        return self._staged[place] + self._unpub[place]
+
+
+# ---------------------------------------------------------------------------
+# selftest (subprocess: run under XLA_FLAGS=--xla_force_host_platform_device_count=8)
+# ---------------------------------------------------------------------------
+
+def _selftest_trace_equivalence(mesh=None):  # pragma: no cover
+    """StreamingAdmitter == HybridKQueue(spy="min_index") pop-for-pop on a
+    randomized push/fold/pop trace (priorities drawn from a small grid to
+    exercise the (priority, uid) tie-break)."""
+    import numpy as np
+
+    from repro.core.host_queue import HybridKQueue
+
+    places, k = 4, 3
+    rng = np.random.default_rng(7)
+    dev = StreamingAdmitter(places, k, capacity=128, buffer_cap=32, mesh=mesh)
+    host = HybridKQueue(places, k, spy="min_index")
+    uid = 0
+    for _ in range(60):
+        for _ in range(int(rng.integers(0, 6))):
+            p = int(rng.integers(places))
+            pr = float(rng.integers(0, 8)) / 4.0
+            dev.push(p, pr, uid)
+            host.push(p, pr, uid)
+            uid += 1
+        dev.fold()
+        if rng.random() < 0.15:
+            dev.flush()
+            for p in range(places):
+                host.flush(p)
+        for _ in range(int(rng.integers(0, 5))):
+            p = int(rng.integers(places))
+            a, b = dev.pop(p), host.pop(p)
+            assert (a is None) == (b is None), (a, b)
+            if a is not None:
+                assert a[0] == b[0] and a[1] == b[1], (a, b)
+    dev.flush()
+    for p in range(places):
+        host.flush(p)
+    p = 0
+    while True:
+        a, b = dev.pop(p % places), host.pop(p % places)
+        p += 1
+        assert (a is None) == (b is None), (a, b)
+        if a is None:
+            if len(dev) == 0 and len(host) == 0:
+                break
+            continue
+        assert a[0] == b[0] and a[1] == b[1], (a, b)
+    tag = "mesh" if mesh is not None else "local"
+    print(f"STREAM_TRACE_OK {tag} uid={uid}")
+
+
+def _selftest_engine_equivalence():  # pragma: no cover
+    """ServeEngine(admission="device", mesh=composed) admits in exactly the
+    host-oracle order (the ISSUE 3 acceptance criterion, under the 8-device
+    batch × data × model mesh)."""
+    import numpy as np
+
+    from repro.configs import get_reduced
+    from repro.launch.mesh import make_production_batch_mesh
+    from repro.models import materialize, model_p
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_reduced("qwen3_1_7b")
+    params = materialize(jax.random.PRNGKey(0), model_p(cfg))
+    mesh = make_production_batch_mesh(batch=2, data=2, model=2)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+               for _ in range(8)]
+    prios = [float(v) for v in rng.permutation(len(prompts))]
+
+    def run(admission, mesh_):
+        eng = ServeEngine(cfg, params, slots=4, max_len=32, frontends=2, k=2,
+                          mesh=mesh_, admission=admission)
+        for i, toks in enumerate(prompts):
+            eng.submit(Request(rid=i, tokens=toks, max_new=4,
+                               priority=prios[i]), frontend=i % 2)
+        eng.run()
+        return eng.admission_log
+
+    ref = run("host", None)
+    dev = run("device", mesh)
+    assert ref == dev, (ref, dev)
+    print(f"STREAM_ENGINE_OK order={ref}")
+
+
+def selftest() -> None:  # pragma: no cover - exercised via subprocess
+    from repro.launch.mesh import make_production_batch_mesh
+
+    d = len(jax.devices())
+    _selftest_trace_equivalence()
+    if d >= 8:
+        mesh = make_production_batch_mesh(batch=2, data=2, model=2)
+        _selftest_trace_equivalence(mesh=mesh)
+        _selftest_engine_equivalence()
+    print(f"STREAM_OK devices={d}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--selftest" in sys.argv:
+        selftest()

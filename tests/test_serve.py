@@ -52,10 +52,62 @@ def test_host_queue_rho_bound():
             if r is None:
                 continue
             prio, uid = r[0], r[1]
-            better = sum(1 for v in live.values() if v < prio) - 1
+            del live[uid]   # remove first; strict < never counts the item
+            # itself, so a trailing -1 would under-count by one
+            better = sum(1 for v in live.values() if v < prio)
             worst_inversion = max(worst_inversion, better)
-            del live[uid]
     assert worst_inversion <= places * k, worst_inversion
+
+
+def test_host_queue_k0_fully_centralized():
+    """k = 0 publishes every push immediately (len(local) >= 0 on arrival):
+    the queue degenerates to the centralized exact structure — pops come out
+    in strict (priority, uid) order from any place, rho = 0."""
+    places = 3
+    q = HybridKQueue(places, 0)
+    rng = np.random.default_rng(4)
+    prios = rng.permutation(20).astype(float)
+    for uid, pr in enumerate(prios):
+        q.push(int(rng.integers(places)), float(pr), uid)
+        assert q.pending(int(rng.integers(places))) == 0   # nothing local
+    got = [q.pop(i % places)[0] for i in range(20)]
+    assert got == sorted(got)
+    assert q.pop(0) is None and len(q) == 0
+
+
+def test_host_queue_single_place_spy():
+    """P = 1: a place can never spy on itself — an empty queue pops None
+    (no self-victim loop), while its own unpublished items stay poppable in
+    priority order without any publication."""
+    q = HybridKQueue(1, 100)
+    assert q.pop(0) is None
+    for uid, pr in enumerate([2.0, 0.5, 1.0]):
+        q.push(0, pr, uid)
+    assert q.pending(0) == 3                       # all unpublished (k=100)
+    assert [q.pop(0)[1] for _ in range(3)] == [1, 2, 0]
+    assert q.pop(0) is None and len(q) == 0
+
+
+def test_host_queue_flush_on_empty_publish_ordering():
+    """Flushing an empty place is a no-op that must not disturb the global
+    list or read pointers: items published around empty flushes still pop
+    exactly once, in (priority, uid) order, from every place."""
+    places, k = 3, 4
+    q = HybridKQueue(places, k)
+    q.flush(0)                                     # flush before any push
+    q.push(1, 3.0, "a")
+    q.flush(2)                                     # flush an empty bystander
+    q.flush(1)                                     # publishes "a"
+    q.flush(1)                                     # re-flush now-empty place
+    q.push(0, 1.0, "b")
+    q.push(0, 2.0, "c")
+    q.flush(0)
+    # place 2 never pushed: sees the published items via its read pointer
+    assert q.pop(2) == (1.0, "b")
+    assert q.pop(1) == (2.0, "c")
+    assert q.pop(0) == (3.0, "a")
+    assert all(q.pop(p) is None for p in range(places))
+    assert len(q) == 0
 
 
 def test_engine_end_to_end():

@@ -1,0 +1,344 @@
+"""Device-resident streaming admission (ISSUE 3 tentpole contract):
+
+  * ``push_batch`` + ``publish`` compose to exactly the HYBRID ``push``
+    (single-instance and batched), and ``publish(force=True)`` is the flush,
+  * ``stream_pop`` + the stream-accurate fold reproduce the host
+    ``HybridKQueue(spy="min_index")`` pop order bit-for-bit on randomized
+    push/fold/flush/pop traces, exercising the (priority, uid) tie-break,
+  * the ρ = P·k admission-inversion bound survives the device path,
+  * ``ServeEngine(admission="device")`` admits in the identical order to the
+    host oracle — locally and (via the ``serve.streaming`` selftest
+    subprocess) under the 8-forced-host-device batch × data × model mesh,
+  * buffer auto-fold on overflow and pool-capacity errors behave.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import batched, kpriority as kp
+from repro.core.host_queue import HybridKQueue
+from repro.serve.streaming import StreamingAdmitter, fold, init_buffer
+
+
+# ---------------------------------------------------------------------------
+# push_batch / publish == push
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 2, 5])
+def test_push_batch_publish_composes_to_push(k):
+    m, places = 64, 4
+    rng = np.random.default_rng(3)
+    a = kp.init_pool(m, places)
+    b = kp.init_pool(m, places)
+    for t in range(5):
+        mask = jnp.asarray(rng.random(m) < 0.3)
+        prios = jnp.asarray(rng.random(m).astype(np.float32))
+        creators = jnp.asarray(rng.integers(0, places, m).astype(np.int32))
+        key = jax.random.PRNGKey(t)
+        a = kp.push(a, mask, prios, creators, k=k, policy=kp.Policy.HYBRID,
+                    key=key)
+        b = kp.publish(
+            kp.push_batch(b, mask, prios, creators, key=key), k=k)
+        for name, la, lb in zip(kp.PoolState._fields, a, b):
+            np.testing.assert_array_equal(
+                np.asarray(la), np.asarray(lb), err_msg=f"{name} phase {t}")
+
+
+def test_push_batch_stages_without_publishing():
+    m, places, k = 32, 2, 2
+    st = kp.init_pool(m, places)
+    mask = jnp.zeros(m, bool).at[jnp.arange(5)].set(True)
+    st = kp.push_batch(
+        st, mask, jnp.arange(m, dtype=jnp.float32),
+        jnp.zeros(m, jnp.int32))
+    assert not bool(st.published.any())
+    assert int(st.unpub_pushes[0]) == 5
+    # publish-on-k: place 0 crossed k, so everything it staged goes global
+    pub = kp.publish(st, k=k)
+    assert int(pub.published.sum()) == 5
+    assert int(pub.unpub_pushes[0]) == 0
+
+
+def test_publish_force_is_flush():
+    m, places, k = 32, 3, 10
+    st = kp.init_pool(m, places)
+    mask = jnp.zeros(m, bool).at[jnp.arange(4)].set(True)
+    st = kp.push_batch(
+        st, mask, jnp.arange(m, dtype=jnp.float32),
+        jnp.asarray([0, 1, 2, 0] + [0] * (m - 4), jnp.int32))
+    assert not bool(kp.publish(st, k=k).published.any())   # under budget
+    flushed = kp.publish(st, k=k, force=True)
+    assert int(flushed.published.sum()) == 4
+    assert not bool(flushed.unpub_pushes.any())
+
+
+def test_batched_streaming_ops_match_loop():
+    b, m, places, k = 3, 48, 4, 3
+    rng = np.random.default_rng(9)
+    bstate = batched.init_pool(m, places, batch=b)
+    singles = [kp.init_pool(m, places) for _ in range(b)]
+    mask = jnp.asarray(rng.random((b, m)) < 0.25)
+    prios = jnp.asarray(rng.random((b, m)).astype(np.float32))
+    creators = jnp.asarray(rng.integers(0, places, (b, m)).astype(np.int32))
+    tie = jnp.asarray(rng.random((b, m)).astype(np.float32))
+    bstate = batched.push_batch(bstate, mask, prios, creators, tie=tie)
+    bstate = batched.publish(bstate, k=k)
+    for i in range(b):
+        s = kp.push_batch(singles[i], mask[i], prios[i], creators[i],
+                          tie=tie[i])
+        s = kp.publish(s, k=k)
+        for name, bl, sl in zip(kp.PoolState._fields, bstate, s):
+            np.testing.assert_array_equal(
+                np.asarray(bl[i]), np.asarray(sl),
+                err_msg=f"{name} instance {i}")
+
+
+# ---------------------------------------------------------------------------
+# fold + stream_pop == HybridKQueue (deterministic spy)
+# ---------------------------------------------------------------------------
+
+def _drive_trace(seed, places, k, steps, *, capacity=96, buffer_cap=16):
+    """Random push/fold/flush/pop trace: device admitter and host oracle must
+    agree pop-for-pop. Priorities come from a coarse grid so the
+    (priority, uid) tie-break carries real weight."""
+    rng = np.random.default_rng(seed)
+    dev = StreamingAdmitter(places, k, capacity=capacity,
+                            buffer_cap=buffer_cap)
+    host = HybridKQueue(places, k, spy="min_index")
+    uid = 0
+    for _ in range(steps):
+        for _ in range(int(rng.integers(0, 5))):
+            p = int(rng.integers(places))
+            pr = float(rng.integers(0, 6)) / 2.0
+            dev.push(p, pr, uid)
+            host.push(p, pr, uid)
+            uid += 1
+        dev.fold()
+        if rng.random() < 0.2:
+            dev.flush()
+            for p in range(places):
+                host.flush(p)
+        for _ in range(int(rng.integers(0, 4))):
+            p = int(rng.integers(places))
+            a, b = dev.pop(p), host.pop(p)
+            assert (a is None) == (b is None), (uid, a, b)
+            if a is not None:
+                assert a == b, (uid, a, b)
+    # drain both completely
+    dev.flush()
+    for p in range(places):
+        host.flush(p)
+    p = 0
+    drained = 0
+    while len(host) or len(dev):
+        a, b = dev.pop(p % places), host.pop(p % places)
+        p += 1
+        assert (a is None) == (b is None), (a, b)
+        if a is not None:
+            assert a == b, (a, b)
+            drained += 1
+    return uid, drained
+
+
+@pytest.mark.parametrize("seed,places,k", [(0, 4, 3), (1, 2, 1), (2, 5, 4)])
+def test_streaming_admission_matches_host_oracle(seed, places, k):
+    uid, drained = _drive_trace(seed, places, k, steps=25)
+    assert uid > 0 and drained > 0
+
+
+def test_streaming_admission_k0_fully_centralized():
+    """k = 0 publishes every push at the next fold (the host queue publishes
+    immediately); admission order must still match the oracle exactly."""
+    uid, drained = _drive_trace(5, 3, 0, steps=15)
+    assert uid > 0 and drained > 0
+
+
+def test_streaming_rho_bound():
+    """The device plane inherits ρ = places·k: a popped request is worse than
+    at most places·k live better requests (same inversion count as
+    tests/test_serve.py pins for the host queue)."""
+    places, k = 4, 3
+    dev = StreamingAdmitter(places, k, capacity=128, buffer_cap=32)
+    rng = np.random.default_rng(11)
+    live = {}
+    worst = 0
+    uid = 0
+    for _ in range(40):
+        for _ in range(int(rng.integers(0, 5))):
+            pr = float(rng.random())
+            dev.push(int(rng.integers(places)), pr, uid)
+            live[uid] = pr
+            uid += 1
+        dev.fold()
+        for _ in range(int(rng.integers(0, 3))):
+            r = dev.pop(int(rng.integers(places)))
+            if r is None:
+                continue
+            prio, got = r
+            del live[got]   # remove first: its f64 value may differ from the
+            # f32 pop priority, so it must not perturb the strict count
+            better = sum(1 for v in live.values() if v < prio)
+            worst = max(worst, better)
+    assert worst <= places * k, worst
+
+
+def test_stream_pop_spy_refs_persist():
+    """A spying place keeps its refs (paper §4.2.2): after one spy it can
+    keep draining the victim's unpublished items without them ever being
+    published."""
+    m, places = 16, 2
+    st = kp.init_pool(m, places)
+    mask = jnp.zeros(m, bool).at[jnp.arange(3)].set(True)
+    st = kp.push_batch(
+        st, mask, jnp.asarray([3.0, 1.0, 2.0] + [0.0] * (m - 3)),
+        jnp.zeros(m, jnp.int32))
+    # nothing published (k larger than staged count)
+    st = kp.publish(st, k=10)
+    got = []
+    for _ in range(3):
+        st, slot, prio, valid = kp.stream_pop(st, jnp.int32(1))
+        assert bool(valid)
+        got.append(float(prio))
+    assert got == [1.0, 2.0, 3.0]
+    st, _, _, valid = kp.stream_pop(st, jnp.int32(1))
+    assert not bool(valid)
+
+
+def test_admitter_auto_fold_and_capacity():
+    dev = StreamingAdmitter(2, 2, capacity=8, buffer_cap=4)
+    for i in range(8):                      # > buffer_cap pushes on place 0
+        dev.push(0, float(i), i)
+    assert len(dev) == 8
+    with pytest.raises(RuntimeError, match="admission pool full"):
+        dev.push(0, 99.0, 99)
+    dev.fold()
+    got = [dev.pop(0) for _ in range(8)]
+    assert [g[1] for g in got] == list(range(8))
+    assert dev.pop(0) is None and len(dev) == 0
+
+
+# ---------------------------------------------------------------------------
+# engine-level equivalence: admission="device" == admission="host"
+# ---------------------------------------------------------------------------
+
+def test_engine_device_admission_order_matches_host():
+    from repro.configs import get_reduced
+    from repro.models import materialize, model_p
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_reduced("qwen3_1_7b")
+    params = materialize(jax.random.PRNGKey(0), model_p(cfg))
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+               for _ in range(8)]
+    prios = [float(v) for v in rng.permutation(8)]
+
+    def run(admission):
+        eng = ServeEngine(cfg, params, slots=3, max_len=32, frontends=2, k=2,
+                          admission=admission)
+        for i, toks in enumerate(prompts):
+            eng.submit(Request(rid=i, tokens=toks, max_new=4,
+                               priority=prios[i]), frontend=i % 2)
+        done = eng.run()
+        return eng.admission_log, {r.rid: r.out for r in done}
+
+    host_log, host_out = run("host")
+    dev_log, dev_out = run("device")
+    assert host_log == dev_log
+    assert host_out == dev_out
+
+
+def test_engine_quantizes_priorities_for_both_planes():
+    """f64-distinct but f32-equal priorities must not order differently
+    across planes: ServeEngine.submit quantizes to f32 at the boundary, so
+    the admission logs still match (regression for the f32-collision
+    divergence found in review)."""
+    from repro.configs import get_reduced
+    from repro.models import materialize, model_p
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_reduced("qwen3_1_7b")
+    params = materialize(jax.random.PRNGKey(0), model_p(cfg))
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(0, cfg.vocab_size, 5).astype(np.int32)
+               for _ in range(6)]
+    # pairs collide in f32 (1e-12 apart) but differ in f64
+    prios = [0.1, 0.1 + 1e-12, 0.1 + 2e-12, 7.5, 7.5 + 1e-12, 0.0]
+
+    def run(admission):
+        eng = ServeEngine(cfg, params, slots=2, max_len=24, frontends=2, k=1,
+                          admission=admission)
+        for i, toks in enumerate(prompts):
+            eng.submit(Request(rid=i, tokens=toks, max_new=3,
+                               priority=prios[i]), frontend=i % 2)
+        eng.run()
+        return eng.admission_log
+
+    assert run("host") == run("device")
+
+
+def test_streaming_selftest_8_devices():
+    """Acceptance pin: device admission == host oracle under the 8-device
+    composed (batch × data × model) production-style mesh, for both the raw
+    queue trace and the full ServeEngine admission log."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.serve.streaming", "--selftest"],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert "STREAM_OK devices=8" in out.stdout, (
+        out.stdout[-500:], out.stderr[-2000:])
+    assert "STREAM_TRACE_OK mesh" in out.stdout, out.stdout[-500:]
+    assert "STREAM_ENGINE_OK" in out.stdout, out.stdout[-500:]
+
+
+# ---------------------------------------------------------------------------
+# fold unit behaviour
+# ---------------------------------------------------------------------------
+
+def test_fold_midstream_publish_granularity():
+    """With u pre-existing unpublished pushes and c buffered, exactly
+    ((u+c)//k)*k − u buffered items (in arrival order) publish — the host
+    queue's per-push granularity, not phase granularity."""
+    places, cap, m, k = 1, 8, 16, 3
+    pool = kp.init_pool(m, places)
+    buf = init_buffer(places, cap)
+    # stage 2 pushes (u=2 < k) through a first fold: nothing published
+    for i in range(2):
+        buf = buf._replace(
+            prio=buf.prio.at[0, i].set(float(10 + i)),
+            slot=buf.slot.at[0, i].set(i),
+            arrival=buf.arrival.at[0, i].set(i),
+            count=buf.count.at[0].set(i + 1),
+        )
+    pool, buf = fold(pool, buf, k=k)
+    assert int(pool.unpub_pushes[0]) == 2 and not bool(pool.published.any())
+    # buffer 4 more: total 6 = 2 events -> all 2 + first 4 published... i.e.
+    # limit = 2*3 - 2 = 4 buffered, plus the 2 pre-existing; counter 0
+    for i in range(4):
+        buf = buf._replace(
+            prio=buf.prio.at[0, i].set(float(20 + i)),
+            slot=buf.slot.at[0, i].set(2 + i),
+            arrival=buf.arrival.at[0, i].set(2 + i),
+            count=buf.count.at[0].set(i + 1),
+        )
+    pool, buf = fold(pool, buf, k=k)
+    assert int(pool.published.sum()) == 6
+    assert int(pool.unpub_pushes[0]) == 0
+    # one more push: u=0, c=1 < k -> staged but unpublished
+    buf = buf._replace(
+        prio=buf.prio.at[0, 0].set(30.0),
+        slot=buf.slot.at[0, 0].set(6),
+        arrival=buf.arrival.at[0, 0].set(6),
+        count=buf.count.at[0].set(1),
+    )
+    pool, buf = fold(pool, buf, k=k)
+    assert int(pool.published.sum()) == 6
+    assert int(pool.unpub_pushes[0]) == 1
