@@ -271,6 +271,118 @@ def admission_throughput(requests=2000, frontends=4, k=4, fold_every=32,
     return rows
 
 
+def fused_step_throughput(requests=64, steps=48, frontends=4, k=4, slots=8,
+                          chunk=8, max_new=3, repeats=3):
+    """Single-dispatch fused decode step vs the PR-3 eager device plane
+    (DESIGN.md §10), same request trace, same admission order (asserted
+    in-run): dispatches/step and steps/s for fold + per-slot pops + decode
+    as separate per-step programs versus ONE lax.scan-chunked program per
+    ``chunk`` steps.
+
+    Both planes run the toy decode (a jitted one-liner) so the measurement
+    isolates the scheduling/dispatch plane — on CPU a transformer decode
+    would hide the dispatch trajectory this section exists to track, and on
+    TPU the same counts apply with the real model riding the fused program.
+    Submission-path work (prefill/staging/buffer pushes — identical per
+    request on both planes by construction) is excluded from both the
+    per-step counts and the timed windows."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serve.fused_step import toy_loop
+    from repro.serve.streaming import StreamingAdmitter
+
+    rng = np.random.default_rng(0)
+    trace = [[] for _ in range(steps)]
+    for uid in range(requests):
+        t = int(rng.integers(0, max(1, steps // 2)))
+        trace[t].append((uid % frontends,
+                         float(rng.integers(0, 64)) / 8.0, uid))
+    cap = requests + slots
+
+    # one jitted decode for every eager pass: repeats must reuse the compile
+    # (a per-pass lambda would put a fresh XLA trace inside the timed loop)
+    eager_decode = jax.jit(lambda t, q: ((t * 7 + q) % 13).astype(jnp.int32))
+
+    def run_eager():
+        adm = StreamingAdmitter(frontends, k, capacity=cap)
+        active = [None] * slots
+        tok = jnp.zeros((slots,), jnp.int32)
+        pos = jnp.zeros((slots,), jnp.int32)
+        order, decode_calls = [], 0
+        dt = 0.0
+        for burst in trace:
+            for (p, pr, uid) in burst:     # submission path: untimed, as in
+                adm.push(p, pr, uid)       # run_fused (identical per request)
+            t0 = time.time()
+            adm.fold()
+            for s in range(slots):
+                if active[s] is not None:
+                    continue
+                got = adm.pop(s % frontends)
+                if got is None:
+                    break
+                order.append(got[1])
+                active[s] = max_new - 1
+            tok = eager_decode(tok, pos)
+            decode_calls += 1
+            for s in range(slots):
+                if active[s] is None:
+                    continue
+                active[s] -= 1
+                if active[s] <= 0:
+                    active[s] = None
+            dt += time.time() - t0
+        t0 = time.time()
+        jax.block_until_ready(tok)
+        dt += time.time() - t0
+        # per-step device programs: folds + pops (adm.dispatches minus the
+        # one buffer-push per request) + the decode call each step
+        return order, adm.dispatches - requests + decode_calls, dt
+
+    def run_fused():
+        loop = toy_loop(slots=slots, frontends=frontends, k=k,
+                        capacity=cap, max_len=10_000)
+        for t, burst in enumerate(trace, start=1):
+            for (p, pr, uid) in burst:
+                loop.submit(p, pr, uid, np.arange(2, dtype=np.int32) + uid,
+                            max_new, at_step=t)
+        d0 = loop.dispatches
+        order = []
+        t0 = time.time()
+        done = 0
+        while done < steps:
+            n = min(chunk, steps - done)
+            for rec in loop.run_steps(n):
+                order.extend(uid for (_s, uid, _t, _p) in rec.admitted)
+            done += n
+        jax.block_until_ready(loop.carry.pool.prio)
+        dt = time.time() - t0
+        return order, loop.dispatches - d0, dt
+
+    rows = []
+    for name, fn in (("device_eager", run_eager), ("fused", run_fused)):
+        fn()                                        # warm (compile) pass
+        best = min((fn() for _ in range(repeats)), key=lambda r: r[2])
+        order, dispatches, dt = best
+        rows.append({
+            "fig": "fused_step", "plane": name, "requests": requests,
+            "steps": steps, "frontends": frontends, "k": k, "slots": slots,
+            "chunk": chunk if name == "fused" else 1,
+            "dispatches_per_step": round(dispatches / steps, 3),
+            "steps_per_s": round(steps / dt, 1),
+            "order": order,
+            "us_per_call": round(dt * 1e6 / steps, 2),
+        })
+    assert rows[0]["order"] == rows[1]["order"], "fused admission diverged"
+    assert (rows[1]["dispatches_per_step"]
+            < rows[0]["dispatches_per_step"]), rows
+    for r in rows:
+        r["order_len"] = len(r.pop("order"))
+        r["order_identical"] = True
+    return rows
+
+
 def batched_speedup(n=1000, p=0.2, graphs=6, places=8, k=8):
     """Batched multi-graph engine vs a sequential per-graph loop (same seeds,
     same policy; run g of the batch is bit-identical to sequential run g,

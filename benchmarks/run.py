@@ -69,6 +69,11 @@ def main() -> None:
         "admission": lambda: paper.admission_throughput(
             requests=5000 if args.full else (400 if args.smoke else 2000),
             repeats=1 if args.smoke else 3),
+        "fused_step": lambda: paper.fused_step_throughput(
+            requests=128 if args.full else (24 if args.smoke else 64),
+            steps=96 if args.full else (24 if args.smoke else 48),
+            chunk=16 if args.full else (6 if args.smoke else 8),
+            repeats=1 if args.smoke else 3),
         "relaxed_topk": (
             (lambda: kernels_bench.bench_relaxed_topk(n=1 << 13, p=64,
                                                       cs=(64, 8)))

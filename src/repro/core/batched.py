@@ -146,6 +146,27 @@ def phase_pop(
     return kp.phase_commit(state, slots, valid, taken)
 
 
+def stream_pop(
+    state: kp.PoolState, places: jnp.ndarray
+) -> Tuple[kp.PoolState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Batched :func:`kpriority.stream_pop` — place ``places[b]`` (i32[B])
+    pops its best visible task in each of the B instances (DESIGN.md §9,
+    §10). Returns ``(state, slot i32[B], prio f32[B], valid bool[B])``;
+    instance b is bit-identical to the unbatched op on instance b alone."""
+    return jax.vmap(kp.stream_pop)(state, places)
+
+
+def stream_pop_fill(
+    state: kp.PoolState,
+    want: jnp.ndarray,     # bool[B, S]
+    places: jnp.ndarray,   # i32[B, S]
+) -> Tuple[kp.PoolState, kp.PopResult]:
+    """Batched :func:`kpriority.stream_pop_fill` — the fused-step admission
+    fill (scan carry threading the pool, stop-at-first-miss per instance) run
+    on all B instances in one program (DESIGN.md §10)."""
+    return jax.vmap(kp.stream_pop_fill)(state, want, places)
+
+
 def ignored_count(
     state_before: kp.PoolState, result: kp.PopResult
 ) -> jnp.ndarray:

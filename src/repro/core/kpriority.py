@@ -612,6 +612,92 @@ def stream_pop(
     return new_state, slot, prio_out, valid
 
 
+def stream_pop_fill(
+    state: PoolState,
+    want: jnp.ndarray,     # bool[S] slot s needs a request
+    places: jnp.ndarray,   # i32[S]  place popping for slot s
+) -> Tuple[PoolState, PopResult]:
+    """Sequential admission fill as ONE traced program (DESIGN.md §10).
+
+    The serving engine's host-side admit loop — ``for each empty decode slot,
+    pop(place); stop at the first miss`` — lifted into a ``lax.scan`` that
+    threads :class:`PoolState` through the carry: slot order is the scan
+    order, each wanted slot conditionally runs :func:`stream_pop`, and a
+    ``stopped`` flag replicates the engine's stop-at-first-failed-pop
+    contract exactly (occupied slots are skipped without stopping; an
+    invalid ``stream_pop`` is a state no-op, so the fused and host-driven
+    pop sequences are bit-identical — tests/test_fused_step.py).
+
+    Returns ``(state, PopResult)`` with [S]-shaped leaves; ``valid[s]`` marks
+    slots that received a request, ``slot[s]`` the popped pool slot.
+    """
+
+    def step(carry, xs):
+        st, stopped = carry
+        w, pl = xs
+        do = w & ~stopped
+
+        def pop_branch(s):
+            s2, slot, prio, valid = stream_pop(s, pl)
+            return s2, slot, prio, valid
+
+        def skip_branch(s):
+            return (s, jnp.int32(0), jnp.float32(INF),
+                    jnp.zeros((), bool))
+
+        st, slot, prio, valid = jax.lax.cond(do, pop_branch, skip_branch, st)
+        stopped = stopped | (do & ~valid)
+        return (st, stopped), (slot, prio, valid & do)
+
+    (state, _), (slots, prios, valids) = jax.lax.scan(
+        step, (state, jnp.zeros((), bool)), (want, places)
+    )
+    return state, PopResult(slot=slots, prio=prios, valid=valids)
+
+
+def queue_phase_chunk(
+    state: PoolState,
+    masks: jnp.ndarray,       # bool[T, M] per-step push mask
+    prios: jnp.ndarray,       # f32[T, M]
+    creators: jnp.ndarray,    # i32[T, M]
+    push_keys: jax.Array,     # [T] PRNG keys
+    pop_keys: jax.Array,      # [T] PRNG keys
+    *,
+    num_places: int,
+    k: int,
+    policy: Policy,
+    arbitration: str = "fused",
+    topk_backend: str = "auto",
+    block_size: int = 1024,
+) -> Tuple[PoolState, PopResult, jnp.ndarray]:
+    """T queue steps — ``push`` then ``phase_pop`` — fused into ONE dispatch
+    via ``lax.scan`` (the step-chunk analogue of ``run_sssp_batched``'s
+    ``phase_chunk``, DESIGN.md §10), for ANY policy. The per-step ignored
+    count is computed in-trace so the structural ρ bound stays checkable
+    without unfusing. Chunked == step-by-step bit-for-bit (the scan body is
+    exactly the unfused step; pinned for all four policies by
+    tests/test_fused_step.py).
+
+    Returns ``(state, PopResult [T, P], ignored i32[T])``.
+    """
+
+    def step(st, xs):
+        mask, pr, cr, pk, qk = xs
+        st = push(st, mask, pr, cr, k=k, policy=policy, key=pk)
+        before = st
+        st, res = phase_pop(
+            st, qk, num_places=num_places, k=k, policy=policy,
+            arbitration=arbitration, topk_backend=topk_backend,
+            block_size=block_size,
+        )
+        return st, (res, ignored_count(before, res))
+
+    state, (results, ignored) = jax.lax.scan(
+        step, state, (masks, prios, creators, push_keys, pop_keys)
+    )
+    return state, results, ignored
+
+
 # ---------------------------------------------------------------------------
 # invariant checking (structural rho-relaxation, §5.3)
 # ---------------------------------------------------------------------------

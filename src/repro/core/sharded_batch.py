@@ -188,6 +188,64 @@ def admission_shardings(mesh: Mesh, tree):
     return jax.tree.map(lambda x: spec_for("", x), tree)
 
 
+def slot_dim_sharding(mesh: Mesh):
+    """THE slot-dim placement rule, shared by the eager engine's decode
+    caches, the fused carry, and the fused staging (DESIGN.md §9.4/§10):
+    returns a spec fn sharding axis 1 (the slot dim, the engine cache
+    convention) over ``batch`` when divisible, replicating otherwise (same
+    divisibility fallback as launch/sharding.py). One definition on purpose
+    — eager and fused placement must stay identical on any mesh."""
+    from jax.sharding import NamedSharding
+
+    d = batch_axis_size(mesh)
+    rep = NamedSharding(mesh, PS())
+
+    def spec(x):
+        if x.ndim >= 2 and x.shape[1] % d == 0:
+            return NamedSharding(mesh, PS(None, BATCH_AXIS))
+        return rep
+
+    return spec
+
+
+def fused_carry_shardings(mesh: Mesh, carry):
+    """NamedShardings for the fused serving step's scan carry
+    (serve/fused_step.py, DESIGN.md §10) on a composed
+    ``make_production_batch_mesh``: the admission pool follows
+    :func:`admission_shardings`; decode-cache leaves shard their slot dim
+    (axis 1, the engine's cache convention) over ``batch`` when divisible —
+    the same placement ``ServeEngine(mesh=...)`` gives the eager path, so
+    the fused program's decode slots stay co-located with the pool shards
+    that feed them; the tiny per-slot cursor vectors replicate. Placement
+    only: the fused step is an ordinary jit program, so GSPMD supplies
+    whatever collectives the sharded pops/splices need and the host-oracle
+    equivalence holds on any mesh (§9.4)."""
+    from jax.sharding import NamedSharding
+
+    cache_spec = slot_dim_sharding(mesh)
+    rep = NamedSharding(mesh, PS())
+    return carry._replace(
+        pool=admission_shardings(mesh, carry.pool),
+        caches=jax.tree.map(cache_spec, carry.caches),
+        cur_tok=rep, pos=rep, slot_req=rep, out_len=rep, budget=rep,
+    )
+
+
+def fused_staging_shardings(mesh: Mesh, staging, staged_caches):
+    """Shardings for the fused step's prefill staging (serve/fused_step.py):
+    staged cache leaves shard the pool-slot dim (axis 1) over ``batch`` when
+    divisible — consistent with :func:`admission_shardings`' placement of
+    the pool they are keyed by — and the scalar-per-slot vectors replicate.
+    Returns ``(staging_shardings, staged_cache_shardings)``."""
+    from jax.sharding import NamedSharding
+
+    rep = NamedSharding(mesh, PS())
+    return (
+        jax.tree.map(lambda _: rep, staging),
+        jax.tree.map(slot_dim_sharding(mesh), staged_caches),
+    )
+
+
 # ---------------------------------------------------------------------------
 # batch × place composition: B instances of the explicit-collective engine
 # ---------------------------------------------------------------------------

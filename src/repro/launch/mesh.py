@@ -75,6 +75,15 @@ def make_production_batch_mesh(
     return jax.make_mesh(shape, axes, **axis_types_kwargs(len(axes)))
 
 
+def make_test_production_batch_mesh():
+    """The 8-device (2 × 2 × 2) batch × data × model mesh every multi-device
+    serving selftest runs under (subprocesses forced to 8 host devices via
+    XLA_FLAGS): the smallest mesh that exercises the full composed-axis
+    placement of :func:`make_production_batch_mesh` — admission pool and
+    decode slots sharded over ``batch``, model over data × model."""
+    return make_production_batch_mesh(batch=2, data=2, model=2)
+
+
 def make_batch_place_mesh(batch: int, place: int):
     """2-D (batch × place) mesh composing the instance axis with the
     explicit-collective engine's ``place`` axis (core/distributed.py): B

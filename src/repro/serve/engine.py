@@ -18,10 +18,18 @@ Python ``HybridKQueue`` (the equivalence oracle), ``"device"`` streams pushes
 into per-place device buffers and folds them into a device-resident pool
 between decode steps (serve/streaming.py) — same admission order bit-for-bit,
 no host queue on the hot path.
+
+``step=`` selects how far the step itself is fused (DESIGN.md §10):
+``"host"``/``"device"`` are the eager per-step oracles (aliases for the
+matching ``admission=``), ``"fused"`` runs admission + pop + splice + decode
+as ONE lax.scan-chunked dispatch per ``step_chunk`` steps
+(serve/fused_step.py) — same admission order and token streams, one device
+program on the entire hot path.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, Optional
 
 import jax
@@ -31,6 +39,24 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.host_queue import HybridKQueue
 from repro.models import decode_step, init_cache, prefill
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_model_fns(cfg: ModelConfig, max_len: int):
+    """Model fns for the fused loop with (cfg, max_len)-stable identity:
+    ``fused_step.build_chunk_fn`` caches compiled chunk programs keyed on the
+    decode fn, so engines (and serving restarts) with an equal config share
+    one compile instead of each pinning a fresh per-instance lambda's
+    programs forever (ModelConfig is a frozen dataclass — hashable by
+    value)."""
+
+    def decode_fn(p, c, t, q):
+        return decode_step(p, cfg, c, t, q)
+
+    def prefill_fn(p, t):
+        return prefill(p, cfg, {"tokens": t}, max_len)
+
+    return decode_fn, prefill_fn
 
 
 @dataclasses.dataclass
@@ -72,11 +98,27 @@ class ServeEngine:
         mesh=None,
         admission: str = "host",
         admission_capacity: int = 256,
+        step: Optional[str] = None,
+        step_chunk: int = 1,
     ):
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
+        # step= subsumes admission=: "host"/"device" are the eager per-step
+        # oracles, "fused" the single-dispatch loop (DESIGN.md §10)
+        if step is None:
+            step = admission
+        if step in ("host", "device"):
+            admission = step
+        elif step != "fused":
+            raise ValueError(f"unknown step mode: {step!r}")
+        self.step_mode = step
+        self.step_chunk = step_chunk
         self.admission = admission
-        if admission == "host":
+        self._fused = None
+        self._dispatches = 0
+        if step == "fused":
+            self.queue = None        # installed after caches exist, below
+        elif admission == "host":
             # min-index spy: pins the same victim choice as the device plane
             # so "host" stays the bit-exact equivalence oracle (DESIGN.md §9)
             self.queue = HybridKQueue(frontends, k, spy="min_index")
@@ -95,22 +137,14 @@ class ServeEngine:
             # cache leaf) over the mesh's batch axis so each device decodes
             # slots/D sequences per step; admission stays host-side (the
             # hybrid k-priority queue is the uncoordinated control plane).
-            # Leaves whose slot dim doesn't divide the axis are replicated
-            # (same divisibility fallback as launch/sharding.py).
-            from jax.sharding import NamedSharding, PartitionSpec as PS
+            # One shared rule with the fused carry/staging placement
+            # (sharded_batch.slot_dim_sharding) so eager and fused decode
+            # slots land identically on any mesh.
+            from repro.core.sharded_batch import slot_dim_sharding
 
-            from repro.core.sharded_batch import BATCH_AXIS, batch_axis_size
-
-            d = batch_axis_size(mesh)
-
-            def shard_slots(x):
-                spec = (
-                    PS(None, BATCH_AXIS)
-                    if x.ndim >= 2 and x.shape[1] % d == 0 else PS()
-                )
-                return jax.device_put(x, NamedSharding(mesh, spec))
-
-            self.caches = jax.tree.map(shard_slots, self.caches)
+            spec = slot_dim_sharding(mesh)
+            self.caches = jax.tree.map(
+                lambda x: jax.device_put(x, spec(x)), self.caches)
         self.cur_tok = np.zeros((slots,), np.int32)
         self.pos = np.zeros((slots,), np.int32)
         self.active: List[Optional[Request]] = [None] * slots
@@ -123,6 +157,36 @@ class ServeEngine:
         self._prefill = jax.jit(
             lambda p, t: prefill(p, cfg, {"tokens": t}, max_len)
         )
+        if step == "fused":
+            from repro.serve.fused_step import FusedServeLoop
+
+            decode_fn, prefill_fn = _fused_model_fns(cfg, max_len)
+            self._fused = FusedServeLoop(
+                slots=slots, frontends=frontends, k=k, max_len=max_len,
+                capacity=admission_capacity, params=params,
+                caches=self.caches, decode_fn=decode_fn,
+                prefill_fn=prefill_fn, mesh=mesh,
+            )
+            self.queue = self._fused       # queue-like: __len__/flush/pending
+            # cache ownership moves into the fused carry (donated each
+            # chunk); the ``caches`` property reads the live carry so the
+            # engine never exposes donated-and-deleted buffers
+            self._caches = None
+
+    # ------------------------------------------------------------- caches
+    @property
+    def caches(self):
+        """Decode caches, valid in every step mode: eager modes own them
+        directly; ``step="fused"`` hands ownership to the fused scan carry
+        (whose buffers are donated per chunk), so the property reads the
+        LIVE carry instead of aliasing deleted arrays (DESIGN.md §10)."""
+        if self._fused is not None:
+            return self._fused.carry.caches
+        return self._caches
+
+    @caches.setter
+    def caches(self, value):
+        self._caches = value
 
     # ------------------------------------------------------------ submission
     def submit(self, req: Request, frontend: int):
@@ -135,12 +199,16 @@ class ServeEngine:
         let f64-distinct/f32-equal priorities order differently — quantizing
         at the boundary keeps the two planes bit-identical for arbitrary
         float inputs (e.g. epoch-seconds deadlines)."""
-        self.queue.push(frontend, float(np.float32(req.priority)), req)
+        qprio = float(np.float32(req.priority))
+        if self._fused is not None:
+            self._fused.submit(frontend, qprio, req, req.tokens, req.max_new)
+        else:
+            self.queue.push(frontend, qprio, req)
 
     def flush_frontends(self):
         """Make every front-end's unpublished requests globally visible
         (shutdown / straggler handoff; the ρ bound only ever tightens)."""
-        if self.admission == "device":
+        if self._fused is not None or self.admission == "device":
             self.queue.flush()
         else:
             for p in range(self.frontends):
@@ -170,15 +238,38 @@ class ServeEngine:
             self.admission_log.append(req.rid)
             prompt = jnp.asarray(req.tokens[None, :], jnp.int32)
             logits, cache = self._prefill(self.params, prompt)
+            self._dispatches += 1
             self._splice_cache(slot, cache)
             self.cur_tok[slot] = int(jnp.argmax(logits[0]))
             self.pos[slot] = len(req.tokens)
             req.out.append(int(self.cur_tok[slot]))
             self.active[slot] = req
 
+    def _consume(self, records) -> List[Request]:
+        """Replay fused StepRecords into the engine's host bookkeeping —
+        same event order as the eager step (admissions, then decode tokens,
+        then completions), so admission_log and Request.out are identical
+        across step modes (DESIGN.md §10)."""
+        done: List[Request] = []
+        for rec in records:
+            self.clock += 1
+            for slot, req, tok0, _pool_slot in rec.admitted:
+                req.admitted_at = self.clock
+                self.admission_log.append(req.rid)
+                req.out.append(tok0)
+                self.active[slot] = req
+            for _slot, req, tok in rec.tokens:
+                req.out.append(tok)
+            for slot, req in rec.finished:
+                done.append(req)
+                self.active[slot] = None
+        return done
+
     # ------------------------------------------------------------------ step
     def step(self) -> List[Request]:
         """Admit + one decode step for all active slots; returns finished."""
+        if self._fused is not None:
+            return self._consume(self._fused.run_steps(1))
         self.clock += 1
         self._admit()
         if not any(r is not None for r in self.active):
@@ -187,6 +278,7 @@ class ServeEngine:
             self.params, self.caches,
             jnp.asarray(self.cur_tok), jnp.asarray(self.pos),
         )
+        self._dispatches += 1
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         done: List[Request] = []
         for slot, req in enumerate(self.active):
@@ -203,10 +295,28 @@ class ServeEngine:
     def run(self, max_steps: int = 10_000) -> List[Request]:
         """Step until every submitted request finishes (or ``max_steps``).
         Unflushed requests are still admitted — own-place visibility and
-        spying reach them — just possibly later (the ρ trade, §2)."""
+        spying reach them — just possibly later (the ρ trade, §2). The fused
+        step mode advances ``step_chunk`` steps per dispatch; trailing no-op
+        steps inside a final chunk are observationally inert (nothing is
+        active, so no admissions and no tokens)."""
         finished: List[Request] = []
-        for _ in range(max_steps):
-            finished.extend(self.step())
+        steps = 0
+        while steps < max_steps:
+            if self._fused is not None:
+                n = min(self.step_chunk, max_steps - steps)
+                finished.extend(self._consume(self._fused.run_steps(n)))
+                steps += n
+            else:
+                finished.extend(self.step())
+                steps += 1
             if (not any(self.active)) and len(self.queue) == 0:
                 break
         return finished
+
+    # --------------------------------------------------------------- queries
+    @property
+    def dispatches(self) -> int:
+        """Device programs launched so far, across decode/prefill and the
+        admission plane — the metric ``benchmarks --only fused_step`` tracks
+        (DESIGN.md §10 dispatch-count math)."""
+        return self._dispatches + getattr(self.queue, "dispatches", 0)

@@ -1,0 +1,618 @@
+"""Single-dispatch fused decode step (DESIGN.md §10).
+
+PR 3 made streaming admission device-resident, but the serving loop still
+interleaved it with decode as SEPARATE host-driven dispatches per step —
+fold, then one ``stream_pop`` per empty slot, then prefill splices, then
+decode: the host round-trip (the centralization bottleneck the paper's
+hybrid k-priority structure exists to avoid) reappeared at the dispatch
+boundary. This module lifts the remaining host-side control flow into one
+traced program: a :class:`FusedServeLoop` step is
+
+  1. **fold** — the stream-accurate publish-on-k fold of this step's
+     :class:`~repro.serve.streaming.AdmissionBuffer` arrival rows
+     (arrival-scheduled per step, packed host-side before dispatch),
+  2. **admit** — :func:`repro.core.kpriority.stream_pop_fill`: the engine's
+     sequential fill of empty decode slots (stop at the first failed pop)
+     as a ``lax.scan`` threading the :class:`PoolState` through its carry,
+  3. **splice** — admitted slots gather their prefill state (first token,
+     position, token budget, KV cache) from a device-resident staging area
+     written at submit time,
+  4. **decode + complete** — one decode step for the whole batch; slots
+     whose budget (or context) is exhausted free themselves for the next
+     step's admission.
+
+``lax.scan`` chunks N such steps into ONE XLA dispatch (events come back
+stacked ``[N, slots]``), so the dispatch count per step drops from
+O(slots + admissions) to 1/N. The relaxed ρ = P·k ordering contract is what
+makes the fusion legal (admission never needed a host-synchronized total
+order — only publish-on-k visibility), and the fused path is pinned
+bit-identical to the host ``HybridKQueue(spy="min_index")`` oracle and to
+``ServeEngine(admission="device")`` on randomized traces
+(tests/test_fused_step.py; 8-device composed-mesh subprocess selftest:
+``python -m repro.serve.fused_step --selftest`` under
+XLA_FLAGS=--xla_force_host_platform_device_count=8).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kpriority as kp
+from repro.serve import streaming
+from repro.serve.streaming import AdmissionBuffer, fold
+
+
+class Staging(NamedTuple):
+    """Device-resident prefill staging, indexed by admission pool slot: what
+    an admitted request needs to start decoding, written once at submit time
+    (prefill runs at submission — it is deterministic in the prompt, so
+    moving it off the admission step changes no output; DESIGN.md §10)."""
+
+    tok: jnp.ndarray      # i32[cap]  first generated token (prefill argmax)
+    pos: jnp.ndarray      # i32[cap]  prompt length == first decode position
+    budget: jnp.ndarray   # i32[cap]  max_new token budget
+
+
+class FusedCarry(NamedTuple):
+    """The scan carry of the fused step program — everything the serving hot
+    loop used to keep host-side, now device-resident (DESIGN.md §10):
+    admission pool, decode caches, and the per-slot decode cursor."""
+
+    pool: kp.PoolState    # admission pool (M = capacity slots, P frontends)
+    caches: Any           # decode caches; every leaf [lead, slots, ...]
+    cur_tok: jnp.ndarray  # i32[S] next input token per decode slot
+    pos: jnp.ndarray      # i32[S] decode position per slot
+    slot_req: jnp.ndarray  # i32[S] pool slot of the active request; -1 empty
+    out_len: jnp.ndarray  # i32[S] tokens emitted for the active request
+    budget: jnp.ndarray   # i32[S] max_new of the active request
+
+
+class StepEvents(NamedTuple):
+    """Per-step device→host event record (stacked [T, S] over a chunk) — the
+    only readback of a fused chunk; the host reconstructs admission order,
+    token streams, and completions from it."""
+
+    admit: jnp.ndarray   # i32[S] pool slot admitted into decode slot s; -1
+    token: jnp.ndarray   # i32[S] decode-step token (valid where ``active``)
+    active: jnp.ndarray  # bool[S] slot held a request this step
+    done: jnp.ndarray    # bool[S] request finished this step
+
+
+class StepRecord(NamedTuple):
+    """Host-side view of one fused step, in engine event order."""
+
+    admitted: List[Tuple[int, Any, int, int]]  # (decode_slot, item, tok0, pool_slot)
+    tokens: List[Tuple[int, Any, int]]         # (decode_slot, item, token)
+    finished: List[Tuple[int, Any]]            # (decode_slot, item)
+
+
+class _Arrival(NamedTuple):
+    step: int       # absolute engine step at which this push becomes foldable
+    place: int
+    pool_slot: int
+    prio: float     # f32-exact
+    uid: int        # global arrival index
+
+
+@functools.lru_cache(maxsize=None)
+def build_chunk_fn(decode_fn: Callable, *, k: int, frontends: int,
+                   slots: int, max_len: int, n: int):
+    """Build (compile-once per static config — loop instances and serving
+    restarts share the cache) THE fused program: n steps of fold →
+    ``stream_pop_fill`` → splice → decode → complete as one jitted
+    ``lax.scan`` over per-step AdmissionBuffer rows — one dispatch per chunk
+    (DESIGN.md §10). Signature:
+    ``(params, carry, staging, staged_caches, bufs[n]) -> (carry, events)``
+    with ``carry`` donated."""
+    places_vec = jnp.arange(slots, dtype=jnp.int32) % frontends
+
+    def run(params, carry, staging, staged_caches, bufs):
+        def one_step(c, buf):
+            pool, _ = fold(c.pool, buf, k=k)
+            pool, res = kp.stream_pop_fill(pool, c.slot_req < 0, places_vec)
+            got = res.valid                              # bool[S]
+            ps = jnp.where(got, res.slot, 0)             # i32[S]
+            cur_tok = jnp.where(got, staging.tok[ps], c.cur_tok)
+            pos = jnp.where(got, staging.pos[ps], c.pos)
+            budget = jnp.where(got, staging.budget[ps], c.budget)
+            out_len = jnp.where(got, 1, c.out_len)
+            slot_req = jnp.where(got, ps, c.slot_req)
+
+            def splice(full, stage):
+                g = jnp.take(stage, ps, axis=1)          # [lead, S, ...]
+                m = got.reshape((1, -1) + (1,) * (full.ndim - 2))
+                return jnp.where(m, g.astype(full.dtype), full)
+
+            caches = jax.tree.map(splice, c.caches, staged_caches)
+            logits, caches = decode_fn(params, caches, cur_tok, pos)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            active = slot_req >= 0
+            pos = jnp.where(active, pos + 1, pos)
+            cur_tok = jnp.where(active, nxt, cur_tok)
+            out_len = jnp.where(active, out_len + 1, out_len)
+            done = active & ((out_len >= budget) | (pos >= max_len - 1))
+            slot_req = jnp.where(done, -1, slot_req)
+            new_c = FusedCarry(pool, caches, cur_tok, pos, slot_req,
+                               out_len, budget)
+            ev = StepEvents(admit=jnp.where(got, res.slot, -1),
+                            token=nxt, active=active, done=done)
+            return new_c, ev
+
+        return jax.lax.scan(one_step, carry, bufs)
+
+    return jax.jit(run, donate_argnums=(1,))
+
+
+def _stage_update_impl(staging, staged_caches, ps, tok, pos, budget, cache1):
+    staging = Staging(
+        tok=staging.tok.at[ps].set(tok),
+        pos=staging.pos.at[ps].set(pos),
+        budget=staging.budget.at[ps].set(budget),
+    )
+    staged_caches = jax.tree.map(
+        lambda full, one: full.at[:, ps].set(one[:, 0].astype(full.dtype)),
+        staged_caches, cache1,
+    )
+    return staging, staged_caches
+
+
+_stage_update = jax.jit(_stage_update_impl, donate_argnums=(0, 1))
+
+
+class FusedServeLoop:
+    """Device-resident serving loop: admission + pop + splice + decode as one
+    dispatch per chunk (DESIGN.md §10).
+
+    Queue-like on the submission side (``submit``/``flush``/``__len__``/
+    ``pending`` mirror :class:`~repro.serve.streaming.StreamingAdmitter` —
+    identical pool-slot allocation, so popped-slot sequences are comparable
+    bit-for-bit) and engine-like on the decode side (``run_steps(n)``
+    advances n steps in ⌈n/chunk⌉ dispatches and returns per-step
+    :class:`StepRecord`\\ s).
+
+    ``decode_fn(params, caches, tok, pos) -> (logits [S, V], caches)`` and
+    ``prefill_fn(params, tokens [1, L]) -> (logits [1, V], cache1)`` supply
+    the model; tests drive a toy pair, ``ServeEngine(step="fused")`` the
+    real one — admission semantics are model-independent.
+
+    ``mesh``: place the carry on a composed serving mesh
+    (``launch.mesh.make_production_batch_mesh``) via
+    ``sharded_batch.fused_carry_shardings`` — pool and cache slot leaves
+    shard over ``batch``, bookkeeping replicates; the fused program is an
+    ordinary jit, so GSPMD supplies the collectives and semantics are
+    unchanged on any mesh (the §9.4 placement argument).
+
+    Memory note: the prefill staging holds one cache copy per admission
+    pool slot — O(``capacity`` × per-slot cache) device bytes for the
+    loop's lifetime. Size ``capacity`` to the real in-flight
+    (submitted-not-yet-admitted) budget, not to the eager plane's roomy
+    default; a staging indirection that decouples the two is a ROADMAP
+    candidate.
+    """
+
+    def __init__(
+        self,
+        *,
+        slots: int,
+        frontends: int,
+        k: int,
+        max_len: int,
+        capacity: int = 256,
+        buffer_cap: int = 64,
+        params: Any = None,
+        caches: Any,
+        decode_fn: Callable,
+        prefill_fn: Callable,
+        mesh=None,
+    ):
+        self.slots, self.frontends, self.k = slots, frontends, k
+        self.max_len, self.capacity = max_len, capacity
+        self.buffer_cap = buffer_cap
+        self.params = params
+        self.decode_fn = decode_fn
+        self._prefill = jax.jit(prefill_fn)
+        self.mesh = mesh
+        self.clock = 0
+        self.dispatches = 0
+        self.carry = FusedCarry(
+            pool=kp.init_pool(capacity, frontends),
+            caches=caches,
+            cur_tok=jnp.zeros((slots,), jnp.int32),
+            pos=jnp.zeros((slots,), jnp.int32),
+            slot_req=jnp.full((slots,), -1, jnp.int32),
+            out_len=jnp.zeros((slots,), jnp.int32),
+            budget=jnp.ones((slots,), jnp.int32),
+        )
+        self.staging = Staging(
+            tok=jnp.zeros((capacity,), jnp.int32),
+            pos=jnp.zeros((capacity,), jnp.int32),
+            budget=jnp.ones((capacity,), jnp.int32),
+        )
+        self.staged_caches = jax.tree.map(
+            lambda x: jnp.zeros(x.shape[:1] + (capacity,) + x.shape[2:],
+                                x.dtype),
+            caches,
+        )
+        if mesh is not None:
+            from repro.core.sharded_batch import (
+                fused_carry_shardings, fused_staging_shardings)
+
+            self.carry = jax.device_put(
+                self.carry, fused_carry_shardings(mesh, self.carry))
+            st_sh, sc_sh = fused_staging_shardings(
+                mesh, self.staging, self.staged_caches)
+            self.staging = jax.device_put(self.staging, st_sh)
+            self.staged_caches = jax.device_put(self.staged_caches, sc_sh)
+        # host-side bookkeeping (never on the step path)
+        self._by_slot = {}                     # pool slot -> item, in flight
+        self._tok0 = {}                        # pool slot -> first token
+        self._pending: List[_Arrival] = []     # not-yet-dispatched arrivals
+        self._next_slot = 0
+        self._arrival = 0
+        self._unpub = [0] * frontends          # pool unpub_pushes host mirror
+        self._active_items: List[Optional[Any]] = [None] * slots
+        self.admission_log: List[Any] = []     # items, admission order
+
+    # ------------------------------------------------------------ submission
+    def _alloc_slot(self) -> int:
+        s, self._next_slot = streaming.alloc_pool_slot(
+            self._by_slot, self._next_slot, self.capacity)
+        return s
+
+    def submit(self, place: int, priority: float, item: Any, tokens,
+               max_new: int, *, at_step: Optional[int] = None) -> int:
+        """Stream one request in: run its prefill (one dispatch, submit-time
+        — deterministic in the prompt, so admission-time and submit-time
+        prefill produce identical tokens), stage the result device-side by
+        pool slot, and schedule the push's fold at ``at_step`` (default: the
+        next unexecuted step, matching the eager engine's fold-before-admit
+        of everything submitted before the step). Feed f32-exact priorities
+        when comparing against a host oracle (``ServeEngine.submit``
+        quantizes at the boundary). Returns the reserved pool slot."""
+        step = self.clock + 1 if at_step is None else at_step
+        if step <= self.clock:
+            raise ValueError(
+                f"at_step={step} already executed (clock={self.clock})")
+        pool_slot = self._alloc_slot()
+        self._by_slot[pool_slot] = item
+        toks = jnp.asarray(np.asarray(tokens)[None, :], jnp.int32)
+        logits, cache1 = self._prefill(self.params, toks)
+        tok0 = int(jnp.argmax(logits[0]))
+        self.staging, self.staged_caches = _stage_update(
+            self.staging, self.staged_caches, jnp.int32(pool_slot),
+            jnp.int32(tok0), jnp.int32(len(np.asarray(tokens))),
+            jnp.int32(max_new), cache1,
+        )
+        self._tok0[pool_slot] = tok0
+        self._pending.append(_Arrival(
+            step, place, pool_slot, float(priority), self._arrival))
+        self._arrival += 1
+        self.dispatches += 2                   # prefill + staging scatter
+        return pool_slot
+
+    # --------------------------------------------------------------- packing
+    def _pack_bufs(self, n: int):
+        """Pack pending arrivals into per-step AdmissionBuffer rows
+        [n, P, C] (the scan's xs): entry → its scheduled step's buffer, in
+        arrival order (the fold replays publish-on-k from exactly this
+        order). Arrivals beyond the chunk stay pending."""
+        first = self.clock + 1
+        p, c = self.frontends, self.buffer_cap
+        prio = np.full((n, p, c), np.inf, np.float32)
+        slot = np.full((n, p, c), -1, np.int32)
+        arrival = np.zeros((n, p, c), np.int32)
+        count = np.zeros((n, p), np.int32)
+        remaining = []
+        for a in self._pending:
+            if a.step >= first + n:
+                remaining.append(a)
+                continue
+            t = a.step - first
+            i = count[t, a.place]
+            if i >= c:
+                raise ValueError(
+                    f"fused-step arrival burst overflow: > buffer_cap="
+                    f"{c} arrivals for place {a.place} at step {a.step}; "
+                    "raise buffer_cap=")
+            prio[t, a.place, i] = a.prio
+            slot[t, a.place, i] = a.pool_slot
+            arrival[t, a.place, i] = a.uid
+            count[t, a.place] += 1
+        self._pending = remaining
+        bufs = AdmissionBuffer(
+            prio=jnp.asarray(prio), slot=jnp.asarray(slot),
+            arrival=jnp.asarray(arrival), count=jnp.asarray(count),
+        )
+        return bufs, count
+
+    # ------------------------------------------------------------- chunk fn
+    def _chunk_fn(self, n: int):
+        return build_chunk_fn(
+            self.decode_fn, k=self.k, frontends=self.frontends,
+            slots=self.slots, max_len=self.max_len, n=n)
+
+    # ---------------------------------------------------------------- steps
+    def run_steps(self, n: int) -> List[StepRecord]:
+        """Advance n engine steps in ONE dispatch; returns one
+        :class:`StepRecord` per step, in engine event order (admissions in
+        decode-slot order, then decode tokens, then completions — exactly
+        the eager ``ServeEngine.step`` sequence)."""
+        bufs, counts = self._pack_bufs(n)
+        fn = self._chunk_fn(n)
+        self.carry, ev = fn(self.params, self.carry, self.staging,
+                            self.staged_caches, bufs)
+        self.dispatches += 1
+        admit = np.asarray(ev.admit)
+        token = np.asarray(ev.token)
+        active = np.asarray(ev.active)
+        done = np.asarray(ev.done)
+        records: List[StepRecord] = []
+        for t in range(n):
+            self.clock += 1
+            for pl in range(self.frontends):                 # unpub mirror
+                u = self._unpub[pl] + int(counts[t, pl])
+                self._unpub[pl] = 0 if self.k == 0 else u % self.k
+            rec = StepRecord([], [], [])
+            for s in range(self.slots):
+                pslot = int(admit[t, s])
+                if pslot >= 0:
+                    item = self._by_slot.pop(pslot)
+                    self._active_items[s] = item
+                    self.admission_log.append(item)
+                    rec.admitted.append(
+                        (s, item, self._tok0.pop(pslot), pslot))
+            for s in range(self.slots):
+                if active[t, s]:
+                    rec.tokens.append(
+                        (s, self._active_items[s], int(token[t, s])))
+                if done[t, s]:
+                    rec.finished.append((s, self._active_items[s]))
+                    self._active_items[s] = None
+            records.append(rec)
+        return records
+
+    # ---------------------------------------------------------------- flush
+    def flush(self, place: Optional[int] = None):
+        """Exact drain at a chunk boundary: every pending arrival (even ones
+        scheduled for future steps) folds into the pool NOW, force-publishing
+        every place (``place=None``) or exactly one (the per-place
+        ``HybridKQueue.flush(p)`` analogue; the others keep stream-accurate
+        publish-on-k, which fold timing cannot perturb — DESIGN.md §10).
+        Partially-drained chunks are safe: arrivals already folded live in
+        the pool, the rest are packed here — nothing is dropped or double-
+        folded (regression-pinned by tests/test_fused_step.py)."""
+        p = self.frontends
+        need = max(
+            (sum(1 for a in self._pending if a.place == pl)
+             for pl in range(p)), default=1)
+        # pad the one-shot buffer width to buffer_cap buckets: repeated
+        # flushes with varying pending counts hit a handful of compiled fold
+        # shapes instead of one XLA specialization per distinct width
+        c = self.buffer_cap * max(1, -(-max(need, 1) // self.buffer_cap))
+        prio = np.full((p, c), np.inf, np.float32)
+        slot = np.full((p, c), -1, np.int32)
+        arrival = np.zeros((p, c), np.int32)
+        count = np.zeros((p,), np.int32)
+        for a in self._pending:
+            i = count[a.place]
+            prio[a.place, i] = a.prio
+            slot[a.place, i] = a.pool_slot
+            arrival[a.place, i] = a.uid
+            count[a.place] += 1
+        self._pending = []
+        buf = AdmissionBuffer(
+            prio=jnp.asarray(prio), slot=jnp.asarray(slot),
+            arrival=jnp.asarray(arrival), count=jnp.asarray(count),
+        )
+        if place is None:
+            pool, _ = streaming._jitted_fold(self.k, True)(
+                self.carry.pool, buf)
+            self._unpub = [0] * p
+        else:
+            mask = jnp.zeros((p,), bool).at[place].set(True)
+            pool, _ = streaming._jitted_fold_places(self.k)(
+                self.carry.pool, buf, mask)
+            for pl in range(p):
+                u = self._unpub[pl] + int(count[pl])
+                self._unpub[pl] = (
+                    0 if (pl == place or self.k == 0) else u % self.k)
+        self.carry = self.carry._replace(pool=pool)
+        self.dispatches += 1
+
+    # --------------------------------------------------------------- queries
+    def __len__(self) -> int:
+        """Requests submitted but not yet admitted (the
+        ``StreamingAdmitter.__len__`` analogue, at chunk granularity)."""
+        return len(self._by_slot)
+
+    def pending(self, place: int) -> int:
+        """Unpublished + still-scheduled pushes of ``place`` (host queue's
+        ``len(local)`` analogue — no device readback)."""
+        return self._unpub[place] + sum(
+            1 for a in self._pending if a.place == place)
+
+    @property
+    def idle(self) -> bool:
+        return (not any(i is not None for i in self._active_items)
+                and len(self._by_slot) == 0)
+
+
+# ---------------------------------------------------------------------------
+# toy model: admission semantics are model-independent — the differential
+# harness (tests/test_fused_step.py) and the mesh selftest drive this pair
+# ---------------------------------------------------------------------------
+
+TOY_VOCAB = 13
+
+
+def toy_decode_fn(params, caches, tok, pos):
+    """Trivial deterministic decode (token stream is a pure function of the
+    first token and position — host-simulable, so the randomized harness
+    checks token routing without paying for a transformer)."""
+    logits = jax.nn.one_hot(
+        (tok * 7 + pos) % TOY_VOCAB, TOY_VOCAB, dtype=jnp.float32)
+    return logits, caches
+
+
+def toy_prefill_fn(params, toks):
+    first = (jnp.sum(toks) * 3 + toks.shape[1]) % TOY_VOCAB
+    logits = jax.nn.one_hot(first, TOY_VOCAB, dtype=jnp.float32)[None]
+    return logits, {"kv": jnp.ones((1, 1, 2), jnp.float32)}
+
+
+def toy_loop(*, slots, frontends, k, max_len=10_000, capacity=128,
+             buffer_cap=32, mesh=None) -> FusedServeLoop:
+    """A :class:`FusedServeLoop` over the toy model, with the engine's cache
+    convention (slot dim = axis 1 of every leaf) — splice/staging machinery
+    is exercised end-to-end, compiles are shared across instances (the toy
+    fns are module-level, so ``build_chunk_fn``'s cache hits)."""
+    caches = {"kv": jnp.zeros((1, slots, 2), jnp.float32)}
+    return FusedServeLoop(
+        slots=slots, frontends=frontends, k=k, max_len=max_len,
+        capacity=capacity, buffer_cap=buffer_cap, params=None,
+        caches=caches, decode_fn=toy_decode_fn, prefill_fn=toy_prefill_fn,
+        mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# selftest (subprocess: run under XLA_FLAGS=--xla_force_host_platform_device_count=8)
+# ---------------------------------------------------------------------------
+
+def _oracle_drive(trace, *, slots, frontends, k, max_len, queue, fold_fn):
+    """Drive the eager slot state machine (the exact ServeEngine.step
+    sequence) over ``trace`` against a queue-like admission plane; returns
+    (admission uids, (step, slot, uid) fills)."""  # pragma: no cover
+    active = [None] * slots   # uid -> dict(out, pos, max_new)
+    meta = {}
+    admission, fills = [], []
+    for step, burst in enumerate(trace, start=1):
+        for (place, pr, uid, max_new, plen) in burst:
+            queue.push(place, pr, uid)
+            meta[uid] = (max_new, plen)
+        fold_fn()
+        for s in range(slots):
+            if active[s] is not None:
+                continue
+            got = queue.pop(s % frontends)
+            if got is None:
+                break
+            uid = got[1]
+            admission.append(uid)
+            fills.append((step, s, uid))
+            max_new, plen = meta[uid]
+            active[s] = {"out": 1, "pos": plen, "max_new": max_new}
+        for s in range(slots):
+            a = active[s]
+            if a is None:
+                continue
+            a["pos"] += 1
+            a["out"] += 1
+            if a["out"] >= a["max_new"] or a["pos"] >= max_len - 1:
+                active[s] = None
+    return admission, fills
+
+
+def _fused_drive(trace, *, slots, frontends, k, max_len, chunk,
+                 mesh=None):  # pragma: no cover
+    loop = toy_loop(slots=slots, frontends=frontends, k=k, max_len=max_len,
+                    mesh=mesh)
+    for step, burst in enumerate(trace, start=1):
+        for (place, pr, uid, max_new, plen) in burst:
+            loop.submit(place, pr, uid, np.arange(plen) + uid, max_new,
+                        at_step=step)
+    admission, fills = [], []
+    t = 0
+    while t < len(trace):
+        n = min(chunk, len(trace) - t)
+        for i, rec in enumerate(loop.run_steps(n)):
+            for (s, item, _tok0, _ps) in rec.admitted:
+                admission.append(item)
+                fills.append((t + i + 1, s, item))
+        t += n
+    return admission, fills
+
+
+def _selftest_toy_differential(mesh=None, chunk=4):  # pragma: no cover
+    from repro.core.host_queue import HybridKQueue
+
+    slots, frontends, k, max_len = 4, 2, 3, 64
+    rng = np.random.default_rng(17)
+    trace, uid = [], 0
+    for _ in range(40):
+        burst = []
+        for _ in range(int(rng.integers(0, 4))):
+            burst.append((int(rng.integers(frontends)),
+                          float(rng.integers(0, 8)) / 4.0, uid,
+                          int(rng.integers(1, 5)), int(rng.integers(1, 4))))
+            uid += 1
+        trace.append(burst)
+
+    host = HybridKQueue(frontends, k, spy="min_index")
+    ref = _oracle_drive(trace, slots=slots, frontends=frontends, k=k,
+                        max_len=max_len, queue=host, fold_fn=lambda: None)
+    dev_q = streaming.StreamingAdmitter(frontends, k, capacity=128)
+    dev = _oracle_drive(trace, slots=slots, frontends=frontends, k=k,
+                        max_len=max_len, queue=dev_q, fold_fn=dev_q.fold)
+    fused1 = _fused_drive(trace, slots=slots, frontends=frontends, k=k,
+                          max_len=max_len, chunk=1, mesh=mesh)
+    fusedN = _fused_drive(trace, slots=slots, frontends=frontends, k=k,
+                          max_len=max_len, chunk=chunk, mesh=mesh)
+    assert fused1 == ref, (fused1, ref)
+    assert fused1 == dev, (fused1, dev)
+    assert fusedN == ref, (fusedN, ref)
+    tag = "mesh" if mesh is not None else "local"
+    print(f"FUSED_TRACE_OK {tag} uid={uid} admitted={len(ref[0])}")
+
+
+def _selftest_engine_fused(mesh):  # pragma: no cover
+    """ServeEngine(step="fused", mesh=composed) admits in exactly the host
+    oracle's order, with identical token streams (the ISSUE 4 acceptance
+    criterion under the 8-device batch × data × model mesh)."""
+    from repro.configs import get_reduced
+    from repro.models import materialize, model_p
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_reduced("qwen3_1_7b")
+    params = materialize(jax.random.PRNGKey(0), model_p(cfg))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+               for _ in range(8)]
+    prios = [float(v) for v in rng.permutation(len(prompts))]
+
+    def run(mode, mesh_):
+        eng = ServeEngine(cfg, params, slots=4, max_len=32, frontends=2, k=2,
+                          mesh=mesh_, step=mode, step_chunk=3)
+        for i, toks in enumerate(prompts):
+            eng.submit(Request(rid=i, tokens=toks, max_new=4,
+                               priority=prios[i]), frontend=i % 2)
+        done = eng.run()
+        return eng.admission_log, {r.rid: r.out for r in done}
+
+    ref_log, ref_out = run("host", None)
+    fus_log, fus_out = run("fused", mesh)
+    assert ref_log == fus_log, (ref_log, fus_log)
+    assert ref_out == fus_out, (ref_out, fus_out)
+    print(f"FUSED_ENGINE_OK order={ref_log}")
+
+
+def selftest() -> None:  # pragma: no cover - exercised via subprocess
+    from repro.launch.mesh import make_test_production_batch_mesh
+
+    d = len(jax.devices())
+    _selftest_toy_differential()
+    if d >= 8:
+        mesh = make_test_production_batch_mesh()
+        _selftest_toy_differential(mesh=mesh)
+        _selftest_engine_fused(mesh)
+    print(f"FUSED_OK devices={d}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--selftest" in sys.argv:
+        selftest()

@@ -83,6 +83,7 @@ def fold(
     *,
     k: int,
     force: bool = False,
+    force_places: Optional[jnp.ndarray] = None,   # bool[P], traced
 ) -> Tuple[kp.PoolState, AdmissionBuffer]:
     """Drain the buffers into the pool with stream-accurate publish-on-k.
 
@@ -95,7 +96,12 @@ def fold(
     exactly ``len(local)`` after the host queue processed the same pushes,
     so the post-fold visible set matches ``HybridKQueue`` bit-for-bit
     (DESIGN.md §9). ``force`` (or k == 0) publishes everything — the
-    ``flush`` analogue. Publishing is monotone ⇒ ignored ≤ P·k is preserved.
+    ``flush`` analogue; ``force_places`` (bool[P], traced) flushes exactly
+    the marked places while the rest keep stream-accurate publish-on-k —
+    the per-place ``HybridKQueue.flush(p)`` analogue (because publication
+    is a pure function of each place's stream position, draining the other
+    places' buffered rows early is transparent, DESIGN.md §9.1/§10).
+    Publishing is monotone ⇒ ignored ≤ P·k is preserved.
 
     One fused device program: pure jnp, jit/shard_map-compatible; returns
     the updated pool and an empty buffer.
@@ -115,6 +121,10 @@ def fold(
         limit = events * k - pool.unpub_pushes
         pub_prev = events >= 1
         new_unpub = total - events * k
+        if force_places is not None:
+            limit = jnp.where(force_places, buf.count, limit)
+            pub_prev = pub_prev | force_places
+            new_unpub = jnp.where(force_places, 0, new_unpub)
 
     # scatter the buffered items into slot-indexed [M] layouts (invalid rows
     # target index M and are dropped; live slots are unique by construction —
@@ -154,8 +164,35 @@ def _jitted_fold(k: int, force: bool):
     )
 
 
+@functools.lru_cache(maxsize=None)
+def _jitted_fold_places(k: int):
+    """Compile-once per-place flush fold: the ``force_places`` mask is a
+    traced argument, so one program serves every place choice."""
+
+    def f(pool, buf, mask):
+        return fold(pool, buf, k=k, force_places=mask)
+
+    return jax.jit(f, donate_argnums=(0, 1))
+
+
 _jitted_buffer_push = jax.jit(buffer_push, donate_argnums=(0,))
 _jitted_stream_pop = jax.jit(kp.stream_pop, donate_argnums=(0,))
+
+
+def alloc_pool_slot(occupied, next_slot: int, capacity: int):
+    """THE pool-slot allocator, shared by every device admission plane
+    (StreamingAdmitter and the fused loop): a monotone cursor over
+    ``capacity`` slots skipping in-flight ones. One definition on purpose —
+    the planes must reserve identical slot sequences on identical traces so
+    their popped-slot streams stay comparable bit-for-bit
+    (tests/test_fused_step.py pins this). Returns ``(slot, new_cursor)``."""
+    if len(occupied) >= capacity:
+        raise RuntimeError(
+            f"admission pool full ({capacity} in-flight requests); "
+            "raise capacity= or pop before pushing")
+    while next_slot in occupied:
+        next_slot = (next_slot + 1) % capacity
+    return next_slot, (next_slot + 1) % capacity
 
 
 class StreamingAdmitter:
@@ -214,18 +251,14 @@ class StreamingAdmitter:
         self._push_fn = _jitted_buffer_push
         self._fold_fn = _jitted_fold(k, False)
         self._flush_fn = _jitted_fold(k, True)
+        self._flush_place_fn = _jitted_fold_places(k)
         self._pop_fn = _jitted_stream_pop
+        self.dispatches = 0                    # device programs launched
 
     # ------------------------------------------------------------------ push
     def _alloc_slot(self) -> int:
-        if len(self._items) >= self.capacity:
-            raise RuntimeError(
-                f"admission pool full ({self.capacity} in-flight requests); "
-                "raise capacity= or pop before pushing")
-        while self._next_slot in self._items:
-            self._next_slot = (self._next_slot + 1) % self.capacity
-        s = self._next_slot
-        self._next_slot = (s + 1) % self.capacity
+        s, self._next_slot = alloc_pool_slot(
+            self._items, self._next_slot, self.capacity)
         return s
 
     def push(self, place: int, priority: float, item: Any,
@@ -245,12 +278,13 @@ class StreamingAdmitter:
             self.buf, place, slot, float(priority), self._arrival)
         self._arrival += 1
         self._staged[place] += 1
+        self.dispatches += 1
 
     # ------------------------------------------------------------------ fold
-    def _account_fold(self, force: bool):
+    def _account_fold(self, force: bool, place: Optional[int] = None):
         for p in range(self.num_places):
             total = self._unpub[p] + self._staged[p]
-            if force or self.k == 0:
+            if force or self.k == 0 or p == place:
                 self._unpub[p] = 0
             else:
                 self._unpub[p] = total % self.k
@@ -261,19 +295,27 @@ class StreamingAdmitter:
         the engine calls this once per decode step, before admission pops."""
         self.pool, self.buf = self._fold_fn(self.pool, self.buf)
         self._account_fold(force=False)
+        self.dispatches += 1
 
     def flush(self, place: Optional[int] = None):
-        """Publish EVERY place's staged + unpublished requests (the
-        all-frontends ``HybridKQueue.flush`` loop as one device program).
-        Per-place flush is deliberately not supported — silently flushing
-        all places on ``flush(0)`` would diverge from the host oracle's
-        visible set, so a specific ``place`` raises instead."""
+        """Publish staged + unpublished requests: every place's when
+        ``place`` is None (the all-frontends ``HybridKQueue.flush`` loop as
+        one device program), exactly one place's otherwise — the per-place
+        ``HybridKQueue.flush(p)`` analogue. The per-place form drains the
+        whole buffer into the pool (partially-drained buffers can't be left
+        behind mid-stream) but only the flushed place publishes
+        unconditionally; the rest keep stream-accurate publish-on-k, which
+        is position- not fold-timing-dependent, so the host-oracle visible
+        set is matched exactly (DESIGN.md §9.1/§10)."""
         if place is not None:
-            raise ValueError(
-                "StreamingAdmitter.flush publishes all places in one fused "
-                "program; per-place flush is host-queue-only")
-        self.pool, self.buf = self._flush_fn(self.pool, self.buf)
-        self._account_fold(force=True)
+            mask = jnp.zeros((self.num_places,), bool).at[place].set(True)
+            self.pool, self.buf = self._flush_place_fn(
+                self.pool, self.buf, mask)
+            self._account_fold(force=False, place=place)
+        else:
+            self.pool, self.buf = self._flush_fn(self.pool, self.buf)
+            self._account_fold(force=True)
+        self.dispatches += 1
 
     # ------------------------------------------------------------------- pop
     def pop(self, place: int) -> Optional[Tuple[float, Any]]:
@@ -282,6 +324,7 @@ class StreamingAdmitter:
         request must be prefetched host-side anyway)."""
         self.pool, slot, prio, valid = self._pop_fn(
             self.pool, jnp.int32(place))
+        self.dispatches += 1
         if not bool(valid):
             return None
         return float(prio), self._items.pop(int(slot))
@@ -355,13 +398,13 @@ def _selftest_engine_equivalence():  # pragma: no cover
     import numpy as np
 
     from repro.configs import get_reduced
-    from repro.launch.mesh import make_production_batch_mesh
+    from repro.launch.mesh import make_test_production_batch_mesh
     from repro.models import materialize, model_p
     from repro.serve.engine import Request, ServeEngine
 
     cfg = get_reduced("qwen3_1_7b")
     params = materialize(jax.random.PRNGKey(0), model_p(cfg))
-    mesh = make_production_batch_mesh(batch=2, data=2, model=2)
+    mesh = make_test_production_batch_mesh()
     rng = np.random.default_rng(3)
     prompts = [rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
                for _ in range(8)]
@@ -383,12 +426,12 @@ def _selftest_engine_equivalence():  # pragma: no cover
 
 
 def selftest() -> None:  # pragma: no cover - exercised via subprocess
-    from repro.launch.mesh import make_production_batch_mesh
+    from repro.launch.mesh import make_test_production_batch_mesh
 
     d = len(jax.devices())
     _selftest_trace_equivalence()
     if d >= 8:
-        mesh = make_production_batch_mesh(batch=2, data=2, model=2)
+        mesh = make_test_production_batch_mesh()
         _selftest_trace_equivalence(mesh=mesh)
         _selftest_engine_equivalence()
     print(f"STREAM_OK devices={d}")

@@ -1,0 +1,600 @@
+"""Randomized differential harness for the single-dispatch fused decode step
+(ISSUE 4 tentpole contract, DESIGN.md §10):
+
+  * fused-step admission order, popped-pool-slot sequence, decode-slot
+    fills, AND token streams are bit-identical to the host
+    ``HybridKQueue(spy="min_index")`` oracle and to the eager
+    ``admission="device"`` plane on randomized traces — arrival bursts,
+    priority ties (incl. f32-quantization collisions), k = 0, empty-pool
+    steps — for chunk sizes 1, 3, and whole-trace,
+  * step-chunk identity: the chunked scan equals step-by-step execution
+    bit-for-bit, events and final carry alike,
+  * the ρ/ignored-work bound holds through the fused chunked program for
+    ALL FOUR policies, and chunked == step-by-step for the generic
+    ``queue_phase_chunk`` program,
+  * ``stream_pop_fill`` replicates the engine's stop-at-first-miss admit
+    loop exactly (single and batched),
+  * capacity-full raises like the eager plane; flush-after-chunk-boundary
+    (full and per-place) drains exactly (the StreamingAdmitter per-place
+    flush fix rides the same contract),
+  * engine-level: ``ServeEngine(step="fused")`` == host == device on the
+    real reduced model; the 8-device composed-mesh subprocess selftest.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import batched, kpriority as kp
+from repro.core.host_queue import HybridKQueue
+from repro.serve.fused_step import TOY_VOCAB, toy_loop
+from repro.serve.streaming import StreamingAdmitter
+
+# priorities drawn from this grid: repeated values + f64-distinct pairs that
+# collide after f32 quantization, so the (priority, uid) tie-break carries
+# real weight on every plane (quantized at the harness boundary, as
+# ServeEngine.submit does)
+PRIO_GRID = [0.0, 0.5, 1.0, 1.5, 0.1, 0.1 + 1e-12, 7.5, 7.5 + 1e-12]
+
+
+def _prompt(uid, plen):
+    return ((np.arange(plen) + uid) % 11).astype(np.int32)
+
+
+def _tok0(uid, plen):
+    return int((_prompt(uid, plen).sum() * 3 + plen) % TOY_VOCAB)
+
+
+def gen_trace(seed, steps, frontends, *, lead_empty=2, burst_max=4):
+    """Per-step arrival bursts: (place, f32-quantized prio, uid, max_new,
+    plen). The first ``lead_empty`` steps are arrival-free (empty-pool
+    steps); later steps may draw empty bursts too."""
+    rng = np.random.default_rng(seed)
+    trace, uid = [], 0
+    for t in range(steps):
+        burst = []
+        if t >= lead_empty:
+            for _ in range(int(rng.integers(0, burst_max + 1))):
+                pr = float(np.float32(PRIO_GRID[rng.integers(len(PRIO_GRID))]))
+                burst.append((int(rng.integers(frontends)), pr, uid,
+                              int(rng.integers(1, 5)),
+                              int(rng.integers(1, 4))))
+                uid += 1
+        trace.append(burst)
+    return trace
+
+
+class OracleEngine:
+    """The eager ServeEngine.step state machine over a queue-like admission
+    plane, with the toy decode simulated host-side: the python-level truth
+    the fused program must reproduce event-for-event."""
+
+    def __init__(self, queue, *, slots, frontends, max_len, fold=False):
+        self.q = queue
+        self.slots, self.frontends, self.max_len = slots, frontends, max_len
+        self.do_fold = fold
+        self.active = [None] * slots
+        self.meta = {}
+        self.clock = 0
+        self.admission, self.fills, self.tokens = [], [], {}
+        self.pop_slots = []      # popped pool slots (device planes only)
+
+    def push(self, place, prio, uid, max_new, plen):
+        self.meta[uid] = (max_new, plen)
+        self.q.push(place, prio, uid)
+
+    def _pop(self, place):
+        if not isinstance(self.q, StreamingAdmitter):
+            return self.q.pop(place)
+        before = set(self.q._items)
+        got = self.q.pop(place)
+        if got is not None:
+            self.pop_slots.append((before - set(self.q._items)).pop())
+        return got
+
+    def step(self):
+        self.clock += 1
+        if self.do_fold:
+            self.q.fold()
+        for s in range(self.slots):
+            if self.active[s] is not None:
+                continue
+            got = self._pop(s % self.frontends)
+            if got is None:
+                break
+            uid = got[1]
+            self.admission.append(uid)
+            self.fills.append((self.clock, s, uid))
+            max_new, plen = self.meta[uid]
+            t0 = _tok0(uid, plen)
+            self.tokens[uid] = [t0]
+            self.active[s] = {"uid": uid, "cur": t0, "pos": plen,
+                              "out": 1, "max_new": max_new}
+        for s in range(self.slots):
+            a = self.active[s]
+            if a is None:
+                continue
+            tok = (a["cur"] * 7 + a["pos"]) % TOY_VOCAB
+            self.tokens[a["uid"]].append(tok)
+            a["pos"] += 1
+            a["cur"] = tok
+            a["out"] += 1
+            if a["out"] >= a["max_new"] or a["pos"] >= self.max_len - 1:
+                self.active[s] = None
+
+    def flush(self, place=None):
+        if isinstance(self.q, HybridKQueue):
+            for p in ([place] if place is not None
+                      else range(self.frontends)):
+                self.q.flush(p)
+        else:
+            self.q.flush(place)
+
+    def results(self):
+        return self.admission, self.fills, self.tokens
+
+
+def drive_oracle(trace, *, slots, frontends, k, max_len, plane,
+                 capacity=128):
+    if plane == "host":
+        q, fold = HybridKQueue(frontends, k, spy="min_index"), False
+    else:
+        q, fold = StreamingAdmitter(frontends, k, capacity=capacity), True
+    eng = OracleEngine(q, slots=slots, frontends=frontends, max_len=max_len,
+                       fold=fold)
+    for burst in trace:
+        for (place, pr, uid, max_new, plen) in burst:
+            eng.push(place, pr, uid, max_new, plen)
+        eng.step()
+    return eng
+
+
+def drive_fused(trace, *, slots, frontends, k, max_len, chunk, capacity=128):
+    loop = toy_loop(slots=slots, frontends=frontends, k=k, max_len=max_len,
+                    capacity=capacity)
+    for step, burst in enumerate(trace, start=1):
+        for (place, pr, uid, max_new, plen) in burst:
+            loop.submit(place, pr, uid, _prompt(uid, plen), max_new,
+                        at_step=step)
+    admission, fills, tokens, pop_slots = [], [], {}, []
+    records = []
+    t = 0
+    while t < len(trace):
+        n = min(chunk, len(trace) - t)
+        recs = loop.run_steps(n)
+        records.extend(recs)
+        for i, rec in enumerate(recs):
+            for (s, uid, tok0, ps) in rec.admitted:
+                admission.append(uid)
+                fills.append((t + i + 1, s, uid))
+                pop_slots.append(ps)
+                tokens[uid] = [tok0]
+            for (_s, uid, tok) in rec.tokens:
+                tokens[uid].append(tok)
+        t += n
+    return admission, fills, tokens, pop_slots, records, loop
+
+
+# ---------------------------------------------------------------------------
+# the differential harness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("frontends,slots,k", [(2, 4, 3), (3, 5, 1), (2, 3, 0)])
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_fused_matches_host_and_device_oracles(frontends, slots, k, seed):
+    """Admission order, fills, token streams == host oracle == eager device
+    plane; popped pool slots == eager device plane; for chunk 1 and 3.
+    Covers k = 0 (fully centralized), empty-pool steps, priority ties."""
+    max_len = 64
+    trace = gen_trace(seed, 18, frontends)
+    host = drive_oracle(trace, slots=slots, frontends=frontends, k=k,
+                        max_len=max_len, plane="host")
+    dev = drive_oracle(trace, slots=slots, frontends=frontends, k=k,
+                       max_len=max_len, plane="device")
+    assert host.results() == dev.results()
+    for chunk in (1, 3):
+        adm, fills, toks, pop_slots, _, _ = drive_fused(
+            trace, slots=slots, frontends=frontends, k=k, max_len=max_len,
+            chunk=chunk)
+        assert (adm, fills, toks) == host.results(), f"chunk={chunk}"
+        assert pop_slots == dev.pop_slots, f"chunk={chunk}"
+
+
+def test_fused_chunk_identity():
+    """Step-chunk identity: whole-trace chunk == chunk 1, events AND final
+    carry bit-for-bit (the fused analogue of the §8 phase_chunk pin)."""
+    trace = gen_trace(5, 16, 2)
+    outs = {}
+    for chunk in (1, 16):
+        adm, fills, toks, pops, records, loop = drive_fused(
+            trace, slots=4, frontends=2, k=2, max_len=64, chunk=chunk)
+        outs[chunk] = (adm, fills, toks, pops, records)
+        if chunk == 1:
+            ref_carry = loop.carry
+        else:
+            for name, a, b in zip(loop.carry._fields, ref_carry, loop.carry):
+                for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                    np.testing.assert_array_equal(
+                        np.asarray(la), np.asarray(lb), err_msg=name)
+    assert outs[1] == outs[16]
+
+
+@pytest.mark.slow
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_fused_fuzz_soak(seed):
+    """Long-trace fuzz soak (slow marker: deselected by make test-fast) —
+    same triple-differential as above at 60 steps and denser bursts."""
+    frontends, slots, k, max_len = 3, 6, 2, 48
+    trace = gen_trace(seed, 60, frontends, burst_max=5)
+    host = drive_oracle(trace, slots=slots, frontends=frontends, k=k,
+                        max_len=max_len, plane="host")
+    dev = drive_oracle(trace, slots=slots, frontends=frontends, k=k,
+                       max_len=max_len, plane="device", capacity=512)
+    adm, fills, toks, pops, _, _ = drive_fused(
+        trace, slots=slots, frontends=frontends, k=k, max_len=max_len,
+        chunk=8, capacity=512)
+    assert (adm, fills, toks) == host.results()
+    assert (adm, fills, toks) == dev.results()
+    assert pops == dev.pop_slots
+
+
+# ---------------------------------------------------------------------------
+# stream_pop_fill: the traced admit loop
+# ---------------------------------------------------------------------------
+
+def _fill_oracle(state, want, places):
+    """Python replay of the engine's admit loop over single stream_pops."""
+    slots, prios, valids = [], [], []
+    stopped = False
+    for w, pl in zip(want, places):
+        if w and not stopped:
+            state, slot, prio, valid = kp.stream_pop(state, jnp.int32(pl))
+            if not bool(valid):
+                stopped = True
+            slots.append(int(slot) if bool(valid) else 0)
+            valids.append(bool(valid))
+        else:
+            slots.append(0)
+            valids.append(False)
+    return state, slots, valids
+
+
+@pytest.mark.parametrize("want_pattern", ["all", "holes", "none"])
+def test_stream_pop_fill_matches_loop(want_pattern):
+    m, places, s = 32, 2, 5
+    rng = np.random.default_rng(4)
+    st_ = kp.init_pool(m, places)
+    mask = jnp.asarray(rng.random(m) < 0.25)
+    st_ = kp.push_batch(st_, mask,
+                        jnp.asarray(rng.random(m).astype(np.float32)),
+                        jnp.asarray(rng.integers(0, places, m), jnp.int32))
+    st_ = kp.publish(st_, k=1)
+    want = {"all": [True] * s, "holes": [True, False, True, True, False],
+            "none": [False] * s}[want_pattern]
+    pl = [i % places for i in range(s)]
+    ref_state, ref_slots, ref_valids = _fill_oracle(st_, want, pl)
+    new_state, res = kp.stream_pop_fill(
+        st_, jnp.asarray(want), jnp.asarray(pl, jnp.int32))
+    assert [bool(v) for v in res.valid] == ref_valids
+    got = [int(x) for x, v in zip(res.slot, res.valid) if bool(v)]
+    ref = [x for x, v in zip(ref_slots, ref_valids) if v]
+    assert got == ref
+    for name, la, lb in zip(kp.PoolState._fields, new_state, ref_state):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb),
+                                      err_msg=name)
+
+
+def test_stream_pop_fill_stops_at_first_miss():
+    """An empty pool with several wanted slots: no pops, and the pool is
+    untouched (the eager loop's early return)."""
+    st_ = kp.init_pool(16, 2)
+    new_state, res = kp.stream_pop_fill(
+        st_, jnp.ones((4,), bool), jnp.asarray([0, 1, 0, 1], jnp.int32))
+    assert not bool(res.valid.any())
+    for la, lb in zip(new_state, st_):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_batched_stream_pop_fill_matches_loop():
+    b, m, places, s = 3, 24, 2, 4
+    rng = np.random.default_rng(9)
+    bstate = batched.init_pool(m, places, batch=b)
+    mask = jnp.asarray(rng.random((b, m)) < 0.3)
+    prios = jnp.asarray(rng.random((b, m)).astype(np.float32))
+    creators = jnp.asarray(rng.integers(0, places, (b, m)), jnp.int32)
+    bstate = batched.publish(
+        batched.push_batch(bstate, mask, prios, creators), k=1)
+    want = jnp.asarray(rng.random((b, s)) < 0.8)
+    pl = jnp.asarray(rng.integers(0, places, (b, s)), jnp.int32)
+    bnew, bres = batched.stream_pop_fill(bstate, want, pl)
+    for i in range(b):
+        single = jax.tree.map(lambda x: x[i], bstate)
+        snew, sres = kp.stream_pop_fill(single, want[i], pl[i])
+        for name, la, lb in zip(kp.PoolState._fields, bnew, snew):
+            np.testing.assert_array_equal(
+                np.asarray(la[i]), np.asarray(lb), err_msg=f"{name} b={i}")
+        for name, la, lb in zip(kp.PopResult._fields, bres, sres):
+            np.testing.assert_array_equal(
+                np.asarray(la[i]), np.asarray(lb), err_msg=f"{name} b={i}")
+
+
+# ---------------------------------------------------------------------------
+# invariants: ρ bound + chunk identity for the generic fused queue program
+# ---------------------------------------------------------------------------
+
+ALL_POLICIES = [kp.Policy.IDEAL, kp.Policy.CENTRALIZED, kp.Policy.HYBRID,
+                kp.Policy.WORK_STEALING]
+
+
+def _chunk_inputs(seed, t, m, places):
+    rng = np.random.default_rng(seed)
+    masks = np.zeros((t, m), bool)
+    used = set()
+    for i in range(t):
+        for _ in range(int(rng.integers(0, 6))):
+            slot = int(rng.integers(m))
+            if slot not in used:
+                used.add(slot)
+                masks[i, slot] = True
+    prios = rng.random((t, m)).astype(np.float32)
+    creators = rng.integers(0, places, (t, m)).astype(np.int32)
+    push_keys = jax.random.split(jax.random.PRNGKey(seed), t)
+    pop_keys = jax.random.split(jax.random.PRNGKey(seed + 1), t)
+    return (jnp.asarray(masks), jnp.asarray(prios), jnp.asarray(creators),
+            push_keys, pop_keys)
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_queue_phase_chunk_rho_bound(policy):
+    """ignored ≤ rho at EVERY step of the fused chunked program, all four
+    policies (the in-trace ignored counter of queue_phase_chunk)."""
+    t, m, places, k = 10, 48, 4, 3
+    state = kp.init_pool(m, places)
+    xs = _chunk_inputs(3, t, m, places)
+    state, results, ignored = jax.jit(
+        lambda s, *a: kp.queue_phase_chunk(
+            s, *a, num_places=places, k=k, policy=policy)
+    )(state, *xs)
+    rho = kp.rho_bound(policy, k, places)
+    assert int(jnp.max(ignored)) <= rho or rho == float("inf")
+    if policy is not kp.Policy.WORK_STEALING:
+        assert float(rho) < float("inf")
+        np.testing.assert_array_less(np.asarray(ignored), rho + 1)
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_queue_phase_chunk_identity(policy):
+    """Chunked scan == step-by-step push/phase_pop, bit-for-bit: state,
+    per-step results, AND per-step ignored counts, for all four policies."""
+    t, m, places, k = 8, 40, 3, 2
+    xs = _chunk_inputs(7, t, m, places)
+    st_c = kp.init_pool(m, places)
+    st_c, res_c, ign_c = kp.queue_phase_chunk(
+        st_c, *xs, num_places=places, k=k, policy=policy)
+    st_s = kp.init_pool(m, places)
+    masks, prios, creators, push_keys, pop_keys = xs
+    for i in range(t):
+        st_s = kp.push(st_s, masks[i], prios[i], creators[i], k=k,
+                       policy=policy, key=push_keys[i])
+        before = st_s
+        st_s, res = kp.phase_pop(st_s, pop_keys[i], num_places=places, k=k,
+                                 policy=policy)
+        for name, lc, ls in zip(kp.PopResult._fields, res_c, res):
+            np.testing.assert_array_equal(
+                np.asarray(lc[i]), np.asarray(ls), err_msg=f"{name} step {i}")
+        assert int(ign_c[i]) == int(kp.ignored_count(before, res)), i
+    for name, lc, ls in zip(kp.PoolState._fields, st_c, st_s):
+        np.testing.assert_array_equal(np.asarray(lc), np.asarray(ls),
+                                      err_msg=name)
+
+
+def test_fused_admission_rho_bound():
+    """The fused serving path inherits ρ = frontends·k: a popped request is
+    worse than at most ρ live better requests (live = submitted, foldable by
+    the pop's step, not yet admitted)."""
+    frontends, slots, k, max_len = 3, 4, 2, 64
+    trace = gen_trace(21, 30, frontends, burst_max=5)
+    arrivals = {}
+    for step, burst in enumerate(trace, start=1):
+        for (place, pr, uid, max_new, plen) in burst:
+            arrivals[uid] = (step, pr)
+    adm, fills, _, _, _, _ = drive_fused(
+        trace, slots=slots, frontends=frontends, k=k, max_len=max_len,
+        chunk=5)
+    admitted_before = set()
+    worst = 0
+    for (step, _s, uid) in fills:
+        _, my_pr = arrivals[uid]
+        better = sum(
+            1 for u, (st_, pr) in arrivals.items()
+            if u != uid and u not in admitted_before and st_ <= step
+            and pr < my_pr)
+        worst = max(worst, better)
+        admitted_before.add(uid)
+    assert worst <= frontends * k, worst
+
+
+# ---------------------------------------------------------------------------
+# capacity, flush-after-chunk-boundary, per-place flush
+# ---------------------------------------------------------------------------
+
+def test_fused_capacity_full_raises():
+    loop = toy_loop(slots=2, frontends=2, k=2, capacity=3)
+    for i in range(3):
+        loop.submit(0, float(i), i, _prompt(i, 2), 2)
+    with pytest.raises(RuntimeError, match="admission pool full"):
+        loop.submit(0, 9.0, 9, _prompt(9, 2), 2)
+    # admitting frees pool slots: after a step the 4th submit fits
+    loop.run_steps(1)
+    loop.submit(1, 9.0, 9, _prompt(9, 2), 2)
+    assert len(loop) >= 1
+
+
+@pytest.mark.parametrize("place", [None, 0])
+def test_fused_flush_after_chunk_boundary(place):
+    """Regression (ISSUE 4 satellite): flush at a chunk boundary — buffers
+    partially drained mid-stream, arrivals still scheduled for future steps
+    — must drain exactly: fused admission order equals the host oracle that
+    received the same pushes before its flush."""
+    frontends, slots, k, max_len = 2, 2, 4, 64
+    loop = toy_loop(slots=slots, frontends=frontends, k=k, max_len=max_len)
+    host = OracleEngine(HybridKQueue(frontends, k, spy="min_index"),
+                        slots=slots, frontends=frontends, max_len=max_len)
+    burst_a = [(i % frontends, float(i % 3), i, 2, 2) for i in range(5)]
+    burst_b = [(i % frontends, float((i + 1) % 3), i, 3, 1)
+               for i in range(5, 9)]
+    for (pl, pr, uid, mn, plen) in burst_a:
+        loop.submit(pl, pr, uid, _prompt(uid, plen), mn, at_step=1)
+        host.push(pl, pr, uid, mn, plen)
+    recs = loop.run_steps(2)                  # partial drain: mid-stream
+    host.step()
+    host.step()
+    # burst B lands beyond the executed steps, then the flush publishes it
+    for (pl, pr, uid, mn, plen) in burst_b:
+        loop.submit(pl, pr, uid, _prompt(uid, plen), mn, at_step=6)
+        host.push(pl, pr, uid, mn, plen)
+    loop.flush(place)
+    host.flush(place)
+    recs += loop.run_steps(6)
+    for _ in range(6):
+        host.step()
+    adm = [uid for rec in recs for (_s, uid, _t, _p) in rec.admitted]
+    assert adm == host.admission, (adm, host.admission)
+    assert loop.idle and not any(host.active)
+
+
+def test_streaming_per_place_flush_matches_host():
+    """StreamingAdmitter.flush(place) is now the exact per-place
+    HybridKQueue.flush(p): randomized trace with per-place flushes mixed in
+    agrees pop-for-pop (regression for the old loud-raise behaviour)."""
+    places, k = 3, 4
+    rng = np.random.default_rng(13)
+    dev = StreamingAdmitter(places, k, capacity=128, buffer_cap=32)
+    host = HybridKQueue(places, k, spy="min_index")
+    uid = 0
+    for _ in range(40):
+        for _ in range(int(rng.integers(0, 5))):
+            p = int(rng.integers(places))
+            pr = float(rng.integers(0, 6)) / 2.0
+            dev.push(p, pr, uid)
+            host.push(p, pr, uid)
+            uid += 1
+        dev.fold()
+        if rng.random() < 0.3:
+            p = int(rng.integers(places))
+            dev.flush(p)
+            host.flush(p)
+        for _ in range(int(rng.integers(0, 4))):
+            p = int(rng.integers(places))
+            a, b = dev.pop(p), host.pop(p)
+            assert (a is None) == (b is None), (uid, a, b)
+            if a is not None:
+                assert a == b, (uid, a, b)
+        for p in range(places):
+            assert dev.pending(p) == host.pending(p), (p, uid)
+    dev.flush()
+    for p in range(places):
+        host.flush(p)
+    drained = 0
+    p = 0
+    while len(host) or len(dev):
+        a, b = dev.pop(p % places), host.pop(p % places)
+        p += 1
+        assert (a is None) == (b is None), (a, b)
+        if a is not None:
+            assert a == b, (a, b)
+            drained += 1
+    assert drained > 0
+
+
+# ---------------------------------------------------------------------------
+# dispatch-count contract + engine level + composed mesh
+# ---------------------------------------------------------------------------
+
+def test_fused_dispatch_count_below_eager():
+    """The point of the fusion: one dispatch per chunk vs the eager device
+    plane's fold + per-slot pops every step (submission-path dispatches are
+    identical by construction, so total counts compare fairly)."""
+    frontends, slots, k, max_len = 2, 4, 2, 64
+    trace = gen_trace(2, 16, frontends)
+    dev = drive_oracle(trace, slots=slots, frontends=frontends, k=k,
+                       max_len=max_len, plane="device")
+    *_, loop = drive_fused(trace, slots=slots, frontends=frontends, k=k,
+                           max_len=max_len, chunk=8)
+    n_req = sum(len(b) for b in trace)
+    # eager: ≥ 1 fold + ≥ 1 pop per step, + 1 buffer push per request
+    eager_step_dispatches = dev.q.dispatches - n_req
+    fused_step_dispatches = loop.dispatches - 2 * n_req   # prefill + staging
+    assert fused_step_dispatches == 2                     # 16 steps, chunk 8
+    assert fused_step_dispatches < eager_step_dispatches
+
+
+def test_engine_fused_matches_host_and_device():
+    """ServeEngine(step="fused") on the real reduced model: admission order
+    and token streams identical to both eager oracles, for chunk 1 and 3."""
+    from repro.configs import get_reduced
+    from repro.models import materialize, model_p
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_reduced("qwen3_1_7b")
+    params = materialize(jax.random.PRNGKey(0), model_p(cfg))
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+               for _ in range(8)]
+    prios = [float(v) for v in rng.permutation(8)]
+
+    def run(mode, chunk=1):
+        eng = ServeEngine(cfg, params, slots=3, max_len=32, frontends=2, k=2,
+                          step=mode, step_chunk=chunk)
+        for i, toks in enumerate(prompts):
+            eng.submit(Request(rid=i, tokens=toks, max_new=4,
+                               priority=prios[i]), frontend=i % 2)
+        done = eng.run()
+        return eng.admission_log, {r.rid: r.out for r in done}
+
+    ref = run("host")
+    assert run("device") == ref
+    assert run("fused", chunk=1) == ref
+    assert run("fused", chunk=3) == ref
+
+
+def test_engine_fused_caches_stay_live():
+    """Regression: the fused carry's buffers are donated every chunk, so
+    ``engine.caches`` must read the LIVE carry — not alias deleted arrays."""
+    from repro.configs import get_reduced
+    from repro.models import materialize, model_p
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_reduced("qwen3_1_7b")
+    params = materialize(jax.random.PRNGKey(0), model_p(cfg))
+    eng = ServeEngine(cfg, params, slots=2, max_len=24, frontends=2, k=1,
+                      step="fused", step_chunk=2)
+    eng.submit(Request(rid=0, tokens=np.arange(4, dtype=np.int32),
+                       max_new=3, priority=0.0), frontend=0)
+    eng.run()
+    leaves = jax.tree.leaves(eng.caches)
+    assert leaves and np.asarray(leaves[0]) is not None
+
+
+def test_fused_selftest_8_devices():
+    """Acceptance pin: fused step == host oracle == eager device plane under
+    the 8-device composed (batch × data × model) production-style mesh —
+    toy differential AND the real-model engine, via subprocess."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.serve.fused_step", "--selftest"],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert "FUSED_OK devices=8" in out.stdout, (
+        out.stdout[-500:], out.stderr[-2000:])
+    assert "FUSED_TRACE_OK mesh" in out.stdout, out.stdout[-500:]
+    assert "FUSED_ENGINE_OK" in out.stdout, out.stdout[-500:]
