@@ -383,6 +383,112 @@ def fused_step_throughput(requests=64, steps=48, frontends=4, k=4, slots=8,
     return rows
 
 
+def preemption_useful_work(slots=4, frontends=2, k=2, low=8, waves=3,
+                           high_per_wave=4, steps=48, chunk=8, margin=0.25,
+                           repeats=1):
+    """Priority-aware preemption of decode slots vs the non-preemptive fused
+    plane (DESIGN.md §11), on an adversarial inversion trace: low-priority
+    long requests land first and occupy every slot, then bursts of
+    high-priority short requests arrive. Metrics, computed from the fused
+    step records against the known arrival metadata:
+
+      * ``useful_work_frac`` — share of active slot-steps NOT spent running
+        a request while a strictly-better one waits un-admitted (the
+        serving-side analogue of the paper's §5 wasted-work measure); the
+        preemptive plane must strictly improve it on this trace (asserted
+        in-run; CI re-gates ``>=`` from the artifact),
+      * ``inversion_steps`` / ``inverted_slot_steps`` — steps (resp.
+        slot-steps) with at least one (resp. per) priority inversion,
+      * ``preemptions`` — evictions fired, and ``steps_per_s`` for the
+        preempt-phase overhead trajectory.
+
+    Both planes run the toy decode (the scheduling plane is what's
+    measured) over identical traces; admission differs by design — that is
+    the point of the section."""
+    import jax
+
+    from repro.serve.fused_step import toy_loop
+
+    trace = [[] for _ in range(steps)]
+    uid = 0
+    for i in range(low):
+        trace[0].append((i % frontends, 8.0, uid, steps // 2, 2))
+        uid += 1
+    for w in range(waves):
+        t = 2 + w * max(1, steps // (waves + 2))
+        for _ in range(high_per_wave):
+            trace[t].append((uid % frontends, float(w % 2), uid, 3, 1))
+            uid += 1
+    arrivals = {u: pr for burst in trace for (_pl, pr, u, _mn, _pl2) in burst}
+
+    def run(preemption):
+        loop = toy_loop(slots=slots, frontends=frontends, k=k,
+                        capacity=uid + slots, max_len=10_000,
+                        preemption=preemption, margin=margin)
+        for t, burst in enumerate(trace, start=1):
+            for (pl, pr, u, mn, plen) in burst:
+                loop.submit(pl, pr, u, np.arange(plen, dtype=np.int32) + u,
+                            mn, at_step=t)
+        records = []
+        t0 = time.time()
+        done = 0
+        while done < steps:
+            n = min(chunk, steps - done)
+            records.extend(loop.run_steps(n))
+            done += n
+        jax.block_until_ready(loop.carry.pool.prio)
+        return records, loop, time.time() - t0
+
+    def metrics(records):
+        waiting, running = {}, {}
+        inverted = active_ss = inv_steps = 0
+        for t, rec in enumerate(records, start=1):
+            for (_pl, pr, u, _mn, _plen) in trace[t - 1]:
+                waiting[u] = pr
+            for (s, u, _ps) in rec.preempted:
+                running.pop(s)
+                waiting[u] = arrivals[u]
+            for (s, u, _tok0, _ps) in rec.order:
+                waiting.pop(u, None)
+                running[s] = u
+            best_wait = min(waiting.values(), default=None)
+            step_inv = 0
+            for _s, u in running.items():
+                active_ss += 1
+                if best_wait is not None and best_wait < arrivals[u]:
+                    step_inv += 1
+            inverted += step_inv
+            inv_steps += step_inv > 0
+            for (s, _u) in rec.finished:
+                running.pop(s)
+        frac = 1.0 - inverted / max(active_ss, 1)
+        return frac, inverted, active_ss, inv_steps
+
+    rows = []
+    for plane in ("off", "margin"):
+        run(plane)                                  # warm (compile) pass
+        best = min((run(plane) for _ in range(repeats)), key=lambda r: r[2])
+        records, loop, dt = best
+        frac, inverted, active_ss, inv_steps = metrics(records)
+        rows.append({
+            "fig": "preemption", "plane": plane, "slots": slots,
+            "frontends": frontends, "k": k, "margin": margin,
+            "steps": steps, "chunk": chunk, "requests": uid,
+            "useful_work_frac": round(frac, 4),
+            "inverted_slot_steps": inverted,
+            "active_slot_steps": active_ss,
+            "inversion_steps": inv_steps,
+            "preemptions": len(loop.preempt_log),
+            "admissions": len(loop.admission_log),
+            "steps_per_s": round(steps / dt, 1),
+            "us_per_call": round(dt * 1e6 / steps, 2),
+        })
+    off, pre = rows
+    assert pre["useful_work_frac"] > off["useful_work_frac"], rows
+    assert pre["inversion_steps"] < off["inversion_steps"], rows
+    return rows
+
+
 def batched_speedup(n=1000, p=0.2, graphs=6, places=8, k=8):
     """Batched multi-graph engine vs a sequential per-graph loop (same seeds,
     same policy; run g of the batch is bit-identical to sequential run g,

@@ -74,6 +74,12 @@ def main() -> None:
             steps=96 if args.full else (24 if args.smoke else 48),
             chunk=16 if args.full else (6 if args.smoke else 8),
             repeats=1 if args.smoke else 3),
+        "preemption": lambda: paper.preemption_useful_work(
+            low=12 if args.full else (6 if args.smoke else 8),
+            waves=4 if args.full else (2 if args.smoke else 3),
+            steps=72 if args.full else (24 if args.smoke else 48),
+            chunk=12 if args.full else (6 if args.smoke else 8),
+            repeats=1 if args.smoke else 3),
         "relaxed_topk": (
             (lambda: kernels_bench.bench_relaxed_topk(n=1 << 13, p=64,
                                                       cs=(64, 8)))
@@ -84,15 +90,30 @@ def main() -> None:
             if args.smoke else kernels_bench.bench_flash_attention),
         "roofline": lambda: roofline_table.rows(),
     }
+    # per-section dispatch accounting: the serve-plane classes keep a
+    # class-level dispatch aggregate that would otherwise leak across
+    # sections under a multi-match --only (and skew any per-section
+    # dispatches/step math) — snapshot-delta it around every section
+    from repro.serve.fused_step import FusedServeLoop
+    from repro.serve.streaming import StreamingAdmitter
+
     failures = 0
     for name, fn in sections.items():
         if args.only and args.only not in name:
             continue
+        StreamingAdmitter.reset_dispatch_total()
+        FusedServeLoop.reset_dispatch_total()
         try:
             _emit(name, fn())
         except Exception as e:  # pragma: no cover
             failures += 1
             print(f"{name},ERROR,{type(e).__name__}: {e}", file=sys.stderr)
+        finally:
+            d = (StreamingAdmitter.reset_dispatch_total()
+                 + FusedServeLoop.reset_dispatch_total())
+            if d:
+                print(f"# {name}: {d} serve-plane device dispatches",
+                      file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -68,16 +68,22 @@ class HybridKQueue:
             if rec[2] != place and rec[1] not in self._taken:
                 heapq.heappush(self._heaps[place], rec)
 
-    def pop(self, place: int) -> Optional[Tuple[float, Any]]:
+    def _front(self, place: int) -> Optional[tuple]:
+        """Advance ``place``'s heap to its next live record and return it
+        WITHOUT removing: process the global list, drop taken-stale heap
+        tops, spy (pushing the victim's live records — they persist, like
+        the device plane's spied refs) while the heap is empty. THE shared
+        selection of :meth:`pop` and :meth:`peek` — peek==pop agreement is
+        load-bearing for preemption (DESIGN.md §11), so there is exactly
+        one copy of this loop."""
         self._process_global(place)
         h = self._heaps[place]
         while True:
-            while h:
-                prio, uid, _ = heapq.heappop(h)
-                if uid not in self._taken:
-                    self._taken.add(uid)
-                    return prio, self._items.pop(uid)
-            # spy: non-destructive read of a random victim's local list
+            while h and h[0][1] in self._taken:
+                heapq.heappop(h)
+            if h:
+                return h[0]
+            # spy: non-destructive read of a victim's local list
             victims = [
                 p for p in range(self.num_places)
                 if p != place and any(r[1] not in self._taken for r in self._local[p])
@@ -88,6 +94,25 @@ class HybridKQueue:
             for rec in self._local[v]:
                 if rec[1] not in self._taken:
                     heapq.heappush(h, rec)
+
+    def pop(self, place: int) -> Optional[Tuple[float, Any]]:
+        rec = self._front(place)
+        if rec is None:
+            return None
+        heapq.heappop(self._heaps[place])
+        prio, uid, _ = rec
+        self._taken.add(uid)
+        return prio, self._items.pop(uid)
+
+    def peek(self, place: int) -> Optional[float]:
+        """Priority of the item ``pop(place)`` would return, WITHOUT taking
+        it — the preemption plane's visible-front probe (DESIGN.md §11).
+        Shares :meth:`_front` with pop; like a pop, spy references acquired
+        while peeking PERSIST in the place's heap (the device
+        :func:`repro.core.kpriority.stream_peek` mirrors this), so
+        peek-then-pop returns the peeked item unless a push intervenes."""
+        rec = self._front(place)
+        return None if rec is None else rec[0]
 
     # --------------------------------------------------------------- queries
     def __len__(self) -> int:

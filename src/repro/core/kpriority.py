@@ -555,28 +555,16 @@ def phase_pop(
 # streaming single-place pop (device admission, DESIGN.md §9)
 # ---------------------------------------------------------------------------
 
-def stream_pop(
+def _stream_best(
     state: PoolState, place: jnp.ndarray
-) -> Tuple[PoolState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """One place pops its best visible task — the pure functional mirror of
-    ``HybridKQueue.pop`` under the deterministic min-index spy (DESIGN.md §9).
-
-    HYBRID visibility for ``place`` (i32[], traced): published ∪ own ∪
-    persistent spy refs, restricted to active. If that set is empty, the
-    place *spies* (non-destructively) on the lowest-index other place holding
-    an active unpublished item; the refs persist in ``spied[place]`` exactly
-    like the host queue's heap entries (paper §4.2.2). Ties in priority break
-    by ``seq`` — the device analogue of the host queue's (priority, uid) heap
-    key — so the admission order is bit-identical to the host oracle on the
-    same push/publish trace (tests/test_streaming.py pins this).
-
-    Preserves ignored ≤ P·k: the pop is the minimum over the visible set and
-    at most P·k better items are unpublished-and-unspied (§2).
-
-    Returns ``(state, slot i32[], prio f32[], valid bool[])``; the popped
-    slot is deactivated (exactly-once, the taken-set analogue).
-    """
-    num_places, m = state.spied.shape
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Shared front-selection of :func:`stream_pop` / :func:`stream_peek`:
+    HYBRID visibility for ``place`` (published ∪ own ∪ persistent spy refs),
+    deterministic min-index spy when that set is empty, min over the
+    (prio, seq) lexicographic key. ONE implementation on purpose — peek and
+    pop must choose the same item or preemption's peek-then-pop contract
+    breaks (DESIGN.md §11). Returns ``(spied [P, M], slot, prio, valid)``."""
+    num_places, _ = state.spied.shape
     places = jnp.arange(num_places, dtype=jnp.int32)
     own = state.creator == place                                     # [M]
     vis = state.active & (state.published | own | state.spied[place])
@@ -601,15 +589,108 @@ def stream_pop(
     slot = jnp.argmin(
         jnp.where(cand, state.seq, jnp.iinfo(jnp.int32).max)
     ).astype(jnp.int32)
+    prio_out = jnp.where(valid, state.prio[slot], INF)
+    return spied, slot, prio_out, valid
 
+
+def stream_pop(
+    state: PoolState, place: jnp.ndarray
+) -> Tuple[PoolState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One place pops its best visible task — the pure functional mirror of
+    ``HybridKQueue.pop`` under the deterministic min-index spy (DESIGN.md §9).
+
+    HYBRID visibility for ``place`` (i32[], traced): published ∪ own ∪
+    persistent spy refs, restricted to active. If that set is empty, the
+    place *spies* (non-destructively) on the lowest-index other place holding
+    an active unpublished item; the refs persist in ``spied[place]`` exactly
+    like the host queue's heap entries (paper §4.2.2). Ties in priority break
+    by ``seq`` — the device analogue of the host queue's (priority, uid) heap
+    key — so the admission order is bit-identical to the host oracle on the
+    same push/publish trace (tests/test_streaming.py pins this).
+
+    Preserves ignored ≤ P·k: the pop is the minimum over the visible set and
+    at most P·k better items are unpublished-and-unspied (§2).
+
+    Returns ``(state, slot i32[], prio f32[], valid bool[])``; the popped
+    slot is deactivated (exactly-once, the taken-set analogue).
+    """
+    m = state.prio.shape[0]
+    spied, slot, prio_out, valid = _stream_best(state, place)
     is_slot = jnp.arange(m) == slot
     new_state = state._replace(
         active=state.active & ~(is_slot & valid),
         prio=jnp.where(is_slot & valid, INF, state.prio),
         spied=spied,
     )
-    prio_out = jnp.where(valid, state.prio[slot], INF)
     return new_state, slot, prio_out, valid
+
+
+def stream_peek(
+    state: PoolState, place: jnp.ndarray
+) -> Tuple[PoolState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """The queue's *visible front* for ``place`` WITHOUT popping — the
+    ``HybridKQueue.peek`` mirror (DESIGN.md §11): exactly the item the next
+    :func:`stream_pop` for this place would take ((prio, seq) lexicographic
+    min over published ∪ own ∪ spied). Like the host peek, an empty visible
+    set still spies (the refs PERSIST in ``spied[place]`` — peeking is a
+    read of the structure, but spy references are durable by the paper's
+    §4.2.2 semantics, and the host heap keeps them too), which is the only
+    state this op touches. Returns ``(state, slot, prio, valid)``."""
+    spied, slot, prio_out, valid = _stream_best(state, place)
+    return state._replace(spied=spied), slot, prio_out, valid
+
+
+def preempt_beats(challenger: float, margin: float, incumbent: float) -> bool:
+    """Host-side mirror of the traced preemption margin test (DESIGN.md §11):
+    the challenger wins iff ``f32(challenger + margin) < incumbent``, with
+    the addition performed in float32 exactly as the fused program computes
+    it — host oracles must call this (not raw Python float math) or
+    f32-rounded sums diverge from the device plane."""
+    import numpy as np
+
+    lhs = np.float32(np.float32(challenger) + np.float32(margin))
+    return bool(lhs < np.float32(incumbent))
+
+
+def preempt_plan(
+    state: PoolState,
+    slot_prio: jnp.ndarray,    # f32[S] priority of the running request
+    slot_uid: jnp.ndarray,     # i32[S] push seq of the running request
+    eligible: jnp.ndarray,     # bool[S] active and not protected this step
+    places: jnp.ndarray,       # i32[S] pop place of decode slot s
+    *,
+    margin: float,
+) -> Tuple[PoolState, jnp.ndarray, jnp.ndarray]:
+    """ONE preemption round's traced decision (DESIGN.md §11): the victim is
+    the *worst* running decode slot — lexicographic max of (priority, uid)
+    over ``eligible`` slots, the exact dual of the pop order's (priority,
+    uid) min, so among equal-priority victims the latest-pushed loses — and
+    the challenger is the queue's visible front for the victim's pop place
+    (:func:`stream_peek`; spy refs persist whether or not the round fires,
+    matching the host peek). The round *fires* iff the front exists and
+    beats the victim by ``margin``: ``f32(front_prio + margin) <
+    victim_prio`` (host mirror: :func:`preempt_beats`).
+
+    Peek-only: committing the plan (staging write-back, re-push through
+    :func:`push`, the challenger :func:`stream_pop`) is the caller's —
+    serve/fused_step.py in-trace, ``ServeEngine._preempt`` host-side.
+    Returns ``(state, victim i32[], fire bool[])``; ``victim`` is undefined
+    where ``~fire``.
+    """
+    has = jnp.any(eligible)
+    worst = jnp.max(jnp.where(eligible, slot_prio, -INF))
+    cand = eligible & (slot_prio == worst)
+    victim = jnp.argmax(jnp.where(cand, slot_uid, -1)).astype(jnp.int32)
+
+    def do_peek(s):
+        return stream_peek(s, places[victim])
+
+    def skip(s):
+        return s, jnp.int32(0), jnp.float32(INF), jnp.zeros((), bool)
+
+    state, _cslot, cprio, cvalid = jax.lax.cond(has, do_peek, skip, state)
+    fire = has & cvalid & (cprio + jnp.float32(margin) < slot_prio[victim])
+    return state, victim, fire
 
 
 def stream_pop_fill(

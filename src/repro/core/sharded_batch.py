@@ -210,24 +210,30 @@ def slot_dim_sharding(mesh: Mesh):
 
 def fused_carry_shardings(mesh: Mesh, carry):
     """NamedShardings for the fused serving step's scan carry
-    (serve/fused_step.py, DESIGN.md §10) on a composed
+    (serve/fused_step.py, DESIGN.md §10/§11) on a composed
     ``make_production_batch_mesh``: the admission pool follows
     :func:`admission_shardings`; decode-cache leaves shard their slot dim
     (axis 1, the engine's cache convention) over ``batch`` when divisible —
     the same placement ``ServeEngine(mesh=...)`` gives the eager path, so
     the fused program's decode slots stay co-located with the pool shards
-    that feed them; the tiny per-slot cursor vectors replicate. Placement
-    only: the fused step is an ordinary jit program, so GSPMD supplies
-    whatever collectives the sharded pops/splices need and the host-oracle
+    that feed them; the tiny per-slot cursor/priority/uid vectors replicate;
+    the resume staging (in the carry since §11 — preemption writes it
+    in-trace) follows :func:`fused_staging_shardings`. Placement only: the
+    fused step is an ordinary jit program, so GSPMD supplies whatever
+    collectives the sharded pops/splices need and the host-oracle
     equivalence holds on any mesh (§9.4)."""
     from jax.sharding import NamedSharding
 
     cache_spec = slot_dim_sharding(mesh)
     rep = NamedSharding(mesh, PS())
+    st_sh, sc_sh = fused_staging_shardings(
+        mesh, carry.staging, carry.staged_caches)
     return carry._replace(
         pool=admission_shardings(mesh, carry.pool),
         caches=jax.tree.map(cache_spec, carry.caches),
         cur_tok=rep, pos=rep, slot_req=rep, out_len=rep, budget=rep,
+        slot_prio=rep, slot_uid=rep, slot_creator=rep,
+        staging=st_sh, staged_caches=sc_sh,
     )
 
 

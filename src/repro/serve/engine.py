@@ -67,6 +67,8 @@ class Request:
     priority: float              # smaller = more urgent
     out: List[int] = dataclasses.field(default_factory=list)
     admitted_at: int = -1
+    frontend: int = -1           # submitting place (set by ServeEngine.submit)
+    preemptions: int = 0         # times evicted from a decode slot (§11)
 
 
 class ServeEngine:
@@ -84,6 +86,16 @@ class ServeEngine:
     ``mesh``: shard the decode-cache slot axis over the mesh's ``batch``
     axis (§8) — with a composed ``make_production_batch_mesh`` the admission
     pool co-locates with the decode slots it feeds.
+
+    ``preemption="margin"`` (§11) arms priority-aware preemption of decode
+    slots on EVERY plane: after each step's admission fill, while the
+    queue's visible front beats the worst running slot by
+    ``preempt_margin`` (f32 arithmetic, ``kpriority.preempt_beats``), the
+    victim's decode cursor and KV cache are saved, the victim re-enters the
+    admission plane with its original priority (a fresh uid — the ρ bound
+    is untouched), and the challenger takes the seat; a later pop resumes
+    the victim exactly where it stopped. All three planes stay
+    bit-identical (tests/test_fused_step.py).
     """
 
     def __init__(
@@ -100,9 +112,18 @@ class ServeEngine:
         admission_capacity: int = 256,
         step: Optional[str] = None,
         step_chunk: int = 1,
+        preemption: str = "off",
+        preempt_margin: float = 0.0,
+        staging_rows: Optional[int] = None,
     ):
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
+        if preemption not in ("off", "margin"):
+            raise ValueError(f"unknown preemption mode: {preemption!r}")
+        if preempt_margin < 0:
+            raise ValueError("preempt_margin must be >= 0")
+        self.preemption = preemption
+        self.preempt_margin = float(preempt_margin)
         # step= subsumes admission=: "host"/"device" are the eager per-step
         # oracles, "fused" the single-dispatch loop (DESIGN.md §10)
         if step is None:
@@ -126,7 +147,8 @@ class ServeEngine:
             from repro.serve.streaming import StreamingAdmitter
 
             self.queue = StreamingAdmitter(
-                frontends, k, capacity=admission_capacity, mesh=mesh)
+                frontends, k, capacity=admission_capacity, mesh=mesh,
+                retain=preemption == "margin")
         else:
             raise ValueError(f"unknown admission plane: {admission!r}")
         self.frontends = frontends
@@ -150,6 +172,10 @@ class ServeEngine:
         self.active: List[Optional[Request]] = [None] * slots
         self.clock = 0
         self.admission_log: List[int] = []
+        self.preempt_log: List[int] = []       # rids, eviction order (§11)
+        self._push_seq = 0                     # queue uid mirror (§11)
+        self._stash = {}                       # rid -> saved decode cursor
+        self._filled: set = set()              # slots admitted this step
 
         self._decode = jax.jit(
             lambda p, c, t, q: decode_step(p, cfg, c, t, q)
@@ -166,6 +192,8 @@ class ServeEngine:
                 capacity=admission_capacity, params=params,
                 caches=self.caches, decode_fn=decode_fn,
                 prefill_fn=prefill_fn, mesh=mesh,
+                preemption=preemption, margin=self.preempt_margin,
+                staging_rows=staging_rows,
             )
             self.queue = self._fused       # queue-like: __len__/flush/pending
             # cache ownership moves into the fused carry (donated each
@@ -200,9 +228,13 @@ class ServeEngine:
         at the boundary keeps the two planes bit-identical for arbitrary
         float inputs (e.g. epoch-seconds deadlines)."""
         qprio = float(np.float32(req.priority))
+        req.frontend = frontend
+        req._qprio = qprio
         if self._fused is not None:
             self._fused.submit(frontend, qprio, req, req.tokens, req.max_new)
         else:
+            self._push_seq += 1
+            req._uid = self._push_seq
             self.queue.push(frontend, qprio, req)
 
     def flush_frontends(self):
@@ -220,6 +252,42 @@ class ServeEngine:
             return full.at[:, slot].set(one[:, 0].astype(full.dtype))
         self.caches = jax.tree.map(splice, self.caches, new_cache)
 
+    def _pop_from(self, place: int):
+        """Pop the admission plane for ``place``; the preemptive device
+        plane tracks the retained pool slot on the request (the handle
+        ``StreamingAdmitter.repush``/``release`` need, §11)."""
+        if self.preemption == "margin" and self.admission == "device":
+            got = self.queue.pop_ex(place)
+            if got is None:
+                return None
+            prio, req, pool_slot = got
+            req._pool_slot = pool_slot
+            return prio, req
+        return self.queue.pop(place)
+
+    def _seat(self, slot: int, req: Request):
+        """Admit ``req`` into decode slot ``slot`` — fresh (prefill, first
+        token emitted) or resumed (cursor + KV restored from the preemption
+        stash, nothing re-emitted; §11)."""
+        req.admitted_at = self.clock
+        self.admission_log.append(req.rid)
+        self._filled.add(slot)
+        self.active[slot] = req
+        saved = self._stash.pop(req.rid, None)
+        if saved is not None:
+            tok, pos, col = saved
+            self.cur_tok[slot] = tok
+            self.pos[slot] = pos
+            self._splice_cache(slot, col)
+            return
+        prompt = jnp.asarray(req.tokens[None, :], jnp.int32)
+        logits, cache = self._prefill(self.params, prompt)
+        self._dispatches += 1
+        self._splice_cache(slot, cache)
+        self.cur_tok[slot] = int(jnp.argmax(logits[0]))
+        self.pos[slot] = len(req.tokens)
+        req.out.append(int(self.cur_tok[slot]))
+
     def _admit(self):
         """Fill empty decode slots from the admission plane. The device plane
         folds its buffers first (one fused device program per step) so pops
@@ -230,33 +298,72 @@ class ServeEngine:
         for slot in range(self.slots):
             if self.active[slot] is not None:
                 continue
-            got = self.queue.pop(slot % self.frontends)
+            got = self._pop_from(slot % self.frontends)
             if got is None:
                 return
-            _, req = got
-            req.admitted_at = self.clock
-            self.admission_log.append(req.rid)
-            prompt = jnp.asarray(req.tokens[None, :], jnp.int32)
-            logits, cache = self._prefill(self.params, prompt)
-            self._dispatches += 1
-            self._splice_cache(slot, cache)
-            self.cur_tok[slot] = int(jnp.argmax(logits[0]))
-            self.pos[slot] = len(req.tokens)
-            req.out.append(int(self.cur_tok[slot]))
-            self.active[slot] = req
+            self._seat(slot, got[1])
+
+    def _preempt(self):
+        """§11 preemption rounds, after the admission fill: while the
+        queue's visible front beats the worst running slot — lexicographic
+        max of (priority, uid), the dual of the pop order — by
+        ``preempt_margin`` (f32 arithmetic via ``kpriority.preempt_beats``),
+        evict that slot (decode cursor + KV cache column stashed
+        host-side), re-queue the victim with its original priority and a
+        fresh uid, and pop the challenger into the seat. Slots admitted
+        this step are protected (one admission per slot per step), so the
+        loop is bounded by ``slots`` rounds — the exact host mirror of the
+        fused in-trace preempt phase (`kpriority.preempt_plan`)."""
+        from repro.core.kpriority import preempt_beats
+
+        for _ in range(self.slots):
+            elig = [s for s in range(self.slots)
+                    if self.active[s] is not None and s not in self._filled]
+            if not elig:
+                return
+            v = max(elig, key=lambda s: (self.active[s]._qprio,
+                                         self.active[s]._uid))
+            place = v % self.frontends
+            top = self.queue.peek(place)
+            if top is None or not preempt_beats(
+                    top, self.preempt_margin, self.active[v]._qprio):
+                return
+            victim = self.active[v]
+            col = jax.tree.map(lambda full: full[:, v:v + 1], self.caches)
+            self._stash[victim.rid] = (
+                int(self.cur_tok[v]), int(self.pos[v]), col)
+            self.active[v] = None
+            victim.preemptions += 1
+            self.preempt_log.append(victim.rid)
+            self._push_seq += 1
+            victim._uid = self._push_seq
+            if self.admission == "device":
+                self.queue.repush(victim._pool_slot, victim.frontend,
+                                  victim._qprio)
+            else:
+                self.queue.push(victim.frontend, victim._qprio, victim)
+            got = self._pop_from(place)
+            assert got is not None, "peeked front vanished before pop"
+            self._seat(v, got[1])
 
     def _consume(self, records) -> List[Request]:
         """Replay fused StepRecords into the engine's host bookkeeping —
-        same event order as the eager step (admissions, then decode tokens,
-        then completions), so admission_log and Request.out are identical
-        across step modes (DESIGN.md §10)."""
+        same event order as the eager step (admissions and preemption
+        rounds, then decode tokens, then completions), so admission_log,
+        preempt_log, and Request.out are identical across step modes
+        (DESIGN.md §10/§11)."""
         done: List[Request] = []
         for rec in records:
             self.clock += 1
-            for slot, req, tok0, _pool_slot in rec.admitted:
+            for slot, req, _pool_slot in rec.preempted:
+                req.preemptions += 1
+                self.preempt_log.append(req.rid)
+                self.active[slot] = None
+            for slot, req, tok0, _ps in rec.order:
                 req.admitted_at = self.clock
                 self.admission_log.append(req.rid)
-                req.out.append(tok0)
+                if tok0 is not None:            # fresh admission: first token
+                    req.out.append(tok0)
                 self.active[slot] = req
             for _slot, req, tok in rec.tokens:
                 req.out.append(tok)
@@ -267,11 +374,15 @@ class ServeEngine:
 
     # ------------------------------------------------------------------ step
     def step(self) -> List[Request]:
-        """Admit + one decode step for all active slots; returns finished."""
+        """Admit (+ preempt) + one decode step for all active slots; returns
+        finished."""
         if self._fused is not None:
             return self._consume(self._fused.run_steps(1))
         self.clock += 1
+        self._filled = set()
         self._admit()
+        if self.preemption == "margin":
+            self._preempt()
         if not any(r is not None for r in self.active):
             return []
         logits, self.caches = self._decode(
@@ -290,6 +401,8 @@ class ServeEngine:
             if len(req.out) >= req.max_new or self.pos[slot] >= self.max_len - 1:
                 done.append(req)
                 self.active[slot] = None
+                if self.preemption == "margin" and self.admission == "device":
+                    self.queue.release(req._pool_slot)
         return done
 
     def run(self, max_steps: int = 10_000) -> List[Request]:

@@ -1,4 +1,5 @@
-"""Single-dispatch fused decode step (DESIGN.md §10).
+"""Single-dispatch fused decode step, with priority-aware slot preemption
+(DESIGN.md §10, §11).
 
 PR 3 made streaming admission device-resident, but the serving loop still
 interleaved it with decode as SEPARATE host-driven dispatches per step —
@@ -14,27 +15,35 @@ traced program: a :class:`FusedServeLoop` step is
   2. **admit** — :func:`repro.core.kpriority.stream_pop_fill`: the engine's
      sequential fill of empty decode slots (stop at the first failed pop)
      as a ``lax.scan`` threading the :class:`PoolState` through its carry,
-  3. **splice** — admitted slots gather their prefill state (first token,
-     position, token budget, KV cache) from a device-resident staging area
-     written at submit time,
-  4. **decode + complete** — one decode step for the whole batch; slots
+  3. **splice** — admitted slots gather their resume state (next token,
+     position, emitted count, token budget, KV cache) from a device-resident
+     staging area, through a pool-slot → staging-row indirection,
+  4. **preempt** (``preemption="margin"``, §11) — up to ``slots`` rounds of
+     :func:`repro.core.kpriority.preempt_plan`: whenever the queue's visible
+     front beats the worst running slot by ``margin``, the victim's decode
+     cursor and KV cache are written back to its staging row, the victim
+     re-enters the pool through the ordinary push/publish path with its
+     original priority (a fresh seq — the ρ bound is untouched), and the
+     challenger is popped into the freed slot,
+  5. **decode + complete** — one decode step for the whole batch; slots
      whose budget (or context) is exhausted free themselves for the next
      step's admission.
 
 ``lax.scan`` chunks N such steps into ONE XLA dispatch (events come back
-stacked ``[N, slots]``), so the dispatch count per step drops from
+stacked ``[N, ...]``), so the dispatch count per step drops from
 O(slots + admissions) to 1/N. The relaxed ρ = P·k ordering contract is what
 makes the fusion legal (admission never needed a host-synchronized total
 order — only publish-on-k visibility), and the fused path is pinned
 bit-identical to the host ``HybridKQueue(spy="min_index")`` oracle and to
-``ServeEngine(admission="device")`` on randomized traces
-(tests/test_fused_step.py; 8-device composed-mesh subprocess selftest:
-``python -m repro.serve.fused_step --selftest`` under
+``ServeEngine(admission="device")`` on randomized traces — with and without
+preemption (tests/test_fused_step.py; 8-device composed-mesh subprocess
+selftest: ``python -m repro.serve.fused_step --selftest`` under
 XLA_FLAGS=--xla_force_host_platform_device_count=8).
 """
 from __future__ import annotations
 
 import functools
+import heapq
 from typing import Any, Callable, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -47,20 +56,32 @@ from repro.serve.streaming import AdmissionBuffer, fold
 
 
 class Staging(NamedTuple):
-    """Device-resident prefill staging, indexed by admission pool slot: what
-    an admitted request needs to start decoding, written once at submit time
-    (prefill runs at submission — it is deterministic in the prompt, so
-    moving it off the admission step changes no output; DESIGN.md §10)."""
+    """Device-resident resume staging, one ROW per in-flight request: what a
+    (re-)admitted request needs to start (or resume) decoding. Fresh
+    submissions write their row at submit time (prefill runs at submission —
+    deterministic in the prompt, so moving it off the admission step changes
+    no output); preemption writes the victim's live cursor + KV back to the
+    same row (DESIGN.md §10/§11).
 
-    tok: jnp.ndarray      # i32[cap]  first generated token (prefill argmax)
-    pos: jnp.ndarray      # i32[cap]  prompt length == first decode position
-    budget: jnp.ndarray   # i32[cap]  max_new token budget
+    ``row`` is the pool-slot → staging-row indirection (the ROADMAP staging
+    hop): cache staging is O(``staging_rows`` × per-slot cache) — bounded by
+    concurrently in-flight requests, not by the admission pool's roomy
+    ``capacity``."""
+
+    tok: jnp.ndarray      # i32[R]  next input token (prefill argmax / cursor)
+    pos: jnp.ndarray      # i32[R]  decode position to resume at
+    out_len: jnp.ndarray  # i32[R]  tokens already emitted (1 for fresh)
+    budget: jnp.ndarray   # i32[R]  max_new token budget
+    row: jnp.ndarray      # i32[capacity]  pool slot -> staging row
 
 
 class FusedCarry(NamedTuple):
     """The scan carry of the fused step program — everything the serving hot
     loop used to keep host-side, now device-resident (DESIGN.md §10):
-    admission pool, decode caches, and the per-slot decode cursor."""
+    admission pool, decode caches, per-slot decode cursor, the running
+    requests' (priority, uid, creator) — the preemption plane's victim keys
+    (§11) — and the resume staging (in the carry because preemption mutates
+    it in-trace)."""
 
     pool: kp.PoolState    # admission pool (M = capacity slots, P frontends)
     caches: Any           # decode caches; every leaf [lead, slots, ...]
@@ -69,25 +90,45 @@ class FusedCarry(NamedTuple):
     slot_req: jnp.ndarray  # i32[S] pool slot of the active request; -1 empty
     out_len: jnp.ndarray  # i32[S] tokens emitted for the active request
     budget: jnp.ndarray   # i32[S] max_new of the active request
+    slot_prio: jnp.ndarray     # f32[S] priority of the active request
+    slot_uid: jnp.ndarray      # i32[S] pool seq of its latest push
+    slot_creator: jnp.ndarray  # i32[S] its submitting frontend
+    staging: Staging      # resume staging + pool-slot indirection
+    staged_caches: Any    # staged KV; every leaf [lead, staging_rows, ...]
 
 
 class StepEvents(NamedTuple):
-    """Per-step device→host event record (stacked [T, S] over a chunk) — the
-    only readback of a fused chunk; the host reconstructs admission order,
-    token streams, and completions from it."""
+    """Per-step device→host event record (stacked over a chunk) — the only
+    readback of a fused chunk; the host reconstructs admission order, token
+    streams, preemptions, and completions from it. ``pre_*`` leaves are
+    ``[rounds]`` per step (``rounds`` = 0 with preemption off)."""
 
     admit: jnp.ndarray   # i32[S] pool slot admitted into decode slot s; -1
     token: jnp.ndarray   # i32[S] decode-step token (valid where ``active``)
     active: jnp.ndarray  # bool[S] slot held a request this step
     done: jnp.ndarray    # bool[S] request finished this step
+    pre_slot: jnp.ndarray  # i32[rounds] preempted decode slot; -1 no fire
+    pre_vps: jnp.ndarray   # i32[rounds] victim's pool slot (re-pushed)
+    pre_ps: jnp.ndarray    # i32[rounds] challenger's pool slot (admitted)
 
 
 class StepRecord(NamedTuple):
-    """Host-side view of one fused step, in engine event order."""
+    """Host-side view of one fused step, in engine event order. ``admitted``
+    holds FRESH admissions only (their first token rides along);
+    ``resumed``/``preempted`` are the §11 preemption events; ``order`` is
+    the step's full admission sequence — phase-1 fills in slot order, then
+    preemption rounds in round order — with ``tok0`` None on resumes."""
 
     admitted: List[Tuple[int, Any, int, int]]  # (decode_slot, item, tok0, pool_slot)
     tokens: List[Tuple[int, Any, int]]         # (decode_slot, item, token)
     finished: List[Tuple[int, Any]]            # (decode_slot, item)
+    order: Any = ()                            # (slot, item, tok0|None, pool_slot)
+    resumed: Any = ()                          # (decode_slot, item, pool_slot)
+    preempted: Any = ()                        # (decode_slot, item, pool_slot)
+
+
+def _new_record() -> StepRecord:
+    return StepRecord([], [], [], [], [], [])
 
 
 class _Arrival(NamedTuple):
@@ -100,34 +141,121 @@ class _Arrival(NamedTuple):
 
 @functools.lru_cache(maxsize=None)
 def build_chunk_fn(decode_fn: Callable, *, k: int, frontends: int,
-                   slots: int, max_len: int, n: int):
+                   slots: int, max_len: int, n: int,
+                   preempt: bool = False, margin: float = 0.0,
+                   rounds: int = 0):
     """Build (compile-once per static config — loop instances and serving
     restarts share the cache) THE fused program: n steps of fold →
-    ``stream_pop_fill`` → splice → decode → complete as one jitted
-    ``lax.scan`` over per-step AdmissionBuffer rows — one dispatch per chunk
-    (DESIGN.md §10). Signature:
-    ``(params, carry, staging, staged_caches, bufs[n]) -> (carry, events)``
-    with ``carry`` donated."""
+    ``stream_pop_fill`` → splice → [preempt ×``rounds``] → decode → complete
+    as one jitted ``lax.scan`` over per-step AdmissionBuffer rows — one
+    dispatch per chunk (DESIGN.md §10/§11). Signature:
+    ``(params, carry, bufs[n]) -> (carry, events)`` with ``carry`` donated.
+    """
     places_vec = jnp.arange(slots, dtype=jnp.int32) % frontends
 
-    def run(params, carry, staging, staged_caches, bufs):
+    def splice_in(caches, staged_caches, rows, mask):
+        """Gather staged rows into decode-slot columns where ``mask``."""
+        def one(full, stage):
+            g = jnp.take(stage, rows, axis=1)            # [lead, S, ...]
+            m = mask.reshape((1, -1) + (1,) * (full.ndim - 2))
+            return jnp.where(m, g.astype(full.dtype), full)
+
+        return jax.tree.map(one, caches, staged_caches)
+
+    def preempt_round(st, _):
+        (pool, caches, staging, staged_caches, cur_tok, pos, out_len,
+         budget, slot_req, slot_prio, slot_uid, slot_creator, protected) = st
+        eligible = (slot_req >= 0) & ~protected
+        pool, victim, fire = kp.preempt_plan(
+            pool, slot_prio, slot_uid, eligible, places_vec, margin=margin)
+
+        def fire_branch(op):
+            (pool, caches, staging, staged_caches, cur_tok, pos, out_len,
+             budget, slot_req, slot_prio, slot_uid, slot_creator,
+             protected) = op
+            m = pool.prio.shape[0]
+            vps = slot_req[victim]
+            vrow = staging.row[vps]
+            # write the victim's resumable cursor + KV back to its row
+            staging = staging._replace(
+                tok=staging.tok.at[vrow].set(cur_tok[victim]),
+                pos=staging.pos.at[vrow].set(pos[victim]),
+                out_len=staging.out_len.at[vrow].set(out_len[victim]),
+                budget=staging.budget.at[vrow].set(budget[victim]),
+            )
+            staged_caches = jax.tree.map(
+                lambda stg, full: stg.at[:, vrow].set(
+                    full[:, victim].astype(stg.dtype)),
+                staged_caches, caches)
+            # re-queue through the ordinary push/publish path: fresh seq,
+            # original (priority, creator) — exactly HybridKQueue.push
+            pool = kp.push(
+                pool, jnp.arange(m) == vps,
+                jnp.full((m,), slot_prio[victim]),
+                jnp.full((m,), slot_creator[victim], jnp.int32),
+                k=k, policy=kp.Policy.HYBRID)
+            # the challenger (strictly better than the victim, so the pop
+            # can never return the just-re-pushed slot) takes the seat
+            pool, cps, cprio, _cvalid = kp.stream_pop(
+                pool, places_vec[victim])
+            crow = staging.row[cps]
+            cur_tok = cur_tok.at[victim].set(staging.tok[crow])
+            pos = pos.at[victim].set(staging.pos[crow])
+            out_len = out_len.at[victim].set(staging.out_len[crow])
+            budget = budget.at[victim].set(staging.budget[crow])
+            caches = jax.tree.map(
+                lambda full, stg: full.at[:, victim].set(
+                    stg[:, crow].astype(full.dtype)),
+                caches, staged_caches)
+            slot_req = slot_req.at[victim].set(cps)
+            slot_prio = slot_prio.at[victim].set(cprio)
+            slot_uid = slot_uid.at[victim].set(pool.seq[cps])
+            slot_creator = slot_creator.at[victim].set(pool.creator[cps])
+            protected = protected.at[victim].set(True)
+            new = (pool, caches, staging, staged_caches, cur_tok, pos,
+                   out_len, budget, slot_req, slot_prio, slot_uid,
+                   slot_creator, protected)
+            return new, (victim, vps, cps)
+
+        def skip_branch(op):
+            return op, (jnp.int32(-1), jnp.int32(-1), jnp.int32(-1))
+
+        st2 = (pool, caches, staging, staged_caches, cur_tok, pos, out_len,
+               budget, slot_req, slot_prio, slot_uid, slot_creator,
+               protected)
+        return jax.lax.cond(fire, fire_branch, skip_branch, st2)
+
+    def run(params, carry, bufs):
         def one_step(c, buf):
             pool, _ = fold(c.pool, buf, k=k)
             pool, res = kp.stream_pop_fill(pool, c.slot_req < 0, places_vec)
             got = res.valid                              # bool[S]
             ps = jnp.where(got, res.slot, 0)             # i32[S]
-            cur_tok = jnp.where(got, staging.tok[ps], c.cur_tok)
-            pos = jnp.where(got, staging.pos[ps], c.pos)
-            budget = jnp.where(got, staging.budget[ps], c.budget)
-            out_len = jnp.where(got, 1, c.out_len)
+            rows = c.staging.row[ps]                     # i32[S]
+            cur_tok = jnp.where(got, c.staging.tok[rows], c.cur_tok)
+            pos = jnp.where(got, c.staging.pos[rows], c.pos)
+            out_len = jnp.where(got, c.staging.out_len[rows], c.out_len)
+            budget = jnp.where(got, c.staging.budget[rows], c.budget)
             slot_req = jnp.where(got, ps, c.slot_req)
+            slot_prio = jnp.where(got, res.prio, c.slot_prio)
+            slot_uid = jnp.where(got, pool.seq[ps], c.slot_uid)
+            slot_creator = jnp.where(got, pool.creator[ps], c.slot_creator)
+            caches = splice_in(c.caches, c.staged_caches, rows, got)
+            staging, staged_caches = c.staging, c.staged_caches
 
-            def splice(full, stage):
-                g = jnp.take(stage, ps, axis=1)          # [lead, S, ...]
-                m = got.reshape((1, -1) + (1,) * (full.ndim - 2))
-                return jnp.where(m, g.astype(full.dtype), full)
+            if preempt and rounds > 0:
+                st = (pool, caches, staging, staged_caches, cur_tok, pos,
+                      out_len, budget, slot_req, slot_prio, slot_uid,
+                      slot_creator, got)
+                st, (pre_slot, pre_vps, pre_ps) = jax.lax.scan(
+                    preempt_round, st, None, length=rounds)
+                (pool, caches, staging, staged_caches, cur_tok, pos,
+                 out_len, budget, slot_req, slot_prio, slot_uid,
+                 slot_creator, _protected) = st
+            else:
+                empty = jnp.zeros((0,), jnp.int32)
+                pre_slot = pre_vps = pre_ps = empty
 
-            caches = jax.tree.map(splice, c.caches, staged_caches)
             logits, caches = decode_fn(params, caches, cur_tok, pos)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
             active = slot_req >= 0
@@ -137,9 +265,12 @@ def build_chunk_fn(decode_fn: Callable, *, k: int, frontends: int,
             done = active & ((out_len >= budget) | (pos >= max_len - 1))
             slot_req = jnp.where(done, -1, slot_req)
             new_c = FusedCarry(pool, caches, cur_tok, pos, slot_req,
-                               out_len, budget)
+                               out_len, budget, slot_prio, slot_uid,
+                               slot_creator, staging, staged_caches)
             ev = StepEvents(admit=jnp.where(got, res.slot, -1),
-                            token=nxt, active=active, done=done)
+                            token=nxt, active=active, done=done,
+                            pre_slot=pre_slot, pre_vps=pre_vps,
+                            pre_ps=pre_ps)
             return new_c, ev
 
         return jax.lax.scan(one_step, carry, bufs)
@@ -147,14 +278,17 @@ def build_chunk_fn(decode_fn: Callable, *, k: int, frontends: int,
     return jax.jit(run, donate_argnums=(1,))
 
 
-def _stage_update_impl(staging, staged_caches, ps, tok, pos, budget, cache1):
+def _stage_update_impl(staging, staged_caches, ps, row, tok, pos, out_len,
+                       budget, cache1):
     staging = Staging(
-        tok=staging.tok.at[ps].set(tok),
-        pos=staging.pos.at[ps].set(pos),
-        budget=staging.budget.at[ps].set(budget),
+        tok=staging.tok.at[row].set(tok),
+        pos=staging.pos.at[row].set(pos),
+        out_len=staging.out_len.at[row].set(out_len),
+        budget=staging.budget.at[row].set(budget),
+        row=staging.row.at[ps].set(row),
     )
     staged_caches = jax.tree.map(
-        lambda full, one: full.at[:, ps].set(one[:, 0].astype(full.dtype)),
+        lambda full, one: full.at[:, row].set(one[:, 0].astype(full.dtype)),
         staged_caches, cache1,
     )
     return staging, staged_caches
@@ -164,8 +298,8 @@ _stage_update = jax.jit(_stage_update_impl, donate_argnums=(0, 1))
 
 
 class FusedServeLoop:
-    """Device-resident serving loop: admission + pop + splice + decode as one
-    dispatch per chunk (DESIGN.md §10).
+    """Device-resident serving loop: admission + pop + splice + preempt +
+    decode as one dispatch per chunk (DESIGN.md §10/§11).
 
     Queue-like on the submission side (``submit``/``flush``/``__len__``/
     ``pending`` mirror :class:`~repro.serve.streaming.StreamingAdmitter` —
@@ -179,20 +313,32 @@ class FusedServeLoop:
     the model; tests drive a toy pair, ``ServeEngine(step="fused")`` the
     real one — admission semantics are model-independent.
 
+    ``preemption="margin"`` arms the in-trace preempt phase (§11): per step,
+    up to ``slots`` rounds evict the worst running slot whenever the queue's
+    visible front beats it by ``margin`` — the victim's cursor and KV are
+    written back to its staging row and it re-enters the queue with its
+    original priority; its pool slot and staging row stay reserved until it
+    finishes, so ``capacity`` then bounds submitted-plus-running requests.
+    With ``"off"`` (default) behaviour is exactly the PR-4 loop.
+
+    ``staging_rows`` sizes the staged-KV area: one row per concurrently
+    in-flight request (submitted-but-not-admitted, plus running when
+    preemption is on) via the pool-slot → row indirection — O(staging_rows ×
+    per-slot cache) device bytes instead of O(capacity × …). Defaults to
+    ``capacity`` (never raises); size it to the real in-flight budget on
+    memory-tight deployments.
+
     ``mesh``: place the carry on a composed serving mesh
     (``launch.mesh.make_production_batch_mesh``) via
     ``sharded_batch.fused_carry_shardings`` — pool and cache slot leaves
     shard over ``batch``, bookkeeping replicates; the fused program is an
     ordinary jit, so GSPMD supplies the collectives and semantics are
     unchanged on any mesh (the §9.4 placement argument).
-
-    Memory note: the prefill staging holds one cache copy per admission
-    pool slot — O(``capacity`` × per-slot cache) device bytes for the
-    loop's lifetime. Size ``capacity`` to the real in-flight
-    (submitted-not-yet-admitted) budget, not to the eager plane's roomy
-    default; a staging indirection that decouples the two is a ROADMAP
-    candidate.
     """
+
+    #: class-level dispatch aggregate (the StreamingAdmitter counterpart) —
+    #: benchmarks/run.py snapshot-deltas it per section.
+    total_dispatches: int = 0
 
     def __init__(
         self,
@@ -208,7 +354,14 @@ class FusedServeLoop:
         decode_fn: Callable,
         prefill_fn: Callable,
         mesh=None,
+        preemption: str = "off",
+        margin: float = 0.0,
+        staging_rows: Optional[int] = None,
     ):
+        if preemption not in ("off", "margin"):
+            raise ValueError(f"unknown preemption mode: {preemption!r}")
+        if margin < 0:
+            raise ValueError("preemption margin must be >= 0")
         self.slots, self.frontends, self.k = slots, frontends, k
         self.max_len, self.capacity = max_len, capacity
         self.buffer_cap = buffer_cap
@@ -216,8 +369,24 @@ class FusedServeLoop:
         self.decode_fn = decode_fn
         self._prefill = jax.jit(prefill_fn)
         self.mesh = mesh
+        self.preemption = preemption
+        self.margin = float(margin)
+        self.rounds = slots if preemption == "margin" else 0
+        self.staging_rows = capacity if staging_rows is None else staging_rows
         self.clock = 0
         self.dispatches = 0
+        r = self.staging_rows
+        staging = Staging(
+            tok=jnp.zeros((r,), jnp.int32),
+            pos=jnp.zeros((r,), jnp.int32),
+            out_len=jnp.ones((r,), jnp.int32),
+            budget=jnp.ones((r,), jnp.int32),
+            row=jnp.zeros((capacity,), jnp.int32),
+        )
+        staged_caches = jax.tree.map(
+            lambda x: jnp.zeros(x.shape[:1] + (r,) + x.shape[2:], x.dtype),
+            caches,
+        )
         self.carry = FusedCarry(
             pool=kp.init_pool(capacity, frontends),
             caches=caches,
@@ -226,36 +395,45 @@ class FusedServeLoop:
             slot_req=jnp.full((slots,), -1, jnp.int32),
             out_len=jnp.zeros((slots,), jnp.int32),
             budget=jnp.ones((slots,), jnp.int32),
-        )
-        self.staging = Staging(
-            tok=jnp.zeros((capacity,), jnp.int32),
-            pos=jnp.zeros((capacity,), jnp.int32),
-            budget=jnp.ones((capacity,), jnp.int32),
-        )
-        self.staged_caches = jax.tree.map(
-            lambda x: jnp.zeros(x.shape[:1] + (capacity,) + x.shape[2:],
-                                x.dtype),
-            caches,
+            slot_prio=jnp.full((slots,), jnp.inf, jnp.float32),
+            slot_uid=jnp.zeros((slots,), jnp.int32),
+            slot_creator=jnp.zeros((slots,), jnp.int32),
+            staging=staging,
+            staged_caches=staged_caches,
         )
         if mesh is not None:
-            from repro.core.sharded_batch import (
-                fused_carry_shardings, fused_staging_shardings)
+            from repro.core.sharded_batch import fused_carry_shardings
 
             self.carry = jax.device_put(
                 self.carry, fused_carry_shardings(mesh, self.carry))
-            st_sh, sc_sh = fused_staging_shardings(
-                mesh, self.staging, self.staged_caches)
-            self.staging = jax.device_put(self.staging, st_sh)
-            self.staged_caches = jax.device_put(self.staged_caches, sc_sh)
         # host-side bookkeeping (never on the step path)
         self._by_slot = {}                     # pool slot -> item, in flight
         self._tok0 = {}                        # pool slot -> first token
+        self._row_of = {}                      # pool slot -> staging row
+        self._place_of = {}                    # pool slot -> submit place
+        self._free_rows = list(range(r))
+        heapq.heapify(self._free_rows)
+        self._preempted = set()                # pool slots awaiting resume
+        self._slot_ps = [-1] * slots           # decode slot -> pool slot
         self._pending: List[_Arrival] = []     # not-yet-dispatched arrivals
         self._next_slot = 0
         self._arrival = 0
         self._unpub = [0] * frontends          # pool unpub_pushes host mirror
         self._active_items: List[Optional[Any]] = [None] * slots
         self.admission_log: List[Any] = []     # items, admission order
+        self.preempt_log: List[Any] = []       # items, eviction order
+
+    def _count(self, n: int = 1):
+        self.dispatches += n
+        FusedServeLoop.total_dispatches += n
+
+    @classmethod
+    def reset_dispatch_total(cls) -> int:
+        """Zero the class-level dispatch aggregate; returns the old value
+        (benchmarks/run.py snapshot-deltas this per section)."""
+        old = cls.total_dispatches
+        cls.total_dispatches = 0
+        return old
 
     # ------------------------------------------------------------ submission
     def _alloc_slot(self) -> int:
@@ -263,35 +441,52 @@ class FusedServeLoop:
             self._by_slot, self._next_slot, self.capacity)
         return s
 
+    def _alloc_row(self) -> int:
+        if not self._free_rows:
+            raise RuntimeError(
+                f"prefill staging full ({self.staging_rows} rows in "
+                "flight); raise staging_rows= or pop before pushing")
+        return heapq.heappop(self._free_rows)
+
+    def _free_row(self, pool_slot: int):
+        heapq.heappush(self._free_rows, self._row_of.pop(pool_slot))
+
     def submit(self, place: int, priority: float, item: Any, tokens,
                max_new: int, *, at_step: Optional[int] = None) -> int:
         """Stream one request in: run its prefill (one dispatch, submit-time
         — deterministic in the prompt, so admission-time and submit-time
         prefill produce identical tokens), stage the result device-side by
-        pool slot, and schedule the push's fold at ``at_step`` (default: the
-        next unexecuted step, matching the eager engine's fold-before-admit
-        of everything submitted before the step). Feed f32-exact priorities
-        when comparing against a host oracle (``ServeEngine.submit``
-        quantizes at the boundary). Returns the reserved pool slot."""
+        staging row (pool-slot indirection), and schedule the push's fold at
+        ``at_step`` (default: the next unexecuted step, matching the eager
+        engine's fold-before-admit of everything submitted before the step).
+        Feed f32-exact priorities when comparing against a host oracle
+        (``ServeEngine.submit`` quantizes at the boundary). Returns the
+        reserved pool slot."""
         step = self.clock + 1 if at_step is None else at_step
         if step <= self.clock:
             raise ValueError(
                 f"at_step={step} already executed (clock={self.clock})")
         pool_slot = self._alloc_slot()
+        row = self._alloc_row()
         self._by_slot[pool_slot] = item
+        self._row_of[pool_slot] = row
+        self._place_of[pool_slot] = place
         toks = jnp.asarray(np.asarray(tokens)[None, :], jnp.int32)
         logits, cache1 = self._prefill(self.params, toks)
         tok0 = int(jnp.argmax(logits[0]))
-        self.staging, self.staged_caches = _stage_update(
-            self.staging, self.staged_caches, jnp.int32(pool_slot),
-            jnp.int32(tok0), jnp.int32(len(np.asarray(tokens))),
+        staging, staged_caches = _stage_update(
+            self.carry.staging, self.carry.staged_caches,
+            jnp.int32(pool_slot), jnp.int32(row), jnp.int32(tok0),
+            jnp.int32(len(np.asarray(tokens))), jnp.int32(1),
             jnp.int32(max_new), cache1,
         )
+        self.carry = self.carry._replace(
+            staging=staging, staged_caches=staged_caches)
         self._tok0[pool_slot] = tok0
         self._pending.append(_Arrival(
             step, place, pool_slot, float(priority), self._arrival))
         self._arrival += 1
-        self.dispatches += 2                   # prefill + staging scatter
+        self._count(2)                         # prefill + staging scatter
         return pool_slot
 
     # --------------------------------------------------------------- packing
@@ -333,38 +528,80 @@ class FusedServeLoop:
     def _chunk_fn(self, n: int):
         return build_chunk_fn(
             self.decode_fn, k=self.k, frontends=self.frontends,
-            slots=self.slots, max_len=self.max_len, n=n)
+            slots=self.slots, max_len=self.max_len, n=n,
+            preempt=self.preemption == "margin", margin=self.margin,
+            rounds=self.rounds)
+
+    # ----------------------------------------------------------- bookkeeping
+    def _mirror_repush(self, place: int):
+        u = self._unpub[place] + 1
+        self._unpub[place] = 0 if (self.k == 0 or u >= self.k) else u
+
+    def _admit_event(self, rec: StepRecord, s: int, pool_slot: int):
+        """Replay one admission event (phase-1 fill or preempt-round
+        challenger) into the host mirrors; fresh vs resumed is decided by
+        whether the pool slot sits in the preempted set."""
+        retain = self.preemption == "margin"
+        if retain:
+            item = self._by_slot[pool_slot]
+        else:
+            item = self._by_slot.pop(pool_slot)
+            self._place_of.pop(pool_slot, None)
+            self._free_row(pool_slot)
+        if pool_slot in self._preempted:
+            self._preempted.discard(pool_slot)
+            rec.resumed.append((s, item, pool_slot))
+            rec.order.append((s, item, None, pool_slot))
+        else:
+            tok0 = self._tok0.pop(pool_slot)
+            rec.admitted.append((s, item, tok0, pool_slot))
+            rec.order.append((s, item, tok0, pool_slot))
+        self._slot_ps[s] = pool_slot
+        self._active_items[s] = item
+        self.admission_log.append(item)
 
     # ---------------------------------------------------------------- steps
     def run_steps(self, n: int) -> List[StepRecord]:
         """Advance n engine steps in ONE dispatch; returns one
         :class:`StepRecord` per step, in engine event order (admissions in
-        decode-slot order, then decode tokens, then completions — exactly
-        the eager ``ServeEngine.step`` sequence)."""
+        decode-slot order, then preemption rounds, then decode tokens, then
+        completions — exactly the eager ``ServeEngine.step`` sequence)."""
         bufs, counts = self._pack_bufs(n)
         fn = self._chunk_fn(n)
-        self.carry, ev = fn(self.params, self.carry, self.staging,
-                            self.staged_caches, bufs)
-        self.dispatches += 1
+        self.carry, ev = fn(self.params, self.carry, bufs)
+        self._count()
         admit = np.asarray(ev.admit)
         token = np.asarray(ev.token)
         active = np.asarray(ev.active)
         done = np.asarray(ev.done)
+        pre_slot = np.asarray(ev.pre_slot)
+        pre_vps = np.asarray(ev.pre_vps)
+        pre_ps = np.asarray(ev.pre_ps)
+        retain = self.preemption == "margin"
         records: List[StepRecord] = []
         for t in range(n):
             self.clock += 1
             for pl in range(self.frontends):                 # unpub mirror
                 u = self._unpub[pl] + int(counts[t, pl])
                 self._unpub[pl] = 0 if self.k == 0 else u % self.k
-            rec = StepRecord([], [], [])
+            rec = _new_record()
             for s in range(self.slots):
                 pslot = int(admit[t, s])
                 if pslot >= 0:
-                    item = self._by_slot.pop(pslot)
-                    self._active_items[s] = item
-                    self.admission_log.append(item)
-                    rec.admitted.append(
-                        (s, item, self._tok0.pop(pslot), pslot))
+                    self._admit_event(rec, s, pslot)
+            for r in range(self.rounds):
+                v = int(pre_slot[t, r])
+                if v < 0:
+                    continue
+                vps = int(pre_vps[t, r])
+                item = self._by_slot[vps]
+                self._mirror_repush(self._place_of[vps])
+                self._preempted.add(vps)
+                self._active_items[v] = None
+                self._slot_ps[v] = -1
+                rec.preempted.append((v, item, vps))
+                self.preempt_log.append(item)
+                self._admit_event(rec, v, int(pre_ps[t, r]))
             for s in range(self.slots):
                 if active[t, s]:
                     rec.tokens.append(
@@ -372,6 +609,12 @@ class FusedServeLoop:
                 if done[t, s]:
                     rec.finished.append((s, self._active_items[s]))
                     self._active_items[s] = None
+                    if retain:
+                        ps = self._slot_ps[s]
+                        self._by_slot.pop(ps)
+                        self._place_of.pop(ps, None)
+                        self._free_row(ps)
+                    self._slot_ps[s] = -1
             records.append(rec)
         return records
 
@@ -421,12 +664,14 @@ class FusedServeLoop:
                 self._unpub[pl] = (
                     0 if (pl == place or self.k == 0) else u % self.k)
         self.carry = self.carry._replace(pool=pool)
-        self.dispatches += 1
+        self._count()
 
     # --------------------------------------------------------------- queries
     def __len__(self) -> int:
-        """Requests submitted but not yet admitted (the
-        ``StreamingAdmitter.__len__`` analogue, at chunk granularity)."""
+        """In-flight requests: submitted but not yet admitted (plus running
+        ones under ``preemption="margin"``, whose pool slots stay reserved
+        for the re-queue path — the ``StreamingAdmitter`` retain-mode
+        analogue, at chunk granularity)."""
         return len(self._by_slot)
 
     def pending(self, place: int) -> int:
@@ -465,7 +710,8 @@ def toy_prefill_fn(params, toks):
 
 
 def toy_loop(*, slots, frontends, k, max_len=10_000, capacity=128,
-             buffer_cap=32, mesh=None) -> FusedServeLoop:
+             buffer_cap=32, mesh=None, preemption="off", margin=0.0,
+             staging_rows=None) -> FusedServeLoop:
     """A :class:`FusedServeLoop` over the toy model, with the engine's cache
     convention (slot dim = axis 1 of every leaf) — splice/staging machinery
     is exercised end-to-end, compiles are shared across instances (the toy
@@ -475,7 +721,8 @@ def toy_loop(*, slots, frontends, k, max_len=10_000, capacity=128,
         slots=slots, frontends=frontends, k=k, max_len=max_len,
         capacity=capacity, buffer_cap=buffer_cap, params=None,
         caches=caches, decode_fn=toy_decode_fn, prefill_fn=toy_prefill_fn,
-        mesh=mesh)
+        mesh=mesh, preemption=preemption, margin=margin,
+        staging_rows=staging_rows)
 
 
 # ---------------------------------------------------------------------------
@@ -568,6 +815,119 @@ def _selftest_toy_differential(mesh=None, chunk=4):  # pragma: no cover
     print(f"FUSED_TRACE_OK {tag} uid={uid} admitted={len(ref[0])}")
 
 
+def _preempt_oracle_drive(trace, *, slots, frontends, k, max_len, margin,
+                          queue):  # pragma: no cover
+    """Eager slot state machine WITH §11 preemption over the host queue:
+    the python truth the fused preemptive plane must reproduce (the full
+    version, with token streams, lives in tests/test_fused_step.py)."""
+    active = [None] * slots
+    meta, stash = {}, {}
+    push_seq = [0]
+    uid_of = {}
+    admission, evictions = [], []
+
+    def push(place, pr, uid):
+        queue.push(place, pr, uid)
+        push_seq[0] += 1
+        uid_of[uid] = push_seq[0]
+
+    def admit(s, got, step):
+        pr, uid = got
+        admission.append(uid)
+        if uid in stash:
+            active[s] = stash.pop(uid)
+        else:
+            max_new, plen, place = meta[uid]
+            active[s] = {"uid": uid, "pr": pr, "out": 1, "pos": plen,
+                         "max_new": max_new, "place": place}
+
+    for step, burst in enumerate(trace, start=1):
+        for (place, pr, uid, max_new, plen) in burst:
+            meta[uid] = (max_new, plen, place)
+            push(place, pr, uid)
+        filled = set()
+        for s in range(slots):
+            if active[s] is not None:
+                continue
+            got = queue.pop(s % frontends)
+            if got is None:
+                break
+            admit(s, got, step)
+            filled.add(s)
+        for _ in range(slots):
+            elig = [s for s in range(slots)
+                    if active[s] is not None and s not in filled]
+            if not elig:
+                break
+            v = max(elig, key=lambda s: (active[s]["pr"],
+                                         uid_of[active[s]["uid"]]))
+            top = queue.peek(v % frontends)
+            if top is None or not kp.preempt_beats(top, margin,
+                                                   active[v]["pr"]):
+                break
+            victim = active[v]
+            evictions.append(victim["uid"])
+            stash[victim["uid"]] = victim
+            active[v] = None
+            push(victim["place"], victim["pr"], victim["uid"])
+            got = queue.pop(v % frontends)
+            admit(v, got, step)
+            filled.add(v)
+        for s in range(slots):
+            a = active[s]
+            if a is None:
+                continue
+            a["pos"] += 1
+            a["out"] += 1
+            if a["out"] >= a["max_new"] or a["pos"] >= max_len - 1:
+                active[s] = None
+    return admission, evictions
+
+
+def _selftest_preempt_differential(mesh=None, chunk=4):  # pragma: no cover
+    """Fused preemptive plane == host HybridKQueue preemption oracle on a
+    randomized inversion-heavy trace (admission order AND victim order),
+    for chunk 1 and ``chunk`` (the ISSUE 5 acceptance criterion)."""
+    from repro.core.host_queue import HybridKQueue
+
+    slots, frontends, k, max_len, margin = 3, 2, 2, 64, 0.5
+    rng = np.random.default_rng(23)
+    trace, uid = [], 0
+    for _ in range(30):
+        burst = []
+        for _ in range(int(rng.integers(0, 3))):
+            burst.append((uid % frontends,
+                          float(rng.integers(0, 8)), uid,
+                          int(rng.integers(2, 7)), int(rng.integers(1, 4))))
+            uid += 1
+        trace.append(burst)
+
+    host = HybridKQueue(frontends, k, spy="min_index")
+    ref = _preempt_oracle_drive(
+        trace, slots=slots, frontends=frontends, k=k, max_len=max_len,
+        margin=margin, queue=host)
+
+    def fused(chunk_):
+        loop = toy_loop(slots=slots, frontends=frontends, k=k,
+                        max_len=max_len, preemption="margin", margin=margin)
+        for step, burst in enumerate(trace, start=1):
+            for (place, pr, u, max_new, plen) in burst:
+                loop.submit(place, pr, u, np.arange(plen) + u, max_new,
+                            at_step=step)
+        t = 0
+        while t < len(trace):
+            n = min(chunk_, len(trace) - t)
+            loop.run_steps(n)
+            t += n
+        return loop.admission_log, loop.preempt_log
+
+    f1, fn = fused(1), fused(chunk)
+    assert f1 == ref, (f1, ref)
+    assert fn == ref, (fn, ref)
+    tag = "mesh" if mesh is not None else "local"
+    print(f"PREEMPT_TRACE_OK {tag} uid={uid} evicted={len(ref[1])}")
+
+
 def _selftest_engine_fused(mesh):  # pragma: no cover
     """ServeEngine(step="fused", mesh=composed) admits in exactly the host
     oracle's order, with identical token streams (the ISSUE 4 acceptance
@@ -604,9 +964,11 @@ def selftest() -> None:  # pragma: no cover - exercised via subprocess
 
     d = len(jax.devices())
     _selftest_toy_differential()
+    _selftest_preempt_differential()
     if d >= 8:
         mesh = make_test_production_batch_mesh()
         _selftest_toy_differential(mesh=mesh)
+        _selftest_preempt_differential(mesh=mesh)
         _selftest_engine_fused(mesh)
     print(f"FUSED_OK devices={d}")
 

@@ -24,6 +24,7 @@ the host queue's publication set, never less).
 from __future__ import annotations
 
 import functools
+from collections import ChainMap
 from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
@@ -177,6 +178,27 @@ def _jitted_fold_places(k: int):
 
 _jitted_buffer_push = jax.jit(buffer_push, donate_argnums=(0,))
 _jitted_stream_pop = jax.jit(kp.stream_pop, donate_argnums=(0,))
+_jitted_stream_peek = jax.jit(kp.stream_peek, donate_argnums=(0,))
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_repush(k: int):
+    """Compile-once immediate re-push (preemption re-queue, DESIGN.md §11):
+    one item re-enters the pool through the ordinary HYBRID push/publish
+    path — ``kp.push`` = ``push_batch`` + publish-on-k — with a fresh seq,
+    exactly what ``HybridKQueue.push`` does for a re-queued victim."""
+
+    def f(pool, slot, place, prio):
+        m = pool.prio.shape[0]
+        mask = jnp.arange(m) == slot
+        return kp.push(
+            pool, mask,
+            jnp.full((m,), jnp.float32(prio)),
+            jnp.full((m,), jnp.int32(place), jnp.int32),
+            k=k, policy=kp.Policy.HYBRID,
+        )
+
+    return jax.jit(f, donate_argnums=(0,))
 
 
 def alloc_pool_slot(occupied, next_slot: int, capacity: int):
@@ -219,7 +241,21 @@ class StreamingAdmitter:
     comparison must see f32-quantized priorities too — ``ServeEngine.submit``
     quantizes at the boundary for both planes; feed this class f32-exact
     priorities when driving it directly against a host oracle.
+
+    ``retain=True`` enables the preemption plane (DESIGN.md §11): a pop
+    keeps its pool slot *reserved* (occupied for the allocator, excluded
+    from ``__len__``) until the engine either :meth:`release`\\ s it on
+    completion or :meth:`repush`\\ es the running item back into the queue
+    with its original priority — the re-queue half of decode-slot
+    preemption. With ``retain`` the pool capacity therefore bounds
+    submitted-plus-running requests, not just the queued backlog.
     """
+
+    #: device programs launched by EVERY admitter instance since import (or
+    #: the last :meth:`reset_dispatch_total`) — benchmarks snapshot-delta
+    #: this per ``--only`` section so one section's dispatches never skew
+    #: another's per-step accounting (benchmarks/run.py).
+    total_dispatches: int = 0
 
     def __init__(
         self,
@@ -229,11 +265,13 @@ class StreamingAdmitter:
         capacity: int = 256,
         buffer_cap: int = 64,
         mesh=None,
+        retain: bool = False,
     ):
         self.num_places = num_places
         self.k = k
         self.capacity = capacity
         self.buffer_cap = buffer_cap
+        self.retain = retain
         self.pool = kp.init_pool(capacity, num_places)
         self.buf = init_buffer(num_places, buffer_cap)
         self.mesh = mesh
@@ -244,6 +282,7 @@ class StreamingAdmitter:
                 jax.device_put, self.pool, admission_shardings(mesh, self.pool)
             )
         self._items = {}                       # slot -> item (host-side)
+        self._running = {}                     # slot -> item (retain mode)
         self._next_slot = 0
         self._arrival = 0
         self._staged = [0] * num_places        # unfolded pushes (host mirror)
@@ -253,12 +292,30 @@ class StreamingAdmitter:
         self._flush_fn = _jitted_fold(k, True)
         self._flush_place_fn = _jitted_fold_places(k)
         self._pop_fn = _jitted_stream_pop
+        self._peek_fn = _jitted_stream_peek
+        self._repush_fn = _jitted_repush(k)
         self.dispatches = 0                    # device programs launched
+
+    def _count(self, n: int = 1):
+        self.dispatches += n
+        StreamingAdmitter.total_dispatches += n
+
+    @classmethod
+    def reset_dispatch_total(cls) -> int:
+        """Zero the class-level dispatch aggregate; returns the old value
+        (the snapshot-delta hook benchmarks/run.py uses between sections)."""
+        old = cls.total_dispatches
+        cls.total_dispatches = 0
+        return old
 
     # ------------------------------------------------------------------ push
     def _alloc_slot(self) -> int:
+        # ChainMap: O(1) membership/len view over queued + retained slots —
+        # no per-push dict copy on the submission hot path
+        occupied = (ChainMap(self._items, self._running) if self._running
+                    else self._items)
         s, self._next_slot = alloc_pool_slot(
-            self._items, self._next_slot, self.capacity)
+            occupied, self._next_slot, self.capacity)
         return s
 
     def push(self, place: int, priority: float, item: Any,
@@ -278,7 +335,7 @@ class StreamingAdmitter:
             self.buf, place, slot, float(priority), self._arrival)
         self._arrival += 1
         self._staged[place] += 1
-        self.dispatches += 1
+        self._count()
 
     # ------------------------------------------------------------------ fold
     def _account_fold(self, force: bool, place: Optional[int] = None):
@@ -295,7 +352,7 @@ class StreamingAdmitter:
         the engine calls this once per decode step, before admission pops."""
         self.pool, self.buf = self._fold_fn(self.pool, self.buf)
         self._account_fold(force=False)
-        self.dispatches += 1
+        self._count()
 
     def flush(self, place: Optional[int] = None):
         """Publish staged + unpublished requests: every place's when
@@ -315,19 +372,67 @@ class StreamingAdmitter:
         else:
             self.pool, self.buf = self._flush_fn(self.pool, self.buf)
             self._account_fold(force=True)
-        self.dispatches += 1
+        self._count()
 
     # ------------------------------------------------------------------- pop
     def pop(self, place: int) -> Optional[Tuple[float, Any]]:
         """Pop ``place``'s best visible request — one device call, host
         readback only for the winning (slot, valid) pair (the admitted
         request must be prefetched host-side anyway)."""
+        got = self.pop_ex(place)
+        return None if got is None else got[:2]
+
+    def pop_ex(self, place: int) -> Optional[Tuple[float, Any, int]]:
+        """:meth:`pop` that also reports the popped pool slot — the handle
+        the preemption plane needs for :meth:`repush`/:meth:`release`. In
+        ``retain`` mode the slot stays reserved until one of those is
+        called; otherwise it frees immediately (today's behaviour)."""
         self.pool, slot, prio, valid = self._pop_fn(
             self.pool, jnp.int32(place))
-        self.dispatches += 1
+        self._count()
         if not bool(valid):
             return None
-        return float(prio), self._items.pop(int(slot))
+        s = int(slot)
+        item = self._items.pop(s)
+        if self.retain:
+            self._running[s] = item
+        return float(prio), item, s
+
+    # ------------------------------------------------- preemption (retain)
+    def peek(self, place: int) -> Optional[float]:
+        """Priority of the item :meth:`pop` would return for ``place``,
+        without popping — the ``HybridKQueue.peek`` mirror
+        (:func:`repro.core.kpriority.stream_peek`; spy refs persist either
+        way, so peek-then-pop agrees with the host oracle, DESIGN.md §11)."""
+        self.pool, _slot, prio, valid = self._peek_fn(
+            self.pool, jnp.int32(place))
+        self._count()
+        return float(prio) if bool(valid) else None
+
+    def repush(self, slot: int, place: int, priority: float):
+        """Re-queue a *running* (retained) request: its reserved pool slot
+        re-enters the pool through the ordinary push/publish path with a
+        fresh seq — exactly ``HybridKQueue.push`` of a re-queued victim, so
+        the (priority, uid) tie-break stays stable across re-insertion
+        (DESIGN.md §11). Immediate (not buffered): callers re-queue between
+        a fold and the next step's pushes, so buffers are drained and the
+        push order matches the host queue's call order."""
+        if sum(self._staged) != 0:
+            raise RuntimeError(
+                "repush with undrained buffers would reorder publish-on-k "
+                "vs the host oracle; fold() first")
+        item = self._running.pop(slot)
+        self._items[slot] = item
+        self.pool = self._repush_fn(
+            self.pool, jnp.int32(slot), jnp.int32(place), float(priority))
+        self._arrival += 1
+        u = self._unpub[place] + 1
+        self._unpub[place] = 0 if (self.k == 0 or u >= self.k) else u
+        self._count()
+
+    def release(self, slot: int):
+        """Free a retained pool slot (the running request completed)."""
+        del self._running[slot]
 
     # --------------------------------------------------------------- queries
     def __len__(self) -> int:

@@ -110,6 +110,90 @@ def test_host_queue_flush_on_empty_publish_ordering():
     assert len(q) == 0
 
 
+def test_host_queue_repush_uid_tiebreak_stable():
+    """Re-pushing a previously popped item (the §11 preemption re-queue
+    path) assigns a FRESH uid: among equal priorities the re-inserted item
+    now ranks after everything pushed since — tie-breaks stay stable, no
+    resurrection of the old position."""
+    q = HybridKQueue(2, 1, spy="min_index")    # k=1: publish on every push
+    q.push(0, 1.0, "a")
+    q.push(1, 1.0, "b")
+    assert q.pop(0) == (1.0, "a")              # (1.0, uid0) < (1.0, uid1)
+    q.push(0, 1.0, "a")                        # preempted: original priority
+    assert q.pop(0) == (1.0, "b")              # fresh uid: b is older now
+    assert q.pop(1) == (1.0, "a")
+    assert q.pop(0) is None and len(q) == 0
+
+
+def test_host_queue_repush_rho_bound():
+    """ρ = P·k still holds with pop→re-push cycles mixed in: at every pop,
+    at most P·k strictly-better live items exist — a re-pushed item counts
+    as live again at its original priority."""
+    places, k = 3, 2
+    q = HybridKQueue(places, k, 0, spy="min_index")
+    rng = np.random.default_rng(9)
+    live, parked = {}, {}
+    worst = 0
+    next_uid = 0
+    for step in range(600):
+        r = rng.random()
+        if r < 0.45 or (not live and not parked):
+            prio = float(rng.integers(0, 16)) / 4.0
+            q.push(int(rng.integers(places)), prio, next_uid)
+            live[next_uid] = prio
+            next_uid += 1
+        elif r < 0.65 and parked:
+            uid = next(iter(parked))            # re-queue a popped item
+            prio = parked.pop(uid)
+            q.push(int(rng.integers(places)), prio, uid)
+            live[uid] = prio
+        else:
+            got = q.pop(int(rng.integers(places)))
+            if got is None:
+                continue
+            prio, uid = got
+            del live[uid]
+            worst = max(worst, sum(1 for v in live.values() if v < prio))
+            if rng.random() < 0.5:
+                parked[uid] = prio              # candidate for re-push
+    assert worst <= places * k, worst
+
+
+def test_host_queue_repush_k0_strict():
+    """k = 0 + re-pushes degenerates to the strict queue: every pop is the
+    exact (priority, latest-push-uid) minimum of the live set — pinned
+    pop-for-pop against a sorted-list oracle."""
+    places = 2
+    q = HybridKQueue(places, 0, spy="min_index")
+    rng = np.random.default_rng(3)
+    live = {}                                   # item -> (prio, push_seq)
+    seq = 0
+    parked = []
+    for step in range(300):
+        r = rng.random()
+        if r < 0.5 or not (live or parked):
+            item = f"i{step}"
+            prio = float(rng.integers(0, 6)) / 2.0
+            q.push(int(rng.integers(places)), prio, item)
+            live[item] = (prio, seq)
+            seq += 1
+        elif r < 0.65 and parked:
+            item, prio = parked.pop(0)
+            q.push(int(rng.integers(places)), prio, item)
+            live[item] = (prio, seq)
+            seq += 1
+        else:
+            got = q.pop(int(rng.integers(places)))
+            if got is None:
+                assert not live
+                continue
+            expect = min(live, key=lambda i: live[i])
+            assert got == (live[expect][0], expect), (step, got, expect)
+            prio, _ = live.pop(expect)
+            if rng.random() < 0.4:
+                parked.append((expect, prio))
+
+
 def test_engine_end_to_end():
     from repro.configs import get_reduced
     from repro.models import materialize, model_p
