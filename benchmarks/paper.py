@@ -358,13 +358,17 @@ def fused_step_throughput(requests=64, steps=48, frontends=4, k=4, slots=8,
             done += n
         jax.block_until_ready(loop.carry.pool.prio)
         dt = time.time() - t0
-        return order, loop.dispatches - d0, dt
+        return order, loop.dispatches - d0, dt, loop
 
     rows = []
     for name, fn in (("device_eager", run_eager), ("fused", run_fused)):
-        fn()                                        # warm (compile) pass
+        # warm (compile) pass — HELD through the repeats: run_fused returns
+        # its loop, and build_chunk_fn's cache is weak (§12), so dropping
+        # the only live loop would put a recompile inside the timed window
+        warm = fn()
         best = min((fn() for _ in range(repeats)), key=lambda r: r[2])
-        order, dispatches, dt = best
+        del warm
+        order, dispatches, dt = best[:3]
         rows.append({
             "fig": "fused_step", "plane": name, "requests": requests,
             "steps": steps, "frontends": frontends, "k": k, "slots": slots,
@@ -466,8 +470,11 @@ def preemption_useful_work(slots=4, frontends=2, k=2, low=8, waves=3,
 
     rows = []
     for plane in ("off", "margin"):
-        run(plane)                                  # warm (compile) pass
+        # warm (compile) pass — held so the weak jit cache (§12) keeps the
+        # chunk compile alive through the timed repeats (run returns loop)
+        warm = run(plane)
         best = min((run(plane) for _ in range(repeats)), key=lambda r: r[2])
+        del warm
         records, loop, dt = best
         frac, inverted, active_ss, inv_steps = metrics(records)
         rows.append({
@@ -486,6 +493,135 @@ def preemption_useful_work(slots=4, frontends=2, k=2, low=8, waves=3,
     off, pre = rows
     assert pre["useful_work_frac"] > off["useful_work_frac"], rows
     assert pre["inversion_steps"] < off["inversion_steps"], rows
+    return rows
+
+
+def continuous_serving(requests=64, steps=64, frontends=4, k=4, slots=8,
+                       chunk=8, max_new=3, repeats=3):
+    """Double-buffered continuous serving vs the PR-4 fused plane (DESIGN.md
+    §12): identical chunk-boundary arrival trace, admission order and fill
+    schedule asserted bit-identical in-run on BOTH planes against the host
+    ``HybridKQueue(spy="min_index")`` oracle.
+
+    Unlike the ``fused_step`` section — which excludes the submission path
+    because it is identical per request on both planes — this section counts
+    dispatches INCLUSIVELY: the batched plan handoff (one staging program +
+    one plan-upload scatter per sealed plan, instead of one staging scatter
+    per request) is precisely the continuous plane's win, so submission
+    dispatches and submission wall-clock both ride inside the measurement.
+
+    ``submit_to_admit_p{50,99}_ms`` time each request from its submit call
+    to the host *observing* its admission in the chunk readback. Both planes
+    admit at the next chunk boundary by construction (the plan fold only
+    consumes relaxation budget within rho = P*k), so the percentiles track
+    dispatch/packing overhead, not scheduling policy. The packer here is
+    synchronous — plans are packed inline and sealed at each boundary — so
+    the section is deterministic; the threaded packer is exercised by
+    tests/test_continuous.py."""
+    import jax
+
+    from repro.core.host_queue import HybridKQueue
+    from repro.serve.fused_step import _oracle_drive, toy_loop
+    from repro.serve.streaming import PlanBook
+
+    if steps % chunk:
+        raise ValueError(f"steps={steps} must be a multiple of chunk={chunk}")
+    n_chunks = steps // chunk
+    rng = np.random.default_rng(0)
+    plen = 2
+    bursts = [[] for _ in range(n_chunks)]
+    for uid in range(requests):
+        b = int(rng.integers(0, max(1, n_chunks - 1)))
+        bursts[b].append((uid % frontends,
+                          float(rng.integers(0, 64)) / 8.0, uid))
+    cap = requests + slots
+
+    def _drain(recs, b, now, submit_t, order, fills, lat):
+        for i, rec in enumerate(recs):
+            for (s, uid, _tok0, _ps) in rec.admitted:
+                order.append(uid)
+                fills.append((b * chunk + i + 1, s, uid))
+                lat.append(now - submit_t[uid])
+
+    def run_fused():
+        loop = toy_loop(slots=slots, frontends=frontends, k=k,
+                        capacity=cap, max_len=10_000)
+        submit_t, lat, order, fills = {}, [], [], []
+        d0 = loop.dispatches
+        t0 = time.time()
+        for b, burst in enumerate(bursts):
+            for (p, pr, uid) in burst:
+                submit_t[uid] = time.time()
+                loop.submit(p, pr, uid,
+                            np.arange(plen, dtype=np.int32) + uid,
+                            max_new, at_step=b * chunk + 1)
+            recs = loop.run_steps(chunk)
+            _drain(recs, b, time.time(), submit_t, order, fills, lat)
+        jax.block_until_ready(loop.carry.pool.prio)
+        dt = time.time() - t0
+        return order, fills, loop.dispatches - d0, dt, lat, loop
+
+    def run_continuous():
+        loop = toy_loop(slots=slots, frontends=frontends, k=k,
+                        capacity=cap, max_len=10_000, continuous=True)
+        book = PlanBook(frontends, loop.buffer_cap)
+        submit_t, lat, order, fills = {}, [], [], []
+        d0 = loop.dispatches
+        t0 = time.time()
+        for b, burst in enumerate(bursts):
+            for (p, pr, uid) in burst:
+                submit_t[uid] = time.time()
+                ps, u = loop.submit_planned(
+                    p, pr, uid, np.arange(plen, dtype=np.int32) + uid,
+                    max_new)
+                assert book.publish(p, ps, pr, u), "plan row overflow"
+            loop.publish_plan(book.seal())
+            recs = loop.run_steps(chunk)
+            _drain(recs, b, time.time(), submit_t, order, fills, lat)
+        jax.block_until_ready(loop.carry.pool.prio)
+        dt = time.time() - t0
+        return order, fills, loop.dispatches - d0, dt, lat, loop
+
+    # host oracle: same bursts as per-step trace rows at each chunk's first
+    # step (both planes admit chunk-boundary arrivals there by construction)
+    step_trace = [[] for _ in range(steps)]
+    for b, burst in enumerate(bursts):
+        step_trace[b * chunk] = [(p, pr, uid, max_new, plen)
+                                 for (p, pr, uid) in burst]
+    host_adm, host_fills = _oracle_drive(
+        step_trace, slots=slots, frontends=frontends, k=k, max_len=10_000,
+        queue=HybridKQueue(frontends, k, spy="min_index"),
+        fold_fn=lambda: None)
+
+    def _pct(xs, q):
+        xs = sorted(xs)
+        return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+    rows = []
+    for name, fn in (("fused", run_fused), ("continuous", run_continuous)):
+        # warm (compile) pass — held so the weak jit cache (§12) keeps the
+        # chunk compile alive through the timed repeats (runs return loop)
+        warm = fn()
+        best = min((fn() for _ in range(repeats)), key=lambda r: r[3])
+        del warm
+        order, fills, dispatches, dt, lat, _loop = best
+        assert order == host_adm, f"{name} diverged from the host oracle"
+        assert fills == host_fills, f"{name} fill schedule diverged"
+        rows.append({
+            "fig": "continuous", "plane": name, "requests": requests,
+            "steps": steps, "frontends": frontends, "k": k, "slots": slots,
+            "chunk": chunk,
+            "dispatches_per_step": round(dispatches / steps, 3),
+            "steps_per_s": round(steps / dt, 1),
+            "submit_to_admit_p50_ms": round(_pct(lat, 0.50) * 1e3, 3),
+            "submit_to_admit_p99_ms": round(_pct(lat, 0.99) * 1e3, 3),
+            "order_len": len(order),
+            "order_identical": True,
+            "us_per_call": round(dt * 1e6 / steps, 2),
+        })
+    assert rows[0]["order_len"] == requests, rows
+    assert (rows[1]["dispatches_per_step"]
+            < rows[0]["dispatches_per_step"]), rows
     return rows
 
 

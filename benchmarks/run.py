@@ -80,6 +80,13 @@ def main() -> None:
             steps=72 if args.full else (24 if args.smoke else 48),
             chunk=12 if args.full else (6 if args.smoke else 8),
             repeats=1 if args.smoke else 3),
+        # chunk stays 8 in every mode: the CI gate compares continuous vs
+        # fused at step_chunk=8 specifically
+        "continuous": lambda: paper.continuous_serving(
+            requests=128 if args.full else (24 if args.smoke else 64),
+            steps=96 if args.full else (32 if args.smoke else 64),
+            chunk=8,
+            repeats=1 if args.smoke else 3),
         "relaxed_topk": (
             (lambda: kernels_bench.bench_relaxed_topk(n=1 << 13, p=64,
                                                       cs=(64, 8)))
@@ -90,27 +97,30 @@ def main() -> None:
             if args.smoke else kernels_bench.bench_flash_attention),
         "roofline": lambda: roofline_table.rows(),
     }
-    # per-section dispatch accounting: the serve-plane classes keep a
-    # class-level dispatch aggregate that would otherwise leak across
-    # sections under a multi-match --only (and skew any per-section
-    # dispatches/step math) — snapshot-delta it around every section
+    # per-section dispatch accounting: the serve-plane classes expose a
+    # monotone aggregate over instance-scoped counters (dead instances
+    # included) — snapshot-delta it around every section so one section's
+    # dispatches never skew another's under a multi-match --only, without
+    # any shared mutable counter to corrupt
     from repro.serve.fused_step import FusedServeLoop
     from repro.serve.streaming import StreamingAdmitter
+
+    def _serve_dispatches():
+        return (StreamingAdmitter.dispatch_total()
+                + FusedServeLoop.dispatch_total())
 
     failures = 0
     for name, fn in sections.items():
         if args.only and args.only not in name:
             continue
-        StreamingAdmitter.reset_dispatch_total()
-        FusedServeLoop.reset_dispatch_total()
+        before = _serve_dispatches()
         try:
             _emit(name, fn())
         except Exception as e:  # pragma: no cover
             failures += 1
             print(f"{name},ERROR,{type(e).__name__}: {e}", file=sys.stderr)
         finally:
-            d = (StreamingAdmitter.reset_dispatch_total()
-                 + FusedServeLoop.reset_dispatch_total())
+            d = _serve_dispatches() - before
             if d:
                 print(f"# {name}: {d} serve-plane device dispatches",
                       file=sys.stderr)

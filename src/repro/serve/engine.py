@@ -24,12 +24,22 @@ no host queue on the hot path.
 matching ``admission=``), ``"fused"`` runs admission + pop + splice + decode
 as ONE lax.scan-chunked dispatch per ``step_chunk`` steps
 (serve/fused_step.py) — same admission order and token streams, one device
-program on the entire hot path.
+program on the entire hot path. ``"continuous"`` (DESIGN.md §12) is the
+fused plane plus double-buffered arrival plans: an async host packer drains
+``submit`` into ready plans while the device runs the current chunk, and
+each chunk boundary folds whatever the host has published — submissions
+batch into ~2 device programs per PLAN instead of 2 per request, and a
+submission landing a chunk later only spends relaxation budget inside
+ρ = P·k.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
+import time
+import weakref
+from collections import deque
 from typing import List, Optional
 
 import jax
@@ -57,6 +67,84 @@ def _fused_model_fns(cfg: ModelConfig, max_len: int):
         return prefill(p, cfg, {"tokens": t}, max_len)
 
     return decode_fn, prefill_fn
+
+
+class _PlanPacker:
+    """Async host-side packer (DESIGN.md §12): a daemon thread drains
+    ``ServeEngine.submit`` calls into ready arrival plans — pool-slot
+    reservation + prefill via ``FusedServeLoop.submit_planned``, then a
+    publish into the open :class:`~repro.serve.streaming.PlanSlot` — ahead
+    of the device. When the open plan's row is full the publish blocks until
+    the consumer seals (``PlanBook.publish_wait``): the packer-behind
+    backpressure path, where the entry spills into the NEXT plan instead of
+    being dropped. Exceptions are captured and re-raised on the engine
+    thread at the next ``submit``/``drain``."""
+
+    def __init__(self, loop, book, max_backlog: int = 4096):
+        self._loop, self._book = loop, book
+        self._max_backlog = max_backlog
+        self._inbox = deque()
+        self._cv = threading.Condition()
+        self._busy = 0                 # entries popped but not yet published
+        self._stop = False
+        self._error: Optional[BaseException] = None
+        self._thread = threading.Thread(
+            target=self._run, name="plan-packer", daemon=True)
+        self._thread.start()
+
+    def submit(self, frontend: int, qprio: float, req):
+        with self._cv:
+            if self._error is not None:
+                raise RuntimeError("plan packer died") from self._error
+            while len(self._inbox) >= self._max_backlog:
+                self._cv.wait(timeout=1.0)     # submit-side backpressure
+            self._inbox.append((frontend, qprio, req))
+            self._cv.notify_all()
+
+    def _run(self):
+        while True:
+            with self._cv:
+                while not self._inbox and not self._stop:
+                    self._cv.wait()
+                if not self._inbox and self._stop:
+                    return
+                frontend, qprio, req = self._inbox.popleft()
+                self._busy += 1
+                self._cv.notify_all()
+            try:
+                pool_slot, uid = self._loop.submit_planned(
+                    frontend, qprio, req, req.tokens, req.max_new)
+                self._book.publish_wait(frontend, pool_slot, qprio, uid)
+            except BaseException as e:  # noqa: BLE001 - relayed to engine
+                with self._cv:
+                    self._error = e
+            finally:
+                with self._cv:
+                    self._busy -= 1
+                    self._cv.notify_all()
+
+    def backlog(self) -> int:
+        """Submissions not yet published into a plan (queued + in flight)."""
+        with self._cv:
+            return len(self._inbox) + self._busy
+
+    def wait_progress(self, timeout: float = 0.01):
+        """Block briefly until the packer makes progress (or timeout)."""
+        with self._cv:
+            if self._error is not None:
+                raise RuntimeError("plan packer died") from self._error
+            if self._inbox or self._busy:
+                self._cv.wait(timeout=timeout)
+
+    def check(self):
+        with self._cv:
+            if self._error is not None:
+                raise RuntimeError("plan packer died") from self._error
+
+    def stop(self):
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
 
 
 @dataclasses.dataclass
@@ -115,6 +203,7 @@ class ServeEngine:
         preemption: str = "off",
         preempt_margin: float = 0.0,
         staging_rows: Optional[int] = None,
+        packer: str = "thread",
     ):
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
@@ -122,22 +211,29 @@ class ServeEngine:
             raise ValueError(f"unknown preemption mode: {preemption!r}")
         if preempt_margin < 0:
             raise ValueError("preempt_margin must be >= 0")
+        if packer not in ("thread", "sync"):
+            raise ValueError(f"unknown packer mode: {packer!r}")
         self.preemption = preemption
         self.preempt_margin = float(preempt_margin)
         # step= subsumes admission=: "host"/"device" are the eager per-step
-        # oracles, "fused" the single-dispatch loop (DESIGN.md §10)
+        # oracles, "fused" the single-dispatch loop (DESIGN.md §10),
+        # "continuous" the fused loop with double-buffered arrival plans
+        # and the async packer (§12)
         if step is None:
             step = admission
         if step in ("host", "device"):
             admission = step
-        elif step != "fused":
+        elif step not in ("fused", "continuous"):
             raise ValueError(f"unknown step mode: {step!r}")
         self.step_mode = step
         self.step_chunk = step_chunk
         self.admission = admission
         self._fused = None
+        self._book = None
+        self._packer = None
+        self._packer_mode = packer
         self._dispatches = 0
-        if step == "fused":
+        if step in ("fused", "continuous"):
             self.queue = None        # installed after caches exist, below
         elif admission == "host":
             # min-index spy: pins the same victim choice as the device plane
@@ -183,8 +279,9 @@ class ServeEngine:
         self._prefill = jax.jit(
             lambda p, t: prefill(p, cfg, {"tokens": t}, max_len)
         )
-        if step == "fused":
+        if step in ("fused", "continuous"):
             from repro.serve.fused_step import FusedServeLoop
+            from repro.serve.streaming import PlanBook
 
             decode_fn, prefill_fn = _fused_model_fns(cfg, max_len)
             self._fused = FusedServeLoop(
@@ -193,13 +290,21 @@ class ServeEngine:
                 caches=self.caches, decode_fn=decode_fn,
                 prefill_fn=prefill_fn, mesh=mesh,
                 preemption=preemption, margin=self.preempt_margin,
-                staging_rows=staging_rows,
+                staging_rows=staging_rows, continuous=step == "continuous",
             )
             self.queue = self._fused       # queue-like: __len__/flush/pending
             # cache ownership moves into the fused carry (donated each
             # chunk); the ``caches`` property reads the live carry so the
             # engine never exposes donated-and-deleted buffers
             self._caches = None
+            if step == "continuous":
+                self._book = PlanBook(frontends, self._fused.buffer_cap)
+                if packer == "thread":
+                    self._packer = _PlanPacker(self._fused, self._book)
+                    # stop the packer thread when the engine is dropped —
+                    # otherwise its loop/book references pin the fused
+                    # carry's device buffers past engine deletion
+                    weakref.finalize(self, _PlanPacker.stop, self._packer)
 
     # ------------------------------------------------------------- caches
     @property
@@ -230,17 +335,50 @@ class ServeEngine:
         qprio = float(np.float32(req.priority))
         req.frontend = frontend
         req._qprio = qprio
-        if self._fused is not None:
+        if self.step_mode == "continuous":
+            if self._packer is not None:
+                self._packer.submit(frontend, qprio, req)
+            else:                              # packer="sync": pack inline
+                pool_slot, uid = self._fused.submit_planned(
+                    frontend, qprio, req, req.tokens, req.max_new)
+                if not self._book.publish(frontend, pool_slot, qprio, uid):
+                    raise RuntimeError(
+                        "arrival plan full (buffer_cap rows per frontend "
+                        "and no async packer to backpressure); run a chunk "
+                        "or raise buffer_cap")
+        elif self._fused is not None:
             self._fused.submit(frontend, qprio, req, req.tokens, req.max_new)
         else:
             self._push_seq += 1
             req._uid = self._push_seq
             self.queue.push(frontend, qprio, req)
 
+    def _drain_plans(self, timeout: float = 60.0):
+        """Drain the continuous submission path onto the exact flush path:
+        seal plans (unblocking any backpressured publish) and adopt their
+        entries as ordinary next-step arrivals until the packer and both
+        plan slots are empty."""
+        deadline = time.monotonic() + timeout
+        while True:
+            sealed = self._book.seal()
+            if sealed.total():
+                self._fused.adopt_plan(sealed)
+            busy = (self._packer.backlog() if self._packer is not None
+                    else 0)
+            if busy == 0 and self._book.pending() == 0:
+                return
+            if time.monotonic() > deadline:
+                raise TimeoutError("plan packer failed to drain")
+            if self._packer is not None:
+                self._packer.wait_progress()
+
     def flush_frontends(self):
         """Make every front-end's unpublished requests globally visible
         (shutdown / straggler handoff; the ρ bound only ever tightens)."""
-        if self._fused is not None or self.admission == "device":
+        if self.step_mode == "continuous":
+            self._drain_plans()
+            self.queue.flush()
+        elif self._fused is not None or self.admission == "device":
             self.queue.flush()
         else:
             for p in range(self.frontends):
@@ -373,9 +511,19 @@ class ServeEngine:
         return done
 
     # ------------------------------------------------------------------ step
+    def _publish_boundary(self):
+        """Chunk-boundary handoff (§12): seal whatever the packer has
+        published so far and upload it for the next chunk's fold."""
+        if self._packer is not None:
+            self._packer.check()
+        self._fused.publish_plan(self._book.seal())
+
     def step(self) -> List[Request]:
         """Admit (+ preempt) + one decode step for all active slots; returns
         finished."""
+        if self.step_mode == "continuous":
+            self._publish_boundary()
+            return self._consume(self._fused.run_steps(1))
         if self._fused is not None:
             return self._consume(self._fused.run_steps(1))
         self.clock += 1
@@ -415,7 +563,12 @@ class ServeEngine:
         finished: List[Request] = []
         steps = 0
         while steps < max_steps:
-            if self._fused is not None:
+            if self.step_mode == "continuous":
+                n = min(self.step_chunk, max_steps - steps)
+                self._publish_boundary()
+                finished.extend(self._consume(self._fused.run_steps(n)))
+                steps += n
+            elif self._fused is not None:
                 n = min(self.step_chunk, max_steps - steps)
                 finished.extend(self._consume(self._fused.run_steps(n)))
                 steps += n
@@ -423,7 +576,17 @@ class ServeEngine:
                 finished.extend(self.step())
                 steps += 1
             if (not any(self.active)) and len(self.queue) == 0:
-                break
+                if self.step_mode != "continuous":
+                    break
+                # continuous: the packer may still be packing — wait for it
+                # rather than dispatching empty chunks, and only stop once
+                # both plan slots are empty too
+                busy = (self._packer.backlog()
+                        if self._packer is not None else 0)
+                if busy == 0 and self._book.pending() == 0:
+                    break
+                if self._packer is not None:
+                    self._packer.wait_progress()
         return finished
 
     # --------------------------------------------------------------- queries

@@ -42,8 +42,8 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8).
 """
 from __future__ import annotations
 
-import functools
 import heapq
+import threading
 from typing import Any, Callable, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -52,7 +52,7 @@ import numpy as np
 
 from repro.core import kpriority as kp
 from repro.serve import streaming
-from repro.serve.streaming import AdmissionBuffer, fold
+from repro.serve.streaming import AdmissionBuffer, PlanSlot, fold
 
 
 class Staging(NamedTuple):
@@ -95,6 +95,8 @@ class FusedCarry(NamedTuple):
     slot_creator: jnp.ndarray  # i32[S] its submitting frontend
     staging: Staging      # resume staging + pool-slot indirection
     staged_caches: Any    # staged KV; every leaf [lead, staging_rows, ...]
+    plan: AdmissionBuffer  # ping-pong arrival plans; leaves [2, P, C]/[2, P]
+    plan_sel: jnp.ndarray  # i32[] plan slot the NEXT chunk folds (§12)
 
 
 class StepEvents(NamedTuple):
@@ -107,6 +109,8 @@ class StepEvents(NamedTuple):
     token: jnp.ndarray   # i32[S] decode-step token (valid where ``active``)
     active: jnp.ndarray  # bool[S] slot held a request this step
     done: jnp.ndarray    # bool[S] request finished this step
+    live: jnp.ndarray    # bool[] step did decode/preempt work (False = the
+                         # masked no-op tail of a short chunk)
     pre_slot: jnp.ndarray  # i32[rounds] preempted decode slot; -1 no fire
     pre_vps: jnp.ndarray   # i32[rounds] victim's pool slot (re-pushed)
     pre_ps: jnp.ndarray    # i32[rounds] challenger's pool slot (admitted)
@@ -139,19 +143,48 @@ class _Arrival(NamedTuple):
     uid: int        # global arrival index
 
 
-@functools.lru_cache(maxsize=None)
 def build_chunk_fn(decode_fn: Callable, *, k: int, frontends: int,
                    slots: int, max_len: int, n: int,
                    preempt: bool = False, margin: float = 0.0,
-                   rounds: int = 0):
-    """Build (compile-once per static config — loop instances and serving
-    restarts share the cache) THE fused program: n steps of fold →
-    ``stream_pop_fill`` → splice → [preempt ×``rounds``] → decode → complete
-    as one jitted ``lax.scan`` over per-step AdmissionBuffer rows — one
-    dispatch per chunk (DESIGN.md §10/§11). Signature:
+                   rounds: int = 0, continuous: bool = False):
+    """Build THE fused program: n steps of fold → ``stream_pop_fill`` →
+    splice → [preempt ×``rounds``] → decode → complete as one jitted
+    ``lax.scan`` over per-step AdmissionBuffer rows — one dispatch per chunk
+    (DESIGN.md §10/§11). Signature:
     ``(params, carry, bufs[n]) -> (carry, events)`` with ``carry`` donated.
+
+    The compiled program is shared across live loop instances with the same
+    static config through :func:`streaming.shared_jit` — weakly, so
+    dropping every loop frees the executable (callers keep the returned
+    holder alive). Two refinements over the PR-4 program:
+
+    * **dead-step masking** — a step with no occupied decode slot and no
+      successful pop runs neither the preempt-round arbitration scan nor
+      the decode step (one ``lax.cond``): a 1-step tail of an 8-step chunk
+      pays 1 step of decode/arbitration, not 8. Fold + pops still run, so
+      pool state (publish-on-k counters, spy refs) stays bit-identical to
+      the unmasked program's.
+    * **``continuous=True``** — before the scan, fold whatever the host has
+      published into device plan slot ``carry.plan_sel``, clear it, and
+      flip ``plan_sel``: the chunk-boundary half of the double-buffered
+      arrival-plan protocol (§12). Plan entries behave exactly like
+      arrivals scheduled at the chunk's first step.
     """
+    key = ("chunk_fn", decode_fn, k, frontends, slots, max_len, n,
+           preempt, margin, rounds, continuous)
+    return streaming.shared_jit(
+        key,
+        lambda: _build_chunk_impl(
+            decode_fn, k=k, frontends=frontends, slots=slots,
+            max_len=max_len, n=n, preempt=preempt, margin=margin,
+            rounds=rounds, continuous=continuous))
+
+
+def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
+                      slots: int, max_len: int, n: int, preempt: bool,
+                      margin: float, rounds: int, continuous: bool):
     places_vec = jnp.arange(slots, dtype=jnp.int32) % frontends
+    n_rounds = rounds if (preempt and rounds > 0) else 0
 
     def splice_in(caches, staged_caches, rows, mask):
         """Gather staged rows into decode-slot columns where ``mask``."""
@@ -227,52 +260,98 @@ def build_chunk_fn(decode_fn: Callable, *, k: int, frontends: int,
 
     def run(params, carry, bufs):
         def one_step(c, buf):
+            # fold + pops always run (cheap, and they keep pool state —
+            # publish-on-k counters, spy refs — bit-identical to the
+            # unmasked program); only decode + preempt arbitration are
+            # gated on the step having any work
             pool, _ = fold(c.pool, buf, k=k)
             pool, res = kp.stream_pop_fill(pool, c.slot_req < 0, places_vec)
             got = res.valid                              # bool[S]
-            ps = jnp.where(got, res.slot, 0)             # i32[S]
-            rows = c.staging.row[ps]                     # i32[S]
-            cur_tok = jnp.where(got, c.staging.tok[rows], c.cur_tok)
-            pos = jnp.where(got, c.staging.pos[rows], c.pos)
-            out_len = jnp.where(got, c.staging.out_len[rows], c.out_len)
-            budget = jnp.where(got, c.staging.budget[rows], c.budget)
-            slot_req = jnp.where(got, ps, c.slot_req)
-            slot_prio = jnp.where(got, res.prio, c.slot_prio)
-            slot_uid = jnp.where(got, pool.seq[ps], c.slot_uid)
-            slot_creator = jnp.where(got, pool.creator[ps], c.slot_creator)
-            caches = splice_in(c.caches, c.staged_caches, rows, got)
-            staging, staged_caches = c.staging, c.staged_caches
+            live = jnp.any(got) | jnp.any(c.slot_req >= 0)
 
-            if preempt and rounds > 0:
-                st = (pool, caches, staging, staged_caches, cur_tok, pos,
-                      out_len, budget, slot_req, slot_prio, slot_uid,
-                      slot_creator, got)
-                st, (pre_slot, pre_vps, pre_ps) = jax.lax.scan(
-                    preempt_round, st, None, length=rounds)
-                (pool, caches, staging, staged_caches, cur_tok, pos,
-                 out_len, budget, slot_req, slot_prio, slot_uid,
-                 slot_creator, _protected) = st
-            else:
-                empty = jnp.zeros((0,), jnp.int32)
-                pre_slot = pre_vps = pre_ps = empty
+            def live_step(c):
+                ps = jnp.where(got, res.slot, 0)         # i32[S]
+                rows = c.staging.row[ps]                 # i32[S]
+                cur_tok = jnp.where(got, c.staging.tok[rows], c.cur_tok)
+                pos = jnp.where(got, c.staging.pos[rows], c.pos)
+                out_len = jnp.where(got, c.staging.out_len[rows], c.out_len)
+                budget = jnp.where(got, c.staging.budget[rows], c.budget)
+                slot_req = jnp.where(got, ps, c.slot_req)
+                slot_prio = jnp.where(got, res.prio, c.slot_prio)
+                slot_uid = jnp.where(got, pool.seq[ps], c.slot_uid)
+                slot_creator = jnp.where(got, pool.creator[ps],
+                                         c.slot_creator)
+                caches = splice_in(c.caches, c.staged_caches, rows, got)
+                staging, staged_caches = c.staging, c.staged_caches
 
-            logits, caches = decode_fn(params, caches, cur_tok, pos)
-            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            active = slot_req >= 0
-            pos = jnp.where(active, pos + 1, pos)
-            cur_tok = jnp.where(active, nxt, cur_tok)
-            out_len = jnp.where(active, out_len + 1, out_len)
-            done = active & ((out_len >= budget) | (pos >= max_len - 1))
-            slot_req = jnp.where(done, -1, slot_req)
-            new_c = FusedCarry(pool, caches, cur_tok, pos, slot_req,
-                               out_len, budget, slot_prio, slot_uid,
-                               slot_creator, staging, staged_caches)
-            ev = StepEvents(admit=jnp.where(got, res.slot, -1),
-                            token=nxt, active=active, done=done,
-                            pre_slot=pre_slot, pre_vps=pre_vps,
-                            pre_ps=pre_ps)
-            return new_c, ev
+                if n_rounds > 0:
+                    st = (pool, caches, staging, staged_caches, cur_tok,
+                          pos, out_len, budget, slot_req, slot_prio,
+                          slot_uid, slot_creator, got)
+                    st, (pre_slot, pre_vps, pre_ps) = jax.lax.scan(
+                        preempt_round, st, None, length=n_rounds)
+                    (pool_out, caches, staging, staged_caches, cur_tok,
+                     pos, out_len, budget, slot_req, slot_prio, slot_uid,
+                     slot_creator, _protected) = st
+                else:
+                    pool_out = pool
+                    empty = jnp.zeros((0,), jnp.int32)
+                    pre_slot = pre_vps = pre_ps = empty
 
+                logits, caches = decode_fn(params, caches, cur_tok, pos)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                active = slot_req >= 0
+                pos = jnp.where(active, pos + 1, pos)
+                cur_tok = jnp.where(active, nxt, cur_tok)
+                out_len = jnp.where(active, out_len + 1, out_len)
+                done = active & ((out_len >= budget) | (pos >= max_len - 1))
+                slot_req = jnp.where(done, -1, slot_req)
+                new_c = c._replace(
+                    pool=pool_out, caches=caches, cur_tok=cur_tok, pos=pos,
+                    slot_req=slot_req, out_len=out_len, budget=budget,
+                    slot_prio=slot_prio, slot_uid=slot_uid,
+                    slot_creator=slot_creator, staging=staging,
+                    staged_caches=staged_caches)
+                ev = StepEvents(admit=jnp.where(got, res.slot, -1),
+                                token=nxt, active=active, done=done,
+                                live=jnp.bool_(True),
+                                pre_slot=pre_slot, pre_vps=pre_vps,
+                                pre_ps=pre_ps)
+                return new_c, ev
+
+            def dead_step(c):
+                rfill = jnp.full((n_rounds,), -1, jnp.int32)
+                ev = StepEvents(
+                    admit=jnp.full((slots,), -1, jnp.int32),
+                    token=c.cur_tok,
+                    active=jnp.zeros((slots,), bool),
+                    done=jnp.zeros((slots,), bool),
+                    live=jnp.bool_(False),
+                    pre_slot=rfill, pre_vps=rfill, pre_ps=rfill)
+                return c._replace(pool=pool), ev
+
+            return jax.lax.cond(live, live_step, dead_step, c)
+
+        if continuous:
+            # chunk-boundary half of the double-buffered plan protocol
+            # (DESIGN.md §12): fold whatever the host has published into
+            # plan slot ``plan_sel`` — equivalent to those arrivals landing
+            # at this chunk's first step — then clear it and flip, so the
+            # host packs the next plan into the other slot while this
+            # chunk runs
+            sel = carry.plan_sel
+            plan = carry.plan
+            ready = AdmissionBuffer(
+                prio=plan.prio[sel], slot=plan.slot[sel],
+                arrival=plan.arrival[sel], count=plan.count[sel])
+            pool, _ = fold(carry.pool, ready, k=k)
+            cleared = AdmissionBuffer(
+                prio=plan.prio.at[sel].set(jnp.inf),
+                slot=plan.slot.at[sel].set(-1),
+                arrival=plan.arrival.at[sel].set(0),
+                count=plan.count.at[sel].set(0))
+            carry = carry._replace(pool=pool, plan=cleared,
+                                   plan_sel=1 - sel)
         return jax.lax.scan(one_step, carry, bufs)
 
     return jax.jit(run, donate_argnums=(1,))
@@ -295,6 +374,49 @@ def _stage_update_impl(staging, staged_caches, ps, row, tok, pos, out_len,
 
 
 _stage_update = jax.jit(_stage_update_impl, donate_argnums=(0, 1))
+
+
+def _stage_batch_fn(r: int):
+    """Batched staging: scatter ``r`` requests' resume state (cursors + the
+    per-request prefill cache1s, concatenated in-program) in ONE device
+    program — the continuous plane's replacement for ``r`` per-request
+    ``_stage_update`` dispatches. ``r`` is bucketed (next power of two) and
+    callers pad by repeating the last entry: duplicate-index scatters with
+    identical values are deterministic, so padding is free."""
+
+    def f(staging, staged_caches, ps, row, tok, pos, out_len, budget,
+          *cache1s):
+        staging = Staging(
+            tok=staging.tok.at[row].set(tok),
+            pos=staging.pos.at[row].set(pos),
+            out_len=staging.out_len.at[row].set(out_len),
+            budget=staging.budget.at[row].set(budget),
+            row=staging.row.at[ps].set(row),
+        )
+        batch = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=1), *cache1s)
+        staged_caches = jax.tree.map(
+            lambda full, b: full.at[:, row].set(b.astype(full.dtype)),
+            staged_caches, batch)
+        return staging, staged_caches
+
+    return streaming.shared_jit(
+        ("stage_batch", r), lambda: jax.jit(f, donate_argnums=(0, 1)))
+
+
+def _plan_upload_impl(plan, sel, prio, slot, arrival, count):
+    """Write one host-packed plan into device plan slot ``sel`` (the slot
+    the next chunk folds) — one scatter per plan, however many requests it
+    carries."""
+    return AdmissionBuffer(
+        prio=plan.prio.at[sel].set(prio),
+        slot=plan.slot.at[sel].set(slot),
+        arrival=plan.arrival.at[sel].set(arrival),
+        count=plan.count.at[sel].set(count),
+    )
+
+
+_plan_upload = jax.jit(_plan_upload_impl, donate_argnums=(0,))
 
 
 class FusedServeLoop:
@@ -336,9 +458,11 @@ class FusedServeLoop:
     unchanged on any mesh (the §9.4 placement argument).
     """
 
-    #: class-level dispatch aggregate (the StreamingAdmitter counterpart) —
-    #: benchmarks/run.py snapshot-deltas it per section.
-    total_dispatches: int = 0
+    #: aggregating ledger over per-instance dispatch counters (the
+    #: StreamingAdmitter counterpart) — benchmarks/run.py snapshot-deltas
+    #: :meth:`dispatch_total` per section; ``self.dispatches`` itself is
+    #: instance-scoped.
+    dispatch_ledger = streaming.DispatchLedger()
 
     def __init__(
         self,
@@ -357,6 +481,7 @@ class FusedServeLoop:
         preemption: str = "off",
         margin: float = 0.0,
         staging_rows: Optional[int] = None,
+        continuous: bool = False,
     ):
         if preemption not in ("off", "margin"):
             raise ValueError(f"unknown preemption mode: {preemption!r}")
@@ -373,8 +498,10 @@ class FusedServeLoop:
         self.margin = float(margin)
         self.rounds = slots if preemption == "margin" else 0
         self.staging_rows = capacity if staging_rows is None else staging_rows
+        self.continuous = continuous
         self.clock = 0
-        self.dispatches = 0
+        self.work_steps = 0            # steps that did decode/preempt work
+        self.noop_steps = 0            # dead-masked steps (ev.live False)
         r = self.staging_rows
         staging = Staging(
             tok=jnp.zeros((r,), jnp.int32),
@@ -400,6 +527,14 @@ class FusedServeLoop:
             slot_creator=jnp.zeros((slots,), jnp.int32),
             staging=staging,
             staged_caches=staged_caches,
+            plan=AdmissionBuffer(
+                prio=jnp.full((2, frontends, buffer_cap), jnp.inf,
+                              jnp.float32),
+                slot=jnp.full((2, frontends, buffer_cap), -1, jnp.int32),
+                arrival=jnp.zeros((2, frontends, buffer_cap), jnp.int32),
+                count=jnp.zeros((2, frontends), jnp.int32),
+            ),
+            plan_sel=jnp.zeros((), jnp.int32),
         )
         if mesh is not None:
             from repro.core.sharded_batch import fused_carry_shardings
@@ -422,18 +557,35 @@ class FusedServeLoop:
         self._active_items: List[Optional[Any]] = [None] * slots
         self.admission_log: List[Any] = []     # items, admission order
         self.preempt_log: List[Any] = []       # items, eviction order
+        # continuous-plane state: packer-thread-shared bookkeeping is
+        # guarded by _lock (submit_planned runs off-thread; everything
+        # else is the consumer thread's)
+        self._lock = threading.Lock()
+        self._hsel = 0                         # device plan_sel host mirror
+        self._staged_meta = {}                 # pool slot -> deferred staging
+        self._plan_pending = None              # uploaded-not-folded counts
+        # weakly-shared compiled programs: holding them HERE is what keeps
+        # them alive/shared while this loop exists (streaming.shared_jit)
+        self._flush_fold = streaming._jitted_fold(k, True)
+        self._flush_fold_places = streaming._jitted_fold_places(k)
+        self._chunk_holders = {}
+        self._stage_batch_holders = {}
+        self._dispatch_cell = type(self).dispatch_ledger.attach(self)
+
+    @property
+    def dispatches(self) -> int:
+        """Device programs launched by THIS loop (instance-scoped)."""
+        return self._dispatch_cell.n
 
     def _count(self, n: int = 1):
-        self.dispatches += n
-        FusedServeLoop.total_dispatches += n
+        self._dispatch_cell.n += n
 
     @classmethod
-    def reset_dispatch_total(cls) -> int:
-        """Zero the class-level dispatch aggregate; returns the old value
-        (benchmarks/run.py snapshot-deltas this per section)."""
-        old = cls.total_dispatches
-        cls.total_dispatches = 0
-        return old
+    def dispatch_total(cls) -> int:
+        """Monotone aggregate of every instance's dispatches since import,
+        dead instances included (benchmarks/run.py snapshot-deltas this
+        per section)."""
+        return cls.dispatch_ledger.total()
 
     # ------------------------------------------------------------ submission
     def _alloc_slot(self) -> int:
@@ -489,6 +641,107 @@ class FusedServeLoop:
         self._count(2)                         # prefill + staging scatter
         return pool_slot
 
+    # ------------------------------------------- continuous submission path
+    def submit_planned(self, place: int, priority: float, item: Any,
+                       tokens, max_new: int) -> Tuple[int, int]:
+        """Packer half of a continuous submission (DESIGN.md §12): reserve
+        a pool slot + staging row, run the prefill (one dispatch), and
+        record the resume state host-side — WITHOUT touching the carry, so
+        it is safe to call from the packer thread while a chunk is in
+        flight. The caller publishes the returned ``(pool_slot, uid)`` into
+        a :class:`~repro.serve.streaming.PlanSlot`; the deferred staging is
+        applied in one batched program at :meth:`publish_plan` /
+        :meth:`adopt_plan` time (consumer thread)."""
+        toks = jnp.asarray(np.asarray(tokens)[None, :], jnp.int32)
+        plen = int(toks.shape[1])
+        with self._lock:
+            pool_slot = self._alloc_slot()
+            row = self._alloc_row()
+            self._by_slot[pool_slot] = item
+            self._row_of[pool_slot] = row
+            self._place_of[pool_slot] = place
+            uid = self._arrival
+            self._arrival += 1
+        logits, cache1 = self._prefill(self.params, toks)
+        tok0 = int(jnp.argmax(logits[0]))
+        with self._lock:
+            self._tok0[pool_slot] = tok0
+            self._staged_meta[pool_slot] = (row, tok0, plen, max_new, cache1)
+            self._count()                      # prefill only — staging is
+        return pool_slot, uid                  # batched per plan
+
+    def _stage_batch(self, r: int):
+        h = self._stage_batch_holders.get(r)
+        if h is None:
+            h = _stage_batch_fn(r)
+            self._stage_batch_holders[r] = h
+        return h
+
+    def _apply_staging(self, entries):
+        """Apply the deferred staging of ``entries`` (a sealed plan's
+        publish-order (place, pool_slot, prio, uid) rows) in ONE batched
+        device program, padding to the next power-of-two bucket."""
+        if not entries:
+            return
+        with self._lock:
+            metas = [self._staged_meta.pop(ps) for (_pl, ps, _pr, _u)
+                     in entries]
+        r = 1 << (len(entries) - 1).bit_length()
+        idx = list(range(len(entries)))
+        idx += [len(entries) - 1] * (r - len(entries))
+        ps_a = jnp.asarray(
+            np.asarray([entries[i][1] for i in idx], np.int32))
+        row_a = jnp.asarray(np.asarray([metas[i][0] for i in idx], np.int32))
+        tok_a = jnp.asarray(np.asarray([metas[i][1] for i in idx], np.int32))
+        pos_a = jnp.asarray(np.asarray([metas[i][2] for i in idx], np.int32))
+        out_a = jnp.ones((r,), jnp.int32)
+        bud_a = jnp.asarray(np.asarray([metas[i][3] for i in idx], np.int32))
+        cache1s = [metas[i][4] for i in idx]
+        staging, staged_caches = self._stage_batch(r)(
+            self.carry.staging, self.carry.staged_caches,
+            ps_a, row_a, tok_a, pos_a, out_a, bud_a, *cache1s)
+        self.carry = self.carry._replace(
+            staging=staging, staged_caches=staged_caches)
+        self._count()
+
+    def publish_plan(self, sealed: PlanSlot):
+        """Consumer half of the plan handoff: apply the sealed plan's
+        deferred staging (one batched program) and upload its arrival
+        arrays into the device plan slot the NEXT chunk folds (one
+        scatter) — ~2 dispatches per plan regardless of how many requests
+        it carries, vs 2 per request on the fused submit path. Clears the
+        sealed slot so the ping-pong can hand it back. Must be paired with
+        a following :meth:`run_steps` before the next publish (the device
+        slot holds ONE plan)."""
+        if sealed.total() == 0:
+            sealed.clear()
+            return
+        if self._plan_pending is not None:
+            raise RuntimeError(
+                "publish_plan called twice without an intervening "
+                "run_steps: the device plan slot still holds an unfolded "
+                "plan (would overwrite and drop submissions)")
+        self._apply_staging(sealed.entries)
+        plan = _plan_upload(
+            self.carry.plan, jnp.int32(self._hsel),
+            jnp.asarray(sealed.prio), jnp.asarray(sealed.slot),
+            jnp.asarray(sealed.arrival), jnp.asarray(sealed.count))
+        self.carry = self.carry._replace(plan=plan)
+        self._plan_pending = sealed.count.copy()
+        self._count()
+        sealed.clear()
+
+    def adopt_plan(self, sealed: PlanSlot):
+        """Drain-path adoption of a sealed plan: apply its deferred staging
+        and schedule its entries as ordinary next-step arrivals instead of
+        a device plan upload — the exact :meth:`flush` companion (used when
+        the engine drains rather than running another chunk)."""
+        self._apply_staging(sealed.entries)
+        step = self.clock + 1
+        for (place, ps, pr, u) in sealed.entries:
+            self._pending.append(_Arrival(step, place, ps, pr, u))
+        sealed.clear()
+
     # --------------------------------------------------------------- packing
     def _pack_bufs(self, n: int):
         """Pack pending arrivals into per-step AdmissionBuffer rows
@@ -526,11 +779,15 @@ class FusedServeLoop:
 
     # ------------------------------------------------------------- chunk fn
     def _chunk_fn(self, n: int):
-        return build_chunk_fn(
-            self.decode_fn, k=self.k, frontends=self.frontends,
-            slots=self.slots, max_len=self.max_len, n=n,
-            preempt=self.preemption == "margin", margin=self.margin,
-            rounds=self.rounds)
+        h = self._chunk_holders.get(n)
+        if h is None:
+            h = build_chunk_fn(
+                self.decode_fn, k=self.k, frontends=self.frontends,
+                slots=self.slots, max_len=self.max_len, n=n,
+                preempt=self.preemption == "margin", margin=self.margin,
+                rounds=self.rounds, continuous=self.continuous)
+            self._chunk_holders[n] = h
+        return h
 
     # ----------------------------------------------------------- bookkeeping
     def _mirror_repush(self, place: int):
@@ -570,13 +827,27 @@ class FusedServeLoop:
         fn = self._chunk_fn(n)
         self.carry, ev = fn(self.params, self.carry, bufs)
         self._count()
+        if self.continuous:
+            # the chunk folded (and cleared) device plan slot _hsel and
+            # flipped plan_sel — mirror both host-side: publish-on-k
+            # counters advance by the folded plan's per-place counts,
+            # before the per-step buffer counts below
+            self._hsel ^= 1
+            pc, self._plan_pending = self._plan_pending, None
+            if pc is not None:
+                for pl in range(self.frontends):
+                    u = self._unpub[pl] + int(pc[pl])
+                    self._unpub[pl] = 0 if self.k == 0 else u % self.k
         admit = np.asarray(ev.admit)
         token = np.asarray(ev.token)
         active = np.asarray(ev.active)
         done = np.asarray(ev.done)
+        live = np.asarray(ev.live)
         pre_slot = np.asarray(ev.pre_slot)
         pre_vps = np.asarray(ev.pre_vps)
         pre_ps = np.asarray(ev.pre_ps)
+        self.work_steps += int(live.sum())
+        self.noop_steps += n - int(live.sum())
         retain = self.preemption == "margin"
         records: List[StepRecord] = []
         for t in range(n):
@@ -628,6 +899,11 @@ class FusedServeLoop:
         Partially-drained chunks are safe: arrivals already folded live in
         the pool, the rest are packed here — nothing is dropped or double-
         folded (regression-pinned by tests/test_fused_step.py)."""
+        if self._plan_pending is not None:
+            raise RuntimeError(
+                "flush with an uploaded-but-unfolded plan: run_steps the "
+                "published chunk first (or adopt_plan instead of "
+                "publish_plan when draining)")
         p = self.frontends
         need = max(
             (sum(1 for a in self._pending if a.place == pl)
@@ -652,13 +928,11 @@ class FusedServeLoop:
             arrival=jnp.asarray(arrival), count=jnp.asarray(count),
         )
         if place is None:
-            pool, _ = streaming._jitted_fold(self.k, True)(
-                self.carry.pool, buf)
+            pool, _ = self._flush_fold(self.carry.pool, buf)
             self._unpub = [0] * p
         else:
             mask = jnp.zeros((p,), bool).at[place].set(True)
-            pool, _ = streaming._jitted_fold_places(self.k)(
-                self.carry.pool, buf, mask)
+            pool, _ = self._flush_fold_places(self.carry.pool, buf, mask)
             for pl in range(p):
                 u = self._unpub[pl] + int(count[pl])
                 self._unpub[pl] = (
@@ -711,18 +985,19 @@ def toy_prefill_fn(params, toks):
 
 def toy_loop(*, slots, frontends, k, max_len=10_000, capacity=128,
              buffer_cap=32, mesh=None, preemption="off", margin=0.0,
-             staging_rows=None) -> FusedServeLoop:
+             staging_rows=None, continuous=False) -> FusedServeLoop:
     """A :class:`FusedServeLoop` over the toy model, with the engine's cache
     convention (slot dim = axis 1 of every leaf) — splice/staging machinery
-    is exercised end-to-end, compiles are shared across instances (the toy
-    fns are module-level, so ``build_chunk_fn``'s cache hits)."""
+    is exercised end-to-end, compiles are shared across LIVE instances (the
+    toy fns are module-level, so ``build_chunk_fn``'s weak cache hits while
+    any loop of the same config is alive)."""
     caches = {"kv": jnp.zeros((1, slots, 2), jnp.float32)}
     return FusedServeLoop(
         slots=slots, frontends=frontends, k=k, max_len=max_len,
         capacity=capacity, buffer_cap=buffer_cap, params=None,
         caches=caches, decode_fn=toy_decode_fn, prefill_fn=toy_prefill_fn,
         mesh=mesh, preemption=preemption, margin=margin,
-        staging_rows=staging_rows)
+        staging_rows=staging_rows, continuous=continuous)
 
 
 # ---------------------------------------------------------------------------

@@ -24,15 +24,104 @@ the host queue's publication set, never less).
 from __future__ import annotations
 
 import functools
+import threading
+import weakref
 from collections import ChainMap
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, Callable, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import kpriority as kp
 
 INF = jnp.inf
+
+
+# ---------------------------------------------------------------------------
+# dispatch accounting: instance-scoped counters + an aggregating ledger
+# ---------------------------------------------------------------------------
+
+class _DispatchCell:
+    """One instance's dispatch counter (a tiny mutable cell so the ledger's
+    finalizer can fold the count of a dead instance without resurrecting
+    it)."""
+
+    __slots__ = ("n", "__weakref__")
+
+    def __init__(self):
+        self.n = 0
+
+
+class DispatchLedger:
+    """Aggregate view over per-instance dispatch counters — one ledger per
+    serve-plane class. Counters are *instance-scoped* (two live engines can
+    never skew each other's counts — the PR-5 class-level counter did
+    exactly that), and the ledger folds a dying instance's count into a
+    retired total, so :meth:`total` is the same monotone
+    dispatches-since-import aggregate the old class attribute provided,
+    now by aggregation instead of shared mutation. benchmarks/run.py
+    snapshot-deltas ``total()`` around each section."""
+
+    def __init__(self):
+        self._cells: set = set()
+        self._retired = 0
+        self._lock = threading.Lock()
+
+    def attach(self, owner) -> _DispatchCell:
+        cell = _DispatchCell()
+        with self._lock:
+            self._cells.add(cell)
+        weakref.finalize(owner, self._retire, cell)
+        return cell
+
+    def _retire(self, cell: _DispatchCell):
+        with self._lock:
+            self._cells.discard(cell)
+            self._retired += cell.n
+
+    def total(self) -> int:
+        with self._lock:
+            return self._retired + sum(c.n for c in self._cells)
+
+
+# ---------------------------------------------------------------------------
+# shared-but-weakly-held jitted helpers (compile sharing without pinning)
+# ---------------------------------------------------------------------------
+
+class _JitHolder:
+    """Weak-referenceable callable wrapper for a shared jitted helper: live
+    engines with the same static config share one compiled program through
+    the weak-value cache below, and when the last holder dies the entry —
+    with its compiled executables, their baked device constants, and any
+    mesh references in their sharding keys — is freed instead of being
+    pinned module-wide for the process lifetime (the PR-5 ``lru_cache``
+    retained all of it forever)."""
+
+    __slots__ = ("fn", "__weakref__")
+
+    def __init__(self, fn):
+        self.fn = fn
+
+    def __call__(self, *args, **kwargs):
+        return self.fn(*args, **kwargs)
+
+
+_jit_cache: "weakref.WeakValueDictionary" = weakref.WeakValueDictionary()
+_jit_cache_lock = threading.Lock()
+
+
+def shared_jit(key, build: Callable[[], Callable]) -> _JitHolder:
+    """Return the weakly-cached :class:`_JitHolder` for ``key``, building
+    (and jitting) via ``build()`` on first use. Callers MUST keep a strong
+    reference to the returned holder for as long as they want the compile
+    shared — a transient lookup compiles, runs, and is dropped."""
+    with _jit_cache_lock:
+        holder = _jit_cache.get(key)
+        if holder is None:
+            holder = _JitHolder(build())
+            _jit_cache[key] = holder
+        return holder
 
 
 class AdmissionBuffer(NamedTuple):
@@ -156,24 +245,31 @@ def fold(
     return st, init_buffer(num_places, cap)
 
 
-@functools.lru_cache(maxsize=None)
-def _jitted_fold(k: int, force: bool):
-    """Compile-once fold per (k, force): admitter instances (and serving
-    restarts) share the cache instead of re-jitting per instance."""
-    return jax.jit(
-        functools.partial(fold, k=k, force=force), donate_argnums=(0, 1)
+def _jitted_fold(k: int, force: bool) -> _JitHolder:
+    """Shared fold per (k, force): live admitter instances with the same k
+    share one compiled program, but the cache holds it *weakly* — callers
+    keep the returned holder alive (the old ``lru_cache`` pinned every
+    (mesh, k) program, and its donated-buffer constants, for the process
+    lifetime)."""
+    return shared_jit(
+        ("fold", k, force),
+        lambda: jax.jit(
+            functools.partial(fold, k=k, force=force), donate_argnums=(0, 1)
+        ),
     )
 
 
-@functools.lru_cache(maxsize=None)
-def _jitted_fold_places(k: int):
-    """Compile-once per-place flush fold: the ``force_places`` mask is a
-    traced argument, so one program serves every place choice."""
+def _jitted_fold_places(k: int) -> _JitHolder:
+    """Shared per-place flush fold: the ``force_places`` mask is a traced
+    argument, so one program serves every place choice."""
 
-    def f(pool, buf, mask):
-        return fold(pool, buf, k=k, force_places=mask)
+    def build():
+        def f(pool, buf, mask):
+            return fold(pool, buf, k=k, force_places=mask)
 
-    return jax.jit(f, donate_argnums=(0, 1))
+        return jax.jit(f, donate_argnums=(0, 1))
+
+    return shared_jit(("fold_places", k), build)
 
 
 _jitted_buffer_push = jax.jit(buffer_push, donate_argnums=(0,))
@@ -181,24 +277,26 @@ _jitted_stream_pop = jax.jit(kp.stream_pop, donate_argnums=(0,))
 _jitted_stream_peek = jax.jit(kp.stream_peek, donate_argnums=(0,))
 
 
-@functools.lru_cache(maxsize=None)
-def _jitted_repush(k: int):
-    """Compile-once immediate re-push (preemption re-queue, DESIGN.md §11):
+def _jitted_repush(k: int) -> _JitHolder:
+    """Shared immediate re-push (preemption re-queue, DESIGN.md §11):
     one item re-enters the pool through the ordinary HYBRID push/publish
     path — ``kp.push`` = ``push_batch`` + publish-on-k — with a fresh seq,
     exactly what ``HybridKQueue.push`` does for a re-queued victim."""
 
-    def f(pool, slot, place, prio):
-        m = pool.prio.shape[0]
-        mask = jnp.arange(m) == slot
-        return kp.push(
-            pool, mask,
-            jnp.full((m,), jnp.float32(prio)),
-            jnp.full((m,), jnp.int32(place), jnp.int32),
-            k=k, policy=kp.Policy.HYBRID,
-        )
+    def build():
+        def f(pool, slot, place, prio):
+            m = pool.prio.shape[0]
+            mask = jnp.arange(m) == slot
+            return kp.push(
+                pool, mask,
+                jnp.full((m,), jnp.float32(prio)),
+                jnp.full((m,), jnp.int32(place), jnp.int32),
+                k=k, policy=kp.Policy.HYBRID,
+            )
 
-    return jax.jit(f, donate_argnums=(0,))
+        return jax.jit(f, donate_argnums=(0,))
+
+    return shared_jit(("repush", k), build)
 
 
 def alloc_pool_slot(occupied, next_slot: int, capacity: int):
@@ -215,6 +313,111 @@ def alloc_pool_slot(occupied, next_slot: int, capacity: int):
     while next_slot in occupied:
         next_slot = (next_slot + 1) % capacity
     return next_slot, (next_slot + 1) % capacity
+
+
+# ---------------------------------------------------------------------------
+# double-buffered arrival plans (continuous serving, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+class PlanSlot:
+    """One host-side arrival plan: the packer's half of a double-buffered
+    ``AdmissionBuffer``. The packer ``publish``\\ es submissions into the
+    open slot while the device runs a chunk against the other; at the chunk
+    boundary the consumer ``seal``\\ s (via :class:`PlanBook`), uploads the
+    arrays into the device-resident plan slot, and ``clear``\\ s. Arrays are
+    numpy so packing never touches the device — upload is one scatter at the
+    boundary."""
+
+    def __init__(self, num_places: int, cap: int):
+        self.num_places = num_places
+        self.cap = cap
+        self.prio = np.full((num_places, cap), np.inf, np.float32)
+        self.slot = np.full((num_places, cap), -1, np.int32)
+        self.arrival = np.zeros((num_places, cap), np.int32)
+        self.count = np.zeros((num_places,), np.int32)
+        #: publish order, (place, pool_slot, prio, arrival) — the host-side
+        #: replay record the engine needs at fold time
+        self.entries: List[Tuple[int, int, float, int]] = []
+
+    def publish(self, place: int, pool_slot: int, prio: float,
+                arrival: int) -> bool:
+        """Append one submission to ``place``'s row; False = row full
+        (backpressure — the packer waits for the next seal and the entry
+        spills into the next plan)."""
+        i = int(self.count[place])
+        if i >= self.cap:
+            return False
+        self.prio[place, i] = np.float32(prio)
+        self.slot[place, i] = pool_slot
+        self.arrival[place, i] = arrival
+        self.count[place] += 1
+        self.entries.append((int(place), int(pool_slot), float(prio),
+                             int(arrival)))
+        return True
+
+    def total(self) -> int:
+        return int(self.count.sum())
+
+    def clear(self):
+        self.prio.fill(np.inf)
+        self.slot.fill(-1)
+        self.arrival.fill(0)
+        self.count.fill(0)
+        self.entries.clear()
+
+
+class PlanBook:
+    """Ping-pong pair of :class:`PlanSlot`\\ s with the publish/seal
+    protocol between the async packer (producer) and the chunk-dispatch loop
+    (consumer). ``publish`` targets the open slot; ``seal`` hands the open
+    slot to the consumer and flips, so packing of the next plan proceeds
+    while the sealed one is uploaded and the chunk runs. The consumer must
+    ``clear()`` a sealed slot before the next seal hands it back — ``seal``
+    raises on a dirty flip target, so protocol misuse can't silently
+    double-admit."""
+
+    def __init__(self, num_places: int, cap: int):
+        self._slots = (PlanSlot(num_places, cap), PlanSlot(num_places, cap))
+        self._open = 0
+        #: notified on every seal — blocked publishers retry into the newly
+        #: opened slot (the backpressure path)
+        self.cond = threading.Condition()
+
+    def publish(self, place: int, pool_slot: int, prio: float,
+                arrival: int) -> bool:
+        with self.cond:
+            return self._slots[self._open].publish(
+                place, pool_slot, prio, arrival)
+
+    def publish_wait(self, place: int, pool_slot: int, prio: float,
+                     arrival: int, timeout: Optional[float] = None) -> bool:
+        """Blocking :meth:`publish`: when the open plan's row is full, wait
+        for a seal and spill into the next plan. False only on timeout."""
+        with self.cond:
+            while not self._slots[self._open].publish(
+                    place, pool_slot, prio, arrival):
+                if not self.cond.wait(timeout=timeout):
+                    return False
+            return True
+
+    def seal(self) -> PlanSlot:
+        """Hand the open plan to the consumer and flip — whatever the packer
+        has published rides this chunk; later submissions land in the next
+        plan (legal within ρ = P·k, DESIGN.md §12)."""
+        with self.cond:
+            sealed = self._slots[self._open]
+            self._open ^= 1
+            if self._slots[self._open].total() != 0:
+                raise RuntimeError(
+                    "plan ping-pong protocol violation: sealed slot handed "
+                    "back before the consumer cleared it (would double-admit)")
+            self.cond.notify_all()
+            return sealed
+
+    def pending(self) -> int:
+        """Entries packed into the open plan so far (not yet sealed)."""
+        with self.cond:
+            return self._slots[self._open].total()
 
 
 class StreamingAdmitter:
@@ -251,11 +454,11 @@ class StreamingAdmitter:
     submitted-plus-running requests, not just the queued backlog.
     """
 
-    #: device programs launched by EVERY admitter instance since import (or
-    #: the last :meth:`reset_dispatch_total`) — benchmarks snapshot-delta
-    #: this per ``--only`` section so one section's dispatches never skew
-    #: another's per-step accounting (benchmarks/run.py).
-    total_dispatches: int = 0
+    #: aggregating ledger over per-instance dispatch counters — benchmarks
+    #: snapshot-delta :meth:`dispatch_total` per ``--only`` section. The
+    #: counters themselves are instance-scoped (``self.dispatches``), so two
+    #: live admitters can never corrupt each other's deltas.
+    dispatch_ledger = DispatchLedger()
 
     def __init__(
         self,
@@ -288,25 +491,32 @@ class StreamingAdmitter:
         self._staged = [0] * num_places        # unfolded pushes (host mirror)
         self._unpub = [0] * num_places         # device unpub_pushes mirror
         self._push_fn = _jitted_buffer_push
+        # holders, not bare functions: keeping them on the instance is what
+        # keeps the weakly-cached compiled programs alive (and shared with
+        # other live admitters of the same k)
         self._fold_fn = _jitted_fold(k, False)
         self._flush_fn = _jitted_fold(k, True)
         self._flush_place_fn = _jitted_fold_places(k)
         self._pop_fn = _jitted_stream_pop
         self._peek_fn = _jitted_stream_peek
         self._repush_fn = _jitted_repush(k)
-        self.dispatches = 0                    # device programs launched
+        self._dispatch_cell = type(self).dispatch_ledger.attach(self)
+
+    @property
+    def dispatches(self) -> int:
+        """Device programs launched by THIS instance (instance-scoped — a
+        second live admitter never skews it)."""
+        return self._dispatch_cell.n
 
     def _count(self, n: int = 1):
-        self.dispatches += n
-        StreamingAdmitter.total_dispatches += n
+        self._dispatch_cell.n += n
 
     @classmethod
-    def reset_dispatch_total(cls) -> int:
-        """Zero the class-level dispatch aggregate; returns the old value
-        (the snapshot-delta hook benchmarks/run.py uses between sections)."""
-        old = cls.total_dispatches
-        cls.total_dispatches = 0
-        return old
+    def dispatch_total(cls) -> int:
+        """Monotone aggregate of every instance's dispatches since import,
+        dead instances included — benchmarks/run.py snapshot-deltas this
+        around each section instead of resetting shared state."""
+        return cls.dispatch_ledger.total()
 
     # ------------------------------------------------------------------ push
     def _alloc_slot(self) -> int:
