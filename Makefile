@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test test-fast bench bench-full bench-smoke example lint docs-check
+.PHONY: test test-fast bench bench-full bench-smoke bench-gates example lint docs-check
 
 # tier-1 verify (ROADMAP.md): full suite, stop at first failure
 test:
@@ -34,6 +34,11 @@ bench-full:
 # CI-budget benchmark pass (<2 min): tiny sizes, same sections/artifacts
 bench-smoke:
 	$(PY) -m benchmarks.run --smoke
+
+# declarative perf gates over the BENCH_*.json artifacts (benchmarks/gates.py);
+# CI runs this right after uploading the bench-smoke artifact
+bench-gates:
+	$(PY) -m benchmarks.gates
 
 example:
 	$(PY) examples/sssp_dijkstra.py

@@ -1,0 +1,214 @@
+"""Declarative CI perf-gate runner over the BENCH_*.json artifacts.
+
+The bench gates used to live as three inline ``python - <<EOF`` heredocs in
+.github/workflows/ci.yml — unlintable, untestable, and silent about which
+artifact was missing when one failed. This module replaces them with ONE
+table of :class:`Gate` specs — (artifact, assertion, message) — covering
+every section ``benchmarks.run`` emits: a well-formedness gate per artifact
+plus the acceptance assertions for the serve-plane sections (fused_step,
+preemption, continuous, slo). CI runs the whole table in one step
+(``make bench-gates``); tests/test_gates.py runs every spec against
+known-good, known-regressed, and malformed synthetic artifacts.
+
+Failure discipline: a missing or unparsable artifact, a missing key, or a
+failed assertion all surface as a :class:`GateError` naming the gate and
+what it means — never a bare ``KeyError``/``FileNotFoundError`` from deep
+inside a heredoc.
+
+Convention (matching the benches): each bench asserts its STRICT win
+in-run, on fresh numbers; the gate re-checks the artifact so a regression
+that slips past an edited bench still fails CI, and so the uploaded
+artifact is the same evidence the gate judged. The slo gate stays strict —
+its trace is fixed-seed and both planes are bit-identical to host oracles,
+so the metrics are deterministic.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+from typing import Callable, List
+
+#: every section benchmarks.run emits (one well-formedness gate each) with
+#: its minimum row count — roofline reads the experiments/dryrun cache and
+#: legitimately emits [] on hosts that never ran a dry-run sweep
+SECTIONS = {
+    "fig3_simulation": 1, "fig4_scaling": 1, "fig5_ksweep": 1,
+    "batched_speedup": 1, "sharded_speedup": 1, "admission": 1,
+    "fused_step": 1, "preemption": 1, "continuous": 1, "slo": 1,
+    "relaxed_topk": 1, "flash_attention": 1, "roofline": 0,
+}
+
+
+class GateError(Exception):
+    """A gate failed: regression, missing/malformed artifact, or a spec
+    reading a field the artifact doesn't carry."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Gate:
+    artifact: str                      # BENCH_<section>.json basename
+    name: str                          # short id, shown per line
+    check: Callable[[list], str]       # rows -> summary; raises on failure
+    message: str                       # what a failure MEANS
+
+
+def _by_plane(rows: list) -> dict:
+    by = {}
+    for r in rows:
+        if not isinstance(r, dict) or "plane" not in r:
+            raise AssertionError(f"row without a 'plane' key: {r!r}")
+        by[r["plane"]] = r
+    return by
+
+
+def _plane(rows: list, name: str) -> dict:
+    by = _by_plane(rows)
+    if name not in by:
+        raise AssertionError(
+            f"no {name!r} plane row (have {sorted(by)})")
+    return by[name]
+
+
+def _wellformed(min_rows: int) -> Callable[[list], str]:
+    def check(rows: list) -> str:
+        if not isinstance(rows, list):
+            raise AssertionError("expected a list of row dicts")
+        if len(rows) < min_rows:
+            raise AssertionError(
+                f"expected >= {min_rows} rows, got {len(rows)}")
+        bad = [r for r in rows if not isinstance(r, dict)]
+        if bad:
+            raise AssertionError(f"non-dict rows: {bad[:3]!r}")
+        return f"{len(rows)} rows"
+    return check
+
+
+def _check_fused_step(rows: list) -> str:
+    fused = _plane(rows, "fused")
+    eager = _plane(rows, "device_eager")
+    assert (fused["dispatches_per_step"]
+            < eager["dispatches_per_step"]), rows
+    return (f"fused {fused['dispatches_per_step']}/step < eager "
+            f"{eager['dispatches_per_step']}/step")
+
+
+def _check_preemption(rows: list) -> str:
+    off = _plane(rows, "off")
+    pre = _plane(rows, "margin")
+    assert pre["useful_work_frac"] >= off["useful_work_frac"], rows
+    return (f"useful-work {pre['useful_work_frac']} (preemptive) >= "
+            f"{off['useful_work_frac']} (off); "
+            f"{pre['preemptions']} preemptions")
+
+
+def _check_continuous(rows: list) -> str:
+    fused = _plane(rows, "fused")
+    cont = _plane(rows, "continuous")
+    assert fused["chunk"] == cont["chunk"] == 8, rows
+    assert (cont["dispatches_per_step"]
+            <= fused["dispatches_per_step"]), rows
+    assert (cont["submit_to_admit_p99_ms"]
+            <= 1.5 * fused["submit_to_admit_p99_ms"]), rows
+    return (f"continuous {cont['dispatches_per_step']}/step <= fused "
+            f"{fused['dispatches_per_step']}/step; submit-to-admit p99 "
+            f"{cont['submit_to_admit_p99_ms']}ms vs "
+            f"{fused['submit_to_admit_p99_ms']}ms")
+
+
+def _check_slo(rows: list) -> str:
+    static = _plane(rows, "static")
+    slo = _plane(rows, "slo")
+    assert slo["oracle_identical"] is True, rows
+    assert slo["deadline_miss_frac"] < static["deadline_miss_frac"], rows
+    assert slo["queue_wait_p99"] < static["queue_wait_p99"], rows
+    starved, bound = slo["starved_class"], slo["aging_wait_bound"]
+    assert slo["max_wait_by_class"][starved] <= bound, rows
+    assert static["max_wait_by_class"][starved] > bound, rows
+    return (f"miss {slo['deadline_miss_frac']} < "
+            f"{static['deadline_miss_frac']}; p99 wait "
+            f"{slo['queue_wait_p99']} < {static['queue_wait_p99']}; "
+            f"{starved} max wait {slo['max_wait_by_class'][starved]} <= "
+            f"{bound} (static {static['max_wait_by_class'][starved]})")
+
+
+GATES: List[Gate] = [
+    Gate(f"BENCH_{s}.json", f"{s}:wellformed", _wellformed(n),
+         f"the {s} bench section emitted no usable rows")
+    for s, n in SECTIONS.items()
+] + [
+    Gate("BENCH_fused_step.json", "fused_step:dispatches", _check_fused_step,
+         "the single-dispatch fused step no longer undercuts the eager "
+         "fold+pops+decode dispatch sequence (ISSUE 4 acceptance)"),
+    Gate("BENCH_preemption.json", "preemption:useful_work", _check_preemption,
+         "the preemptive plane's useful-work fraction fell below the "
+         "non-preemptive plane on the inversion trace (ISSUE 5 acceptance)"),
+    Gate("BENCH_continuous.json", "continuous:handoff", _check_continuous,
+         "the double-buffered plan handoff lost its dispatch/latency win "
+         "over the fused submission path at chunk=8 (ISSUE 6 acceptance)"),
+    Gate("BENCH_slo.json", "slo:policy", _check_slo,
+         "SLO scheduling (deadline margins + aging + cheap-victim packing) "
+         "no longer beats the static-margin plane on the fixed bursty "
+         "trace, or the aging starvation bound broke (ISSUE 7 acceptance)"),
+]
+
+
+def _load(path: str) -> list:
+    if not os.path.exists(path):
+        raise GateError(
+            f"missing artifact {path} — did its bench section run (check "
+            "`python -m benchmarks.run --only <section>` and the smoke "
+            "step's log)?")
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError, OSError) as e:
+        raise GateError(f"malformed artifact {path}: {e}") from e
+
+
+def run(out_dir: str = "benchmarks/out", only: str = None) -> int:
+    """Run every gate spec (optionally filtered by ``only`` substring)
+    against the artifacts in ``out_dir``; print one PASS/FAIL line per
+    gate and return the number of failures. A typo'd ``only`` that matches
+    nothing counts as a failure (same discipline as run.py --only)."""
+    failures = matched = 0
+    for g in GATES:
+        if only and only not in g.name:
+            continue
+        matched += 1
+        try:
+            summary = g.check(_load(os.path.join(out_dir, g.artifact)))
+        except GateError as e:
+            failures += 1
+            print(f"FAIL {g.name}: {e}\n     meaning: {g.message}")
+        except Exception as e:
+            failures += 1
+            print(f"FAIL {g.name}: {type(e).__name__}: {e}\n"
+                  f"     meaning: {g.message}")
+        else:
+            print(f"PASS {g.name}: {summary}")
+    if only and not matched:
+        print(f"--only {only!r} matched no gate; valid gates: "
+              f"{', '.join(g.name for g in GATES)}")
+        return 1
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="run the declarative bench gates over BENCH_*.json")
+    ap.add_argument("--out-dir", default="benchmarks/out")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on gate names")
+    args = ap.parse_args()
+    failures = run(out_dir=args.out_dir, only=args.only)
+    if failures:
+        print(f"{failures} gate(s) failed", file=sys.stderr)
+        raise SystemExit(1)
+    print("all gates passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -43,7 +43,7 @@ def main() -> None:
     if args.full and args.smoke:
         ap.error("--full and --smoke are mutually exclusive")
 
-    from benchmarks import kernels_bench, paper, roofline_table
+    from benchmarks import kernels_bench, paper, roofline_table, slo_bench
 
     n = 10000 if args.full else (600 if args.smoke else 4000)
     graphs = 20 if args.full else 2
@@ -87,6 +87,10 @@ def main() -> None:
             steps=96 if args.full else (32 if args.smoke else 64),
             chunk=8,
             repeats=1 if args.smoke else 3),
+        # the bursty §13 trace is fixed-seed (the gate compares planes on
+        # THAT trace) — only the drain tail shrinks in smoke mode
+        "slo": lambda: slo_bench.slo_serving(
+            drain=160 if args.smoke else 240),
         "relaxed_topk": (
             (lambda: kernels_bench.bench_relaxed_topk(n=1 << 13, p=64,
                                                       cs=(64, 8)))
@@ -109,10 +113,11 @@ def main() -> None:
         return (StreamingAdmitter.dispatch_total()
                 + FusedServeLoop.dispatch_total())
 
-    failures = 0
+    failures = matched = 0
     for name, fn in sections.items():
         if args.only and args.only not in name:
             continue
+        matched += 1
         before = _serve_dispatches()
         try:
             _emit(name, fn())
@@ -124,6 +129,12 @@ def main() -> None:
             if d:
                 print(f"# {name}: {d} serve-plane device dispatches",
                       file=sys.stderr)
+    if args.only and not matched:
+        # a typo'd --only used to silently run zero sections (and exit 0,
+        # green in CI while measuring nothing) — fail loudly instead
+        print(f"--only {args.only!r} matched no section; valid sections: "
+              f"{', '.join(sections)}", file=sys.stderr)
+        raise SystemExit(2)
     if failures:
         raise SystemExit(1)
 

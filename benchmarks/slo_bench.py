@@ -1,0 +1,266 @@
+"""SLO-driven scheduling vs the static-margin preemption plane (§13).
+
+Replays the :mod:`benchmarks.traffic` bursty smoke trace — a sustained
+realtime/standard Poisson mix with adversarial realtime bursts and a thin
+best-effort batch class — through the fused serving plane twice:
+
+  * ``static`` — PR-5 policy: one global ``margin`` for every preemption
+    test, victims by (priority, uid), no deadlines, no aging;
+  * ``slo`` — ``SLOConfig``: push-time priority aging, per-victim
+    slack-derived margins, cheapest-restage victim tie-break.
+
+Both planes see identical arrivals (same f32 base priorities, prompts,
+budgets); only the policy differs. Metrics per plane, computed from the
+fused step records against the trace metadata: ``deadline_miss_frac``
+(finished after the absolute deadline, over deadline-carrying requests),
+``queue_wait_p50/p99`` and ``ttft_p50/p99`` in steps, ``max_wait_by_class``,
+and ``preemptions``. Asserted in-run (CI re-gates from the artifact):
+
+  * the SLO plane strictly improves deadline-miss fraction AND p99
+    queue-wait over the static plane on this trace,
+  * the batch class's max queue-wait stays under ``aging_wait_bound``
+    (~priority-span/aging_rate + a slot-drain allowance) on the SLO plane
+    while the static plane violates it — aging, not luck, ends starvation,
+  * the SLO plane's admission + eviction order is bit-identical to the
+    host ``HybridKQueue`` oracle (the §13 twin of the §11 differential).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import traffic
+
+
+def _pct(xs, q):
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+
+def _slo_oracle_drive(trace, *, slots, frontends, k, max_len, queue, slo):
+    """Compact host twin of the fused SLO plane (the §13 extension of
+    ``fused_step._preempt_oracle_drive``): same eager slot state machine
+    over the host queue, with per-victim slack margins and the
+    cheapest-restage victim tie-break. ``trace`` rows are
+    ``(place, qprio, uid, max_new, plen, deadline)`` with ``qprio`` already
+    aged (aging is a submit-boundary transform — by the time either plane
+    sees a key it is just an f32 priority) and ``deadline`` an absolute
+    step or None. Returns (admission uids, eviction uids)."""
+    from repro.core import kpriority as kp
+
+    active = [None] * slots
+    meta, stash = {}, {}
+    push_seq = [0]
+    uid_of = {}
+    admission, evictions = [], []
+    cheapest = slo.victim == "cheapest"
+
+    def push(place, pr, uid):
+        queue.push(place, pr, uid)
+        push_seq[0] += 1
+        uid_of[uid] = push_seq[0]
+
+    def admit(s, got):
+        pr, uid = got
+        admission.append(uid)
+        if uid in stash:
+            active[s] = stash.pop(uid)
+        else:
+            max_new, plen, place, deadline = meta[uid]
+            active[s] = {"uid": uid, "pr": pr, "out": 1, "pos": plen,
+                         "max_new": max_new, "place": place,
+                         "deadline": deadline}
+
+    def margin_of(a, step):
+        # victim slack in integer math, f32-cast once inside slack_margin —
+        # the same value the fused program computes from the carry
+        if a["deadline"] is None:
+            return slo.margin_for(float("inf"))
+        return slo.margin_for(a["deadline"] - step - (a["max_new"] - a["out"]))
+
+    for step, burst in enumerate(trace, start=1):
+        for (place, pr, uid, max_new, plen, deadline) in burst:
+            meta[uid] = (max_new, plen, place, deadline)
+            push(place, pr, uid)
+        filled = set()
+        for s in range(slots):
+            if active[s] is not None:
+                continue
+            got = queue.pop(s % frontends)
+            if got is None:
+                break
+            admit(s, got)
+            filled.add(s)
+        for _ in range(slots):
+            elig = [s for s in range(slots)
+                    if active[s] is not None and s not in filled]
+            if not elig:
+                break
+            if cheapest:
+                v = max(elig, key=lambda s: (active[s]["pr"],
+                                             -active[s]["pos"],
+                                             uid_of[active[s]["uid"]]))
+            else:
+                v = max(elig, key=lambda s: (active[s]["pr"],
+                                             uid_of[active[s]["uid"]]))
+            top = queue.peek(v % frontends)
+            if top is None or not kp.preempt_beats(
+                    top, margin_of(active[v], step), active[v]["pr"]):
+                break
+            victim = active[v]
+            evictions.append(victim["uid"])
+            stash[victim["uid"]] = victim
+            active[v] = None
+            push(victim["place"], victim["pr"], victim["uid"])
+            got = queue.pop(v % frontends)
+            admit(v, got)
+            filled.add(v)
+        for s in range(slots):
+            a = active[s]
+            if a is None:
+                continue
+            a["pos"] += 1
+            a["out"] += 1
+            if a["out"] >= a["max_new"] or a["pos"] >= max_len - 1:
+                active[s] = None
+    return admission, evictions
+
+
+def slo_serving(steps=120, slots=4, frontends=2, k=2, chunk=6,
+                static_margin=0.5, aging_rate=0.2, margin_scale=0.25,
+                margin_floor=0.5, margin_cap=2.5, drain=240,
+                seed=20130712):
+    """The ``slo`` bench section (see module docstring)."""
+    import jax
+
+    from repro.core.host_queue import HybridKQueue
+    from repro.serve.fused_step import toy_loop
+    from repro.serve.slo import SLOConfig
+
+    cfg = traffic.smoke_config(steps=steps, seed=seed)
+    arrivals = [r for burst in traffic.generate(cfg) for r in burst]
+    by_step = {}
+    for r in arrivals:
+        by_step.setdefault(r.step, []).append(r)
+    n_req = len(arrivals)
+    total_steps = steps + drain          # drain: arrivals stop, queue empties
+    max_len = 10_000
+
+    slo = SLOConfig(aging_rate=aging_rate, margin_scale=margin_scale,
+                    margin_floor=margin_floor, margin_cap=margin_cap,
+                    victim="cheapest")
+
+    def keyed(r, use_slo):
+        """(qprio, deadline) exactly as ServeEngine.submit stamps them:
+        f32-quantize, then age at the submit-time clock (= arrival step − 1
+        — the step whose fold admits the push has already been
+        incremented past it)."""
+        qprio = float(np.float32(r.priority))
+        if not use_slo:
+            return qprio, None
+        now = r.step - 1
+        return slo.age(qprio, now), slo.deadline_for(r.slo_steps, now)
+
+    def run(use_slo):
+        loop = toy_loop(
+            slots=slots, frontends=frontends, k=k, max_len=max_len,
+            capacity=n_req + slots, staging_rows=n_req + slots,
+            preemption="margin",
+            margin=0.0 if use_slo else static_margin,
+            slo=slo if use_slo else None)
+        done, records = 0, []
+        t0 = time.time()
+        while done < total_steps:
+            n = min(chunk, total_steps - done)
+            for t in range(done + 1, done + n + 1):
+                for r in by_step.get(t, ()):
+                    qprio, deadline = keyed(r, use_slo)
+                    loop.submit(r.place, qprio, r.uid,
+                                traffic.prompt_tokens(r.uid, r.plen),
+                                r.max_new, at_step=t, deadline=deadline)
+            records.extend(loop.run_steps(n))
+            done += n
+        jax.block_until_ready(loop.carry.pool.prio)
+        return records, loop, time.time() - t0
+
+    def metrics(records):
+        admit_step, finish_step = {}, {}
+        for t, rec in enumerate(records, start=1):
+            for (_s, uid, _tok0, _ps) in rec.admitted:
+                admit_step.setdefault(uid, t)
+            for (_s, uid) in rec.finished:
+                finish_step[uid] = t
+        assert len(finish_step) == n_req, (
+            f"{n_req - len(finish_step)} requests unfinished after "
+            f"{total_steps} steps — raise drain=")
+        waits = {r.uid: admit_step[r.uid] - r.step for r in arrivals}
+        misses = with_dl = 0
+        max_wait = {c.name: 0 for c in cfg.classes}
+        for r in arrivals:
+            max_wait[r.cls] = max(max_wait[r.cls], waits[r.uid])
+            if r.slo_steps is not None:
+                with_dl += 1
+                misses += finish_step[r.uid] > r.step - 1 + r.slo_steps
+        w = sorted(waits.values())
+        return {
+            "deadline_miss_frac": round(misses / max(with_dl, 1), 4),
+            "queue_wait_p50": _pct(w, 0.50),
+            "queue_wait_p99": _pct(w, 0.99),
+            "ttft_p50": _pct(w, 0.50) + 1,
+            "ttft_p99": _pct(w, 0.99) + 1,
+            "max_wait_by_class": max_wait,
+        }
+
+    # starvation bound: once a batch push has waited span/rate steps its
+    # aged key beats every FRESH arrival of the best class; the allowance
+    # term lets the already-crossed backlog drain through the slots
+    span = (max(c.priority for c in cfg.classes)
+            - min(c.priority for c in cfg.classes))
+    bound = int(span / aging_rate
+                + slots * max(c.max_new[1] for c in cfg.classes))
+    batch_cls = max(cfg.classes, key=lambda c: c.priority).name
+
+    rows = []
+    for plane in ("static", "slo"):
+        records, loop, dt = run(plane == "slo")
+        row = {"fig": "slo", "plane": plane, "steps": steps,
+               "drain": drain, "slots": slots, "frontends": frontends,
+               "k": k, "chunk": chunk, "requests": n_req, "seed": seed,
+               **metrics(records),
+               "preemptions": len(loop.preempt_log),
+               "admissions": len(loop.admission_log),
+               "steps_per_s": round(total_steps / dt, 1),
+               "us_per_call": round(dt * 1e6 / total_steps, 2)}
+        if plane == "static":
+            row["margin"] = static_margin
+        else:
+            row.update(aging_rate=aging_rate, margin_scale=margin_scale,
+                       margin_floor=margin_floor, margin_cap=margin_cap,
+                       victim=slo.victim, aging_wait_bound=bound,
+                       starved_class=batch_cls)
+            # §13 differential: the fused SLO plane must replay the host
+            # HybridKQueue oracle exactly (admissions AND evictions)
+            otrace = [[] for _ in range(total_steps)]
+            for r in arrivals:
+                qprio, deadline = keyed(r, True)
+                otrace[r.step - 1].append(
+                    (r.place, qprio, r.uid, r.max_new, r.plen, deadline))
+            adm, evs = _slo_oracle_drive(
+                otrace, slots=slots, frontends=frontends, k=k,
+                max_len=max_len,
+                queue=HybridKQueue(frontends, k, spy="min_index"), slo=slo)
+            assert list(loop.admission_log) == adm, (
+                "slo plane diverged from host oracle")
+            assert list(loop.preempt_log) == evs, (
+                "slo plane evictions diverged")
+            row["oracle_identical"] = True
+        rows.append(row)
+
+    static, slo_row = rows
+    assert (slo_row["deadline_miss_frac"]
+            < static["deadline_miss_frac"]), rows
+    assert slo_row["queue_wait_p99"] < static["queue_wait_p99"], rows
+    assert slo_row["max_wait_by_class"][batch_cls] <= bound, rows
+    assert static["max_wait_by_class"][batch_cls] > bound, rows
+    return rows

@@ -1,0 +1,158 @@
+"""Trace-replay workload generator for the serving planes (DESIGN.md §13).
+
+Config-driven, seeded-deterministic traffic for judging scheduling policy
+honestly: Poisson arrivals mixed over priority/SLO classes (each class with
+its own prefill-length and decode-budget ranges — prefill-heavy vs
+decode-heavy mixes are a class axis, not a global knob), plus adversarial
+bursts injected at fixed steps. The same :class:`TrafficConfig` always
+replays the identical trace (pinned by tests/test_gates.py), so bench
+artifacts and CI gates compare planes on the same arrivals.
+
+Schema: ``generate(cfg)`` returns one list per engine step; each entry is a
+:class:`TraceRequest` — ``(uid, step, place, cls, priority, plen, max_new,
+slo_steps)`` with ``priority`` the base (pre-aging) class priority, ``plen``
+the prompt length, ``max_new`` the decode budget, and ``slo_steps`` the
+relative deadline in steps (None = best-effort). Prompts themselves are
+derived deterministically from ``uid`` by the consumer (``prompt_tokens``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOClass:
+    """One priority/SLO traffic class: sampling ``weight``, base
+    ``priority`` (lower = more urgent), relative deadline ``slo_steps``
+    (None = best-effort), and per-class prefill/decode ranges
+    (``lo`` inclusive, ``hi`` exclusive)."""
+
+    name: str
+    priority: float
+    weight: float
+    slo_steps: Optional[int]
+    plen: Tuple[int, int] = (1, 4)
+    max_new: Tuple[int, int] = (2, 6)
+
+
+@dataclasses.dataclass(frozen=True)
+class Burst:
+    """Adversarial burst: ``count`` arrivals of class ``cls`` at ``step``
+    (on top of the Poisson stream)."""
+
+    step: int
+    cls: str
+    count: int
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficConfig:
+    steps: int
+    frontends: int
+    rate: float                      # Poisson mean arrivals per step
+    classes: Tuple[SLOClass, ...]
+    bursts: Tuple[Burst, ...] = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        if not self.classes:
+            raise ValueError("need at least one traffic class")
+        names = [c.name for c in self.classes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate class names: {names}")
+        for b in self.bursts:
+            if b.cls not in names:
+                raise ValueError(f"burst references unknown class {b.cls!r}")
+            if not (0 <= b.step < self.steps):
+                raise ValueError(f"burst step {b.step} outside trace")
+
+
+class TraceRequest(NamedTuple):
+    uid: int
+    step: int        # arrival step, 1-based (engine clock at fold)
+    place: int
+    cls: str
+    priority: float  # base class priority (pre-quantization, pre-aging)
+    plen: int
+    max_new: int
+    slo_steps: Optional[int]
+
+
+def prompt_tokens(uid: int, plen: int) -> np.ndarray:
+    """Deterministic toy prompt for ``uid`` (the tests' ``_prompt`` idiom)."""
+    return ((np.arange(plen) + uid) % 11).astype(np.int32)
+
+
+def generate(cfg: TrafficConfig) -> List[List[TraceRequest]]:
+    """Replay ``cfg`` into per-step arrival lists (index 0 = engine step 1).
+
+    Deterministic in ``cfg`` alone: one ``np.random.default_rng(cfg.seed)``
+    stream drawn in a fixed order (per-step Poisson count, then per-arrival
+    class/place/plen/max_new), bursts appended after the step's Poisson
+    arrivals in config order. uids are the global arrival index.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    by_name = {c.name: c for c in cfg.classes}
+    w = np.asarray([c.weight for c in cfg.classes], np.float64)
+    p = w / w.sum()
+    bursts_at: dict = {}
+    for b in cfg.bursts:
+        bursts_at.setdefault(b.step, []).append(b)
+
+    trace: List[List[TraceRequest]] = []
+    uid = 0
+
+    def draw(cls: SLOClass, step: int) -> TraceRequest:
+        nonlocal uid
+        place = int(rng.integers(cfg.frontends))
+        plen = int(rng.integers(cls.plen[0], cls.plen[1]))
+        max_new = int(rng.integers(cls.max_new[0], cls.max_new[1]))
+        r = TraceRequest(uid=uid, step=step + 1, place=place, cls=cls.name,
+                         priority=cls.priority, plen=plen, max_new=max_new,
+                         slo_steps=cls.slo_steps)
+        uid += 1
+        return r
+
+    for t in range(cfg.steps):
+        burst: List[TraceRequest] = []
+        for _ in range(int(rng.poisson(cfg.rate))):
+            cls = cfg.classes[int(rng.choice(len(cfg.classes), p=p))]
+            burst.append(draw(cls, t))
+        for b in bursts_at.get(t, ()):
+            for _ in range(b.count):
+                burst.append(draw(by_name[b.cls], t))
+        trace.append(burst)
+    return trace
+
+
+def smoke_config(steps: int = 120, seed: int = 20130712) -> TrafficConfig:
+    """The bursty smoke trace the ``--only slo`` bench section and its CI
+    gate replay (seed fixed on purpose — the gate compares planes on THIS
+    trace): a sustained realtime/standard Poisson mix that keeps all decode
+    slots contended, periodic adversarial realtime bursts, and a thin
+    best-effort batch class that a static-margin plane starves."""
+    bursts = tuple(
+        Burst(step=s, cls="rt", count=6)
+        for s in range(12, steps - 10, 12)
+    ) + tuple(
+        Burst(step=s, cls="batch", count=2)
+        for s in range(6, steps - 10, 54)
+    )
+    return TrafficConfig(
+        steps=steps,
+        frontends=2,
+        rate=0.95,
+        classes=(
+            SLOClass(name="rt", priority=0.0, weight=0.45, slo_steps=20,
+                     plen=(1, 3), max_new=(2, 5)),
+            SLOClass(name="std", priority=2.0, weight=0.45, slo_steps=28,
+                     plen=(1, 4), max_new=(5, 9)),
+            SLOClass(name="batch", priority=8.0, weight=0.10, slo_steps=None,
+                     plen=(2, 5), max_new=(6, 10)),
+        ),
+        bursts=bursts,
+        seed=seed,
+    )

@@ -23,12 +23,15 @@ class HybridKQueue:
     ρ = P·k ordering bound; only tie-breaking among victims differs."""
 
     def __init__(self, num_places: int, k: int, seed: int = 0,
-                 spy: str = "random"):
+                 spy: str = "random", aging_rate: float = 0.0):
         if spy not in ("random", "min_index"):
             raise ValueError(f"unknown spy policy: {spy!r}")
+        if aging_rate < 0:
+            raise ValueError("aging_rate must be >= 0")
         self.num_places = num_places
         self.k = k
         self.spy = spy
+        self.aging_rate = float(aging_rate)
         self._rng = random.Random(seed)
         self._counter = itertools.count()
         self._local: List[List[tuple]] = [[] for _ in range(num_places)]
@@ -40,8 +43,23 @@ class HybridKQueue:
         self.stats_ignored_max = 0
 
     # ------------------------------------------------------------------ push
-    def push(self, place: int, priority: float, item: Any, k: Optional[int] = None):
-        """Lower priority value = popped first (min-queue, as SSSP)."""
+    def push(self, place: int, priority: float, item: Any,
+             k: Optional[int] = None, now: Optional[int] = None):
+        """Lower priority value = popped first (min-queue, as SSSP).
+
+        ``now`` arms priority aging (DESIGN.md §13) when the queue was built
+        with ``aging_rate > 0``: the stored key becomes
+        ``kpriority.aged_key(priority, now, aging_rate)`` — the f32
+        push-time transform that orders identically to live linear aging
+        (older pushes effectively gain ``aging_rate`` per step on every
+        later arrival), so low-priority items cannot starve while pop/peek
+        stay untouched. The transform is exactly what ``ServeEngine.submit``
+        applies under ``slo=``; the ρ = P·k bound is unaffected (keys are
+        still static at push time — see §13)."""
+        if self.aging_rate > 0 and now is not None:
+            from repro.core.kpriority import aged_key
+
+            priority = aged_key(priority, now, self.aging_rate)
         uid = next(self._counter)
         rec = (priority, uid, place)
         self._items[uid] = item

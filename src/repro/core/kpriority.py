@@ -652,6 +652,51 @@ def preempt_beats(challenger: float, margin: float, incumbent: float) -> bool:
     return bool(lhs < np.float32(incumbent))
 
 
+def aged_key(priority: float, push_step: int, rate: float) -> float:
+    """Priority-aging transform (DESIGN.md §13): the STATIC queue key of a
+    request pushed at ``push_step`` under linear aging at ``rate`` priority
+    units per step — ``f32(f32(priority) + f32(rate) · f32(push_step))``.
+
+    Linear aging with one global rate needs no dynamic re-keying: the
+    effective priority at any time t is ``base − rate·(t − push_step)``
+    = ``(base + rate·push_step) − rate·t``, and subtracting ``rate·t``
+    uniformly from every key preserves every pairwise comparison — so the
+    push-time key above orders identically to live-aged priorities, on every
+    plane, with zero changes to pop/peek/fold. Computed host-side once at
+    the submit boundary (f32-exact, like ``ServeEngine.submit``'s
+    quantization), which is what keeps host/device/fused bit-identical.
+    Returns an f32-exact Python float."""
+    import numpy as np
+
+    return float(np.float32(
+        np.float32(priority) + np.float32(rate) * np.float32(push_step)))
+
+
+def slack_margin(slack: float, *, scale: float, floor: float,
+                 cap: float) -> float:
+    """Host-side slack→margin map (DESIGN.md §13), op-for-op the f32
+    computation :func:`slack_margin_traced` traces:
+    ``clip(cap − scale·slack, floor, cap)`` in float32. Low slack (deadline
+    pressure) ⇒ margin near ``cap`` (hard to evict); abundant or infinite
+    slack (no deadline) ⇒ ``floor`` (cheap to evict). ``scale`` must be > 0
+    (0·inf is NaN for the no-deadline ``slack=inf`` case). ``slack`` is in
+    engine steps: ``deadline − clock − (budget − emitted)``."""
+    import numpy as np
+
+    m = np.float32(cap) - np.float32(scale) * np.float32(slack)
+    m = np.minimum(np.float32(cap), np.maximum(np.float32(floor), m))
+    return float(m)
+
+
+def slack_margin_traced(slack: jnp.ndarray, *, scale: float, floor: float,
+                        cap: float) -> jnp.ndarray:
+    """Traced twin of :func:`slack_margin` (same f32 op order — subtraction,
+    multiply, then min/max clip — so host and fused margins agree bitwise;
+    pinned by tests/test_slo.py). ``slack`` f32[...]; returns f32 margins."""
+    m = jnp.float32(cap) - jnp.float32(scale) * slack.astype(jnp.float32)
+    return jnp.minimum(jnp.float32(cap), jnp.maximum(jnp.float32(floor), m))
+
+
 def preempt_plan(
     state: PoolState,
     slot_prio: jnp.ndarray,    # f32[S] priority of the running request
@@ -660,16 +705,27 @@ def preempt_plan(
     places: jnp.ndarray,       # i32[S] pop place of decode slot s
     *,
     margin: float,
+    margins: Optional[jnp.ndarray] = None,       # f32[S] per-slot margin
+    restage_cost: Optional[jnp.ndarray] = None,  # i32[S] victim tie-break
 ) -> Tuple[PoolState, jnp.ndarray, jnp.ndarray]:
-    """ONE preemption round's traced decision (DESIGN.md §11): the victim is
-    the *worst* running decode slot — lexicographic max of (priority, uid)
+    """ONE preemption round's traced decision (DESIGN.md §11/§13): the victim
+    is the *worst* running decode slot — lexicographic max of (priority, uid)
     over ``eligible`` slots, the exact dual of the pop order's (priority,
     uid) min, so among equal-priority victims the latest-pushed loses — and
     the challenger is the queue's visible front for the victim's pop place
     (:func:`stream_peek`; spy refs persist whether or not the round fires,
     matching the host peek). The round *fires* iff the front exists and
-    beats the victim by ``margin``: ``f32(front_prio + margin) <
+    beats the victim by the margin: ``f32(front_prio + margin) <
     victim_prio`` (host mirror: :func:`preempt_beats`).
+
+    ``restage_cost`` (§13 victim packing) inserts a tie-break between
+    priority and uid: among equal-worst-priority candidates, prefer the
+    victim whose staged KV is cheapest to restage — lexicographic max of
+    (priority, −cost, uid). The PR-5 staging-row indirection makes the cost
+    observable: the decode position ``pos[s]`` IS the live KV extent the
+    fire branch copies back. ``margins`` (§13 deadline margins) replaces the
+    static ``margin`` with a per-slot f32 value — the fire test reads the
+    victim's entry, so low-slack victims are protected by a larger margin.
 
     Peek-only: committing the plan (staging write-back, re-push through
     :func:`push`, the challenger :func:`stream_pop`) is the caller's —
@@ -680,6 +736,10 @@ def preempt_plan(
     has = jnp.any(eligible)
     worst = jnp.max(jnp.where(eligible, slot_prio, -INF))
     cand = eligible & (slot_prio == worst)
+    if restage_cost is not None:
+        imax = jnp.iinfo(jnp.int32).max
+        cheapest = jnp.min(jnp.where(cand, restage_cost, imax))
+        cand = cand & (restage_cost == cheapest)
     victim = jnp.argmax(jnp.where(cand, slot_uid, -1)).astype(jnp.int32)
 
     def do_peek(s):
@@ -689,7 +749,8 @@ def preempt_plan(
         return s, jnp.int32(0), jnp.float32(INF), jnp.zeros((), bool)
 
     state, _cslot, cprio, cvalid = jax.lax.cond(has, do_peek, skip, state)
-    fire = has & cvalid & (cprio + jnp.float32(margin) < slot_prio[victim])
+    m_v = jnp.float32(margin) if margins is None else margins[victim]
+    fire = has & cvalid & (cprio + m_v < slot_prio[victim])
     return state, victim, fire
 
 

@@ -233,6 +233,7 @@ def fused_carry_shardings(mesh: Mesh, carry):
         caches=jax.tree.map(cache_spec, carry.caches),
         cur_tok=rep, pos=rep, slot_req=rep, out_len=rep, budget=rep,
         slot_prio=rep, slot_uid=rep, slot_creator=rep,
+        slot_deadline=rep, clock=rep,
         staging=st_sh, staged_caches=sc_sh,
         # ping-pong arrival plans (§12): tiny [2, P, C] bookkeeping the
         # boundary fold reads in full — replicate, like the buffers

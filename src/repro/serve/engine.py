@@ -113,7 +113,8 @@ class _PlanPacker:
                 self._cv.notify_all()
             try:
                 pool_slot, uid = self._loop.submit_planned(
-                    frontend, qprio, req, req.tokens, req.max_new)
+                    frontend, qprio, req, req.tokens, req.max_new,
+                    deadline=getattr(req, "deadline", None))
                 self._book.publish_wait(frontend, pool_slot, qprio, uid)
             except BaseException as e:  # noqa: BLE001 - relayed to engine
                 with self._cv:
@@ -157,6 +158,8 @@ class Request:
     admitted_at: int = -1
     frontend: int = -1           # submitting place (set by ServeEngine.submit)
     preemptions: int = 0         # times evicted from a decode slot (§11)
+    slo_steps: Optional[int] = None  # relative deadline in engine steps (§13)
+    deadline: Optional[int] = None   # absolute deadline step (set at submit)
 
 
 class ServeEngine:
@@ -204,6 +207,7 @@ class ServeEngine:
         preempt_margin: float = 0.0,
         staging_rows: Optional[int] = None,
         packer: str = "thread",
+        slo=None,
     ):
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
@@ -215,6 +219,10 @@ class ServeEngine:
             raise ValueError(f"unknown packer mode: {packer!r}")
         self.preemption = preemption
         self.preempt_margin = float(preempt_margin)
+        # §13 SLO policy (serve/slo.py): priority aging at the submit
+        # boundary, slack-derived preemption margins, restage-cost victim
+        # packing — identical f32 math on every plane
+        self.slo = slo
         # step= subsumes admission=: "host"/"device" are the eager per-step
         # oracles, "fused" the single-dispatch loop (DESIGN.md §10),
         # "continuous" the fused loop with double-buffered arrival plans
@@ -291,6 +299,7 @@ class ServeEngine:
                 prefill_fn=prefill_fn, mesh=mesh,
                 preemption=preemption, margin=self.preempt_margin,
                 staging_rows=staging_rows, continuous=step == "continuous",
+                slo=slo,
             )
             self.queue = self._fused       # queue-like: __len__/flush/pending
             # cache ownership moves into the fused carry (donated each
@@ -331,8 +340,17 @@ class ServeEngine:
         stores f32, so comparing full-precision host floats against it would
         let f64-distinct/f32-equal priorities order differently — quantizing
         at the boundary keeps the two planes bit-identical for arbitrary
-        float inputs (e.g. epoch-seconds deadlines)."""
+        float inputs (e.g. epoch-seconds deadlines).
+
+        Under ``slo=`` (§13) the boundary also applies priority aging — the
+        queue key becomes ``kpriority.aged_key(qprio, clock, aging_rate)``,
+        computed HERE on the engine thread (not in the async packer) so the
+        key never depends on packer timing — and stamps the absolute
+        ``req.deadline`` from ``req.slo_steps`` / ``slo.default_slack``."""
         qprio = float(np.float32(req.priority))
+        if self.slo is not None:
+            qprio = self.slo.age(qprio, self.clock)
+            req.deadline = self.slo.deadline_for(req.slo_steps, self.clock)
         req.frontend = frontend
         req._qprio = qprio
         if self.step_mode == "continuous":
@@ -340,14 +358,16 @@ class ServeEngine:
                 self._packer.submit(frontend, qprio, req)
             else:                              # packer="sync": pack inline
                 pool_slot, uid = self._fused.submit_planned(
-                    frontend, qprio, req, req.tokens, req.max_new)
+                    frontend, qprio, req, req.tokens, req.max_new,
+                    deadline=req.deadline)
                 if not self._book.publish(frontend, pool_slot, qprio, uid):
                     raise RuntimeError(
                         "arrival plan full (buffer_cap rows per frontend "
                         "and no async packer to backpressure); run a chunk "
                         "or raise buffer_cap")
         elif self._fused is not None:
-            self._fused.submit(frontend, qprio, req, req.tokens, req.max_new)
+            self._fused.submit(frontend, qprio, req, req.tokens, req.max_new,
+                               deadline=req.deadline)
         else:
             self._push_seq += 1
             req._uid = self._push_seq
@@ -441,6 +461,16 @@ class ServeEngine:
                 return
             self._seat(slot, got[1])
 
+    def _victim_slack(self, req: Request) -> float:
+        """Slack (steps) of a running request at the preempt point (§13):
+        ``deadline − clock − remaining budget``; +inf when best-effort.
+        Matches the fused in-trace ``slot_deadline − (clock + budget −
+        out_len)`` — integer math, so the single f32 cast in
+        ``slack_margin`` is exact on both planes."""
+        if req.deadline is None:
+            return float("inf")
+        return req.deadline - self.clock - (req.max_new - len(req.out))
+
     def _preempt(self):
         """§11 preemption rounds, after the admission fill: while the
         queue's visible front beats the worst running slot — lexicographic
@@ -451,20 +481,36 @@ class ServeEngine:
         fresh uid, and pop the challenger into the seat. Slots admitted
         this step are protected (one admission per slot per step), so the
         loop is bounded by ``slots`` rounds — the exact host mirror of the
-        fused in-trace preempt phase (`kpriority.preempt_plan`)."""
+        fused in-trace preempt phase (`kpriority.preempt_plan`).
+
+        Under ``slo=`` (§13) two refinements, mirrored bit-for-bit by the
+        fused plane: ``victim="cheapest"`` breaks equal-priority victim
+        ties toward the smallest decode position (max of (priority, −pos,
+        uid) — pos IS the restage copy cost), and ``margin_scale > 0``
+        replaces the static margin with the victim's slack-derived one."""
         from repro.core.kpriority import preempt_beats
 
+        slo = self.slo
+        cheapest = slo is not None and slo.victim == "cheapest"
         for _ in range(self.slots):
             elig = [s for s in range(self.slots)
                     if self.active[s] is not None and s not in self._filled]
             if not elig:
                 return
-            v = max(elig, key=lambda s: (self.active[s]._qprio,
-                                         self.active[s]._uid))
+            if cheapest:
+                v = max(elig, key=lambda s: (self.active[s]._qprio,
+                                             -int(self.pos[s]),
+                                             self.active[s]._uid))
+            else:
+                v = max(elig, key=lambda s: (self.active[s]._qprio,
+                                             self.active[s]._uid))
+            margin = self.preempt_margin
+            if slo is not None and slo.slack_margins:
+                margin = slo.margin_for(self._victim_slack(self.active[v]))
             place = v % self.frontends
             top = self.queue.peek(place)
             if top is None or not preempt_beats(
-                    top, self.preempt_margin, self.active[v]._qprio):
+                    top, margin, self.active[v]._qprio):
                 return
             victim = self.active[v]
             col = jax.tree.map(lambda full: full[:, v:v + 1], self.caches)

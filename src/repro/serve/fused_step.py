@@ -72,6 +72,7 @@ class Staging(NamedTuple):
     pos: jnp.ndarray      # i32[R]  decode position to resume at
     out_len: jnp.ndarray  # i32[R]  tokens already emitted (1 for fresh)
     budget: jnp.ndarray   # i32[R]  max_new token budget
+    deadline: jnp.ndarray  # f32[R] absolute deadline step; +inf best-effort
     row: jnp.ndarray      # i32[capacity]  pool slot -> staging row
 
 
@@ -93,6 +94,8 @@ class FusedCarry(NamedTuple):
     slot_prio: jnp.ndarray     # f32[S] priority of the active request
     slot_uid: jnp.ndarray      # i32[S] pool seq of its latest push
     slot_creator: jnp.ndarray  # i32[S] its submitting frontend
+    slot_deadline: jnp.ndarray  # f32[S] absolute deadline step; +inf none
+    clock: jnp.ndarray    # i32[] engine step counter (device mirror, §13)
     staging: Staging      # resume staging + pool-slot indirection
     staged_caches: Any    # staged KV; every leaf [lead, staging_rows, ...]
     plan: AdmissionBuffer  # ping-pong arrival plans; leaves [2, P, C]/[2, P]
@@ -146,7 +149,10 @@ class _Arrival(NamedTuple):
 def build_chunk_fn(decode_fn: Callable, *, k: int, frontends: int,
                    slots: int, max_len: int, n: int,
                    preempt: bool = False, margin: float = 0.0,
-                   rounds: int = 0, continuous: bool = False):
+                   rounds: int = 0, continuous: bool = False,
+                   slo_margin: bool = False, margin_scale: float = 0.0,
+                   margin_floor: float = 0.0, margin_cap: float = 0.0,
+                   victim_cost: bool = False):
     """Build THE fused program: n steps of fold → ``stream_pop_fill`` →
     splice → [preempt ×``rounds``] → decode → complete as one jitted
     ``lax.scan`` over per-step AdmissionBuffer rows — one dispatch per chunk
@@ -171,18 +177,24 @@ def build_chunk_fn(decode_fn: Callable, *, k: int, frontends: int,
       arrivals scheduled at the chunk's first step.
     """
     key = ("chunk_fn", decode_fn, k, frontends, slots, max_len, n,
-           preempt, margin, rounds, continuous)
+           preempt, margin, rounds, continuous,
+           slo_margin, margin_scale, margin_floor, margin_cap, victim_cost)
     return streaming.shared_jit(
         key,
         lambda: _build_chunk_impl(
             decode_fn, k=k, frontends=frontends, slots=slots,
             max_len=max_len, n=n, preempt=preempt, margin=margin,
-            rounds=rounds, continuous=continuous))
+            rounds=rounds, continuous=continuous, slo_margin=slo_margin,
+            margin_scale=margin_scale, margin_floor=margin_floor,
+            margin_cap=margin_cap, victim_cost=victim_cost))
 
 
 def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
                       slots: int, max_len: int, n: int, preempt: bool,
-                      margin: float, rounds: int, continuous: bool):
+                      margin: float, rounds: int, continuous: bool,
+                      slo_margin: bool = False, margin_scale: float = 0.0,
+                      margin_floor: float = 0.0, margin_cap: float = 0.0,
+                      victim_cost: bool = False):
     places_vec = jnp.arange(slots, dtype=jnp.int32) % frontends
     n_rounds = rounds if (preempt and rounds > 0) else 0
 
@@ -197,15 +209,29 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
 
     def preempt_round(st, _):
         (pool, caches, staging, staged_caches, cur_tok, pos, out_len,
-         budget, slot_req, slot_prio, slot_uid, slot_creator, protected) = st
+         budget, slot_req, slot_prio, slot_uid, slot_creator, slot_deadline,
+         clock, protected) = st
         eligible = (slot_req >= 0) & ~protected
+        if slo_margin:
+            # per-slot deadline-derived margins (§13): slack in steps at
+            # this round — deadline − clock − remaining budget — f32-exact
+            # (ints ≤ 2^24), identical op order to the host mirror
+            slack = slot_deadline - (clock + budget - out_len).astype(
+                jnp.float32)
+            margins = kp.slack_margin_traced(
+                slack, scale=margin_scale, floor=margin_floor,
+                cap=margin_cap)
+        else:
+            margins = None
         pool, victim, fire = kp.preempt_plan(
-            pool, slot_prio, slot_uid, eligible, places_vec, margin=margin)
+            pool, slot_prio, slot_uid, eligible, places_vec, margin=margin,
+            margins=margins,
+            restage_cost=pos if victim_cost else None)
 
         def fire_branch(op):
             (pool, caches, staging, staged_caches, cur_tok, pos, out_len,
              budget, slot_req, slot_prio, slot_uid, slot_creator,
-             protected) = op
+             slot_deadline, clock, protected) = op
             m = pool.prio.shape[0]
             vps = slot_req[victim]
             vrow = staging.row[vps]
@@ -215,6 +241,8 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
                 pos=staging.pos.at[vrow].set(pos[victim]),
                 out_len=staging.out_len.at[vrow].set(out_len[victim]),
                 budget=staging.budget.at[vrow].set(budget[victim]),
+                deadline=staging.deadline.at[vrow].set(
+                    slot_deadline[victim]),
             )
             staged_caches = jax.tree.map(
                 lambda stg, full: stg.at[:, vrow].set(
@@ -244,10 +272,12 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
             slot_prio = slot_prio.at[victim].set(cprio)
             slot_uid = slot_uid.at[victim].set(pool.seq[cps])
             slot_creator = slot_creator.at[victim].set(pool.creator[cps])
+            slot_deadline = slot_deadline.at[victim].set(
+                staging.deadline[crow])
             protected = protected.at[victim].set(True)
             new = (pool, caches, staging, staged_caches, cur_tok, pos,
                    out_len, budget, slot_req, slot_prio, slot_uid,
-                   slot_creator, protected)
+                   slot_creator, slot_deadline, clock, protected)
             return new, (victim, vps, cps)
 
         def skip_branch(op):
@@ -255,7 +285,7 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
 
         st2 = (pool, caches, staging, staged_caches, cur_tok, pos, out_len,
                budget, slot_req, slot_prio, slot_uid, slot_creator,
-               protected)
+               slot_deadline, clock, protected)
         return jax.lax.cond(fire, fire_branch, skip_branch, st2)
 
     def run(params, carry, bufs):
@@ -268,6 +298,9 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
             pool, res = kp.stream_pop_fill(pool, c.slot_req < 0, places_vec)
             got = res.valid                              # bool[S]
             live = jnp.any(got) | jnp.any(c.slot_req >= 0)
+            # the engine increments its clock at the top of EVERY step
+            # (dead-masked ones included) — the §13 slack math reads it
+            clock = c.clock + 1
 
             def live_step(c):
                 ps = jnp.where(got, res.slot, 0)         # i32[S]
@@ -281,18 +314,20 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
                 slot_uid = jnp.where(got, pool.seq[ps], c.slot_uid)
                 slot_creator = jnp.where(got, pool.creator[ps],
                                          c.slot_creator)
+                slot_deadline = jnp.where(got, c.staging.deadline[rows],
+                                          c.slot_deadline)
                 caches = splice_in(c.caches, c.staged_caches, rows, got)
                 staging, staged_caches = c.staging, c.staged_caches
 
                 if n_rounds > 0:
                     st = (pool, caches, staging, staged_caches, cur_tok,
                           pos, out_len, budget, slot_req, slot_prio,
-                          slot_uid, slot_creator, got)
+                          slot_uid, slot_creator, slot_deadline, clock, got)
                     st, (pre_slot, pre_vps, pre_ps) = jax.lax.scan(
                         preempt_round, st, None, length=n_rounds)
                     (pool_out, caches, staging, staged_caches, cur_tok,
                      pos, out_len, budget, slot_req, slot_prio, slot_uid,
-                     slot_creator, _protected) = st
+                     slot_creator, slot_deadline, _clock, _protected) = st
                 else:
                     pool_out = pool
                     empty = jnp.zeros((0,), jnp.int32)
@@ -310,7 +345,8 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
                     pool=pool_out, caches=caches, cur_tok=cur_tok, pos=pos,
                     slot_req=slot_req, out_len=out_len, budget=budget,
                     slot_prio=slot_prio, slot_uid=slot_uid,
-                    slot_creator=slot_creator, staging=staging,
+                    slot_creator=slot_creator, slot_deadline=slot_deadline,
+                    clock=clock, staging=staging,
                     staged_caches=staged_caches)
                 ev = StepEvents(admit=jnp.where(got, res.slot, -1),
                                 token=nxt, active=active, done=done,
@@ -328,7 +364,7 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
                     done=jnp.zeros((slots,), bool),
                     live=jnp.bool_(False),
                     pre_slot=rfill, pre_vps=rfill, pre_ps=rfill)
-                return c._replace(pool=pool), ev
+                return c._replace(pool=pool, clock=clock), ev
 
             return jax.lax.cond(live, live_step, dead_step, c)
 
@@ -358,12 +394,13 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
 
 
 def _stage_update_impl(staging, staged_caches, ps, row, tok, pos, out_len,
-                       budget, cache1):
+                       budget, deadline, cache1):
     staging = Staging(
         tok=staging.tok.at[row].set(tok),
         pos=staging.pos.at[row].set(pos),
         out_len=staging.out_len.at[row].set(out_len),
         budget=staging.budget.at[row].set(budget),
+        deadline=staging.deadline.at[row].set(deadline),
         row=staging.row.at[ps].set(row),
     )
     staged_caches = jax.tree.map(
@@ -385,12 +422,13 @@ def _stage_batch_fn(r: int):
     identical values are deterministic, so padding is free."""
 
     def f(staging, staged_caches, ps, row, tok, pos, out_len, budget,
-          *cache1s):
+          deadline, *cache1s):
         staging = Staging(
             tok=staging.tok.at[row].set(tok),
             pos=staging.pos.at[row].set(pos),
             out_len=staging.out_len.at[row].set(out_len),
             budget=staging.budget.at[row].set(budget),
+            deadline=staging.deadline.at[row].set(deadline),
             row=staging.row.at[ps].set(row),
         )
         batch = jax.tree.map(
@@ -482,6 +520,7 @@ class FusedServeLoop:
         margin: float = 0.0,
         staging_rows: Optional[int] = None,
         continuous: bool = False,
+        slo=None,
     ):
         if preemption not in ("off", "margin"):
             raise ValueError(f"unknown preemption mode: {preemption!r}")
@@ -496,6 +535,12 @@ class FusedServeLoop:
         self.mesh = mesh
         self.preemption = preemption
         self.margin = float(margin)
+        # §13 SLO policy: slack-derived per-slot margins and/or the
+        # cheapest-restage victim tie-break inside the preempt rounds
+        # (aging happens at the SUBMIT boundary — callers feed aged keys)
+        self.slo = slo
+        self._slo_margin = slo is not None and slo.slack_margins
+        self._victim_cost = slo is not None and slo.victim == "cheapest"
         self.rounds = slots if preemption == "margin" else 0
         self.staging_rows = capacity if staging_rows is None else staging_rows
         self.continuous = continuous
@@ -508,6 +553,7 @@ class FusedServeLoop:
             pos=jnp.zeros((r,), jnp.int32),
             out_len=jnp.ones((r,), jnp.int32),
             budget=jnp.ones((r,), jnp.int32),
+            deadline=jnp.full((r,), jnp.inf, jnp.float32),
             row=jnp.zeros((capacity,), jnp.int32),
         )
         staged_caches = jax.tree.map(
@@ -525,6 +571,8 @@ class FusedServeLoop:
             slot_prio=jnp.full((slots,), jnp.inf, jnp.float32),
             slot_uid=jnp.zeros((slots,), jnp.int32),
             slot_creator=jnp.zeros((slots,), jnp.int32),
+            slot_deadline=jnp.full((slots,), jnp.inf, jnp.float32),
+            clock=jnp.zeros((), jnp.int32),
             staging=staging,
             staged_caches=staged_caches,
             plan=AdmissionBuffer(
@@ -604,7 +652,8 @@ class FusedServeLoop:
         heapq.heappush(self._free_rows, self._row_of.pop(pool_slot))
 
     def submit(self, place: int, priority: float, item: Any, tokens,
-               max_new: int, *, at_step: Optional[int] = None) -> int:
+               max_new: int, *, at_step: Optional[int] = None,
+               deadline: Optional[int] = None) -> int:
         """Stream one request in: run its prefill (one dispatch, submit-time
         — deterministic in the prompt, so admission-time and submit-time
         prefill produce identical tokens), stage the result device-side by
@@ -612,8 +661,10 @@ class FusedServeLoop:
         ``at_step`` (default: the next unexecuted step, matching the eager
         engine's fold-before-admit of everything submitted before the step).
         Feed f32-exact priorities when comparing against a host oracle
-        (``ServeEngine.submit`` quantizes at the boundary). Returns the
-        reserved pool slot."""
+        (``ServeEngine.submit`` quantizes at the boundary). ``deadline`` is
+        the request's absolute deadline step (§13; None = best-effort) —
+        it rides the staging row into the decode slot, where the slack→
+        margin preempt rounds read it. Returns the reserved pool slot."""
         step = self.clock + 1 if at_step is None else at_step
         if step <= self.clock:
             raise ValueError(
@@ -626,11 +677,12 @@ class FusedServeLoop:
         toks = jnp.asarray(np.asarray(tokens)[None, :], jnp.int32)
         logits, cache1 = self._prefill(self.params, toks)
         tok0 = int(jnp.argmax(logits[0]))
+        dl = np.inf if deadline is None else float(deadline)
         staging, staged_caches = _stage_update(
             self.carry.staging, self.carry.staged_caches,
             jnp.int32(pool_slot), jnp.int32(row), jnp.int32(tok0),
             jnp.int32(len(np.asarray(tokens))), jnp.int32(1),
-            jnp.int32(max_new), cache1,
+            jnp.int32(max_new), jnp.float32(dl), cache1,
         )
         self.carry = self.carry._replace(
             staging=staging, staged_caches=staged_caches)
@@ -643,7 +695,8 @@ class FusedServeLoop:
 
     # ------------------------------------------- continuous submission path
     def submit_planned(self, place: int, priority: float, item: Any,
-                       tokens, max_new: int) -> Tuple[int, int]:
+                       tokens, max_new: int,
+                       deadline: Optional[int] = None) -> Tuple[int, int]:
         """Packer half of a continuous submission (DESIGN.md §12): reserve
         a pool slot + staging row, run the prefill (one dispatch), and
         record the resume state host-side — WITHOUT touching the carry, so
@@ -664,9 +717,11 @@ class FusedServeLoop:
             self._arrival += 1
         logits, cache1 = self._prefill(self.params, toks)
         tok0 = int(jnp.argmax(logits[0]))
+        dl = np.inf if deadline is None else float(deadline)
         with self._lock:
             self._tok0[pool_slot] = tok0
-            self._staged_meta[pool_slot] = (row, tok0, plen, max_new, cache1)
+            self._staged_meta[pool_slot] = (row, tok0, plen, max_new, dl,
+                                            cache1)
             self._count()                      # prefill only — staging is
         return pool_slot, uid                  # batched per plan
 
@@ -696,10 +751,12 @@ class FusedServeLoop:
         pos_a = jnp.asarray(np.asarray([metas[i][2] for i in idx], np.int32))
         out_a = jnp.ones((r,), jnp.int32)
         bud_a = jnp.asarray(np.asarray([metas[i][3] for i in idx], np.int32))
-        cache1s = [metas[i][4] for i in idx]
+        dl_a = jnp.asarray(np.asarray([metas[i][4] for i in idx],
+                                      np.float32))
+        cache1s = [metas[i][5] for i in idx]
         staging, staged_caches = self._stage_batch(r)(
             self.carry.staging, self.carry.staged_caches,
-            ps_a, row_a, tok_a, pos_a, out_a, bud_a, *cache1s)
+            ps_a, row_a, tok_a, pos_a, out_a, bud_a, dl_a, *cache1s)
         self.carry = self.carry._replace(
             staging=staging, staged_caches=staged_caches)
         self._count()
@@ -781,11 +838,17 @@ class FusedServeLoop:
     def _chunk_fn(self, n: int):
         h = self._chunk_holders.get(n)
         if h is None:
+            slo = self.slo
             h = build_chunk_fn(
                 self.decode_fn, k=self.k, frontends=self.frontends,
                 slots=self.slots, max_len=self.max_len, n=n,
                 preempt=self.preemption == "margin", margin=self.margin,
-                rounds=self.rounds, continuous=self.continuous)
+                rounds=self.rounds, continuous=self.continuous,
+                slo_margin=self._slo_margin,
+                margin_scale=slo.margin_scale if self._slo_margin else 0.0,
+                margin_floor=slo.margin_floor if self._slo_margin else 0.0,
+                margin_cap=slo.margin_cap if self._slo_margin else 0.0,
+                victim_cost=self._victim_cost)
             self._chunk_holders[n] = h
         return h
 
@@ -985,7 +1048,7 @@ def toy_prefill_fn(params, toks):
 
 def toy_loop(*, slots, frontends, k, max_len=10_000, capacity=128,
              buffer_cap=32, mesh=None, preemption="off", margin=0.0,
-             staging_rows=None, continuous=False) -> FusedServeLoop:
+             staging_rows=None, continuous=False, slo=None) -> FusedServeLoop:
     """A :class:`FusedServeLoop` over the toy model, with the engine's cache
     convention (slot dim = axis 1 of every leaf) — splice/staging machinery
     is exercised end-to-end, compiles are shared across LIVE instances (the
@@ -997,7 +1060,7 @@ def toy_loop(*, slots, frontends, k, max_len=10_000, capacity=128,
         capacity=capacity, buffer_cap=buffer_cap, params=None,
         caches=caches, decode_fn=toy_decode_fn, prefill_fn=toy_prefill_fn,
         mesh=mesh, preemption=preemption, margin=margin,
-        staging_rows=staging_rows, continuous=continuous)
+        staging_rows=staging_rows, continuous=continuous, slo=slo)
 
 
 # ---------------------------------------------------------------------------

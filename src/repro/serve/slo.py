@@ -1,0 +1,102 @@
+"""SLO-aware scheduling policy for the serving stack (DESIGN.md §13).
+
+PR 5's preemption plane takes a static ``preempt_margin`` — under sustained
+mixed-priority load nothing prevents starvation or deadline misses. This
+module packages the three §13 mechanisms into one config consumed by
+``ServeEngine(slo=...)`` and ``FusedServeLoop(slo=...)``:
+
+  * **deadline-derived margins** — per-request deadlines (absolute engine
+    steps) ride submit → staging → decode slot; each preemption round
+    derives the victim's margin from its *slack*,
+    ``margin = clip(cap − scale·slack, floor, cap)`` with
+    ``slack = deadline − clock − (budget − emitted)`` — a victim about to
+    miss its deadline is protected by a margin near ``cap``, a best-effort
+    victim (no deadline ⇒ slack = ∞) is evictable at ``floor``,
+  * **priority aging** — ``aging_rate > 0`` rewrites the queue key at the
+    submit boundary to :func:`repro.core.kpriority.aged_key`: a push-time
+    f32 transform that orders identically to live linear aging, so
+    low-priority requests cannot wait more than ~priority-span/rate steps
+    behind a sustained better-priority stream (pinned by tests/test_slo.py),
+  * **restage-cost victim packing** — ``victim="cheapest"`` breaks
+    equal-priority victim ties toward the slot whose staged KV is cheapest
+    to write back (smallest decode position — the PR-5 staging-row
+    indirection makes the live KV extent the literal copy cost), instead of
+    the plain latest-uid rule.
+
+Every mechanism is computed with the same f32 op order on the host oracle,
+the eager device plane, and the fused/continuous plane, so the existing
+differential harnesses keep all three bit-identical with SLO enabled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core import kpriority as kp
+
+VICTIM_MODES = ("uid", "cheapest")
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOConfig:
+    """Scheduling-policy knobs for ``ServeEngine(slo=...)`` (DESIGN.md §13).
+
+    ``aging_rate``: priority units gained per queue-wait step (0 disables
+    aging). ``margin_scale``/``margin_floor``/``margin_cap``: the slack→
+    margin map (``margin_scale`` = 0 keeps the engine's static
+    ``preempt_margin``). ``default_slack``: relative deadline (steps) for
+    requests that don't set one (None = best-effort, slack = ∞).
+    ``victim``: preemption victim tie-break — ``"uid"`` is the PR-5
+    (priority, uid) order, ``"cheapest"`` prefers the smallest restage cost
+    among equal-priority victims. Frozen/hashable: safe as part of a jit
+    cache key."""
+
+    aging_rate: float = 0.0
+    margin_scale: float = 0.0
+    margin_floor: float = 0.0
+    margin_cap: float = 0.0
+    default_slack: Optional[int] = None
+    victim: str = "uid"
+
+    def __post_init__(self):
+        if self.victim not in VICTIM_MODES:
+            raise ValueError(f"unknown victim mode: {self.victim!r}; "
+                             f"expected one of {VICTIM_MODES}")
+        if self.aging_rate < 0:
+            raise ValueError("aging_rate must be >= 0")
+        if self.margin_scale < 0:
+            raise ValueError("margin_scale must be >= 0")
+        if self.margin_scale > 0 and not (
+                0 <= self.margin_floor <= self.margin_cap):
+            raise ValueError(
+                "need 0 <= margin_floor <= margin_cap when margin_scale > 0")
+        if self.default_slack is not None and self.default_slack <= 0:
+            raise ValueError("default_slack must be a positive step count")
+
+    # ------------------------------------------------------------- derived
+    @property
+    def ages(self) -> bool:
+        return self.aging_rate > 0
+
+    @property
+    def slack_margins(self) -> bool:
+        return self.margin_scale > 0
+
+    def age(self, qprio: float, now: int) -> float:
+        """The f32 push-time aging key (identity when aging is off)."""
+        if not self.ages:
+            return qprio
+        return kp.aged_key(qprio, now, self.aging_rate)
+
+    def margin_for(self, slack: float) -> float:
+        """Host-side slack→margin (f32-exact; the fused program computes
+        the same value in-trace via ``kp.slack_margin_traced``)."""
+        return kp.slack_margin(slack, scale=self.margin_scale,
+                               floor=self.margin_floor, cap=self.margin_cap)
+
+    def deadline_for(self, slo_steps: Optional[int], now: int) -> Optional[int]:
+        """Absolute deadline step for a request submitted at ``now`` with a
+        relative budget of ``slo_steps`` (falls back to ``default_slack``;
+        None = best-effort)."""
+        rel = slo_steps if slo_steps is not None else self.default_slack
+        return None if rel is None else now + int(rel)

@@ -1,0 +1,201 @@
+"""The declarative bench-gate runner (benchmarks/gates.py) and the traffic
+generator (benchmarks/traffic.py):
+
+  * every assertion gate passes on a known-good synthetic artifact and
+    fails on each known-regressed variant (one per asserted inequality),
+  * missing and malformed artifacts fail LOUDLY with the gate's name and
+    meaning — never a bare KeyError/FileNotFoundError,
+  * well-formedness gates enforce per-section minimum row counts
+    (roofline's empty-cache [] is legal; an empty slo artifact is not),
+  * the trace-replay traffic generator is deterministic in its config and
+    validates burst/class references,
+  * ``python -m benchmarks.run --only <typo>`` exits nonzero listing the
+    valid section names (it used to silently run zero sections).
+"""
+import json
+import subprocess
+import sys
+
+import pytest
+
+from benchmarks import gates, traffic
+
+
+def _write(tmp_path, name, obj, raw=None):
+    p = tmp_path / name
+    p.write_text(json.dumps(obj) if raw is None else raw)
+    return p
+
+
+def _run_one(tmp_path, gate_name):
+    return gates.run(out_dir=str(tmp_path), only=gate_name)
+
+
+# ---------------------------------------------------------------- fixtures
+
+def good_fused_step():
+    return [{"plane": "device_eager", "dispatches_per_step": 4.0},
+            {"plane": "fused", "dispatches_per_step": 0.167}]
+
+
+def good_preemption():
+    return [{"plane": "off", "useful_work_frac": 0.54, "preemptions": 0},
+            {"plane": "margin", "useful_work_frac": 1.0, "preemptions": 8}]
+
+
+def good_continuous():
+    return [{"plane": "fused", "chunk": 8, "dispatches_per_step": 1.6,
+             "submit_to_admit_p99_ms": 30.0},
+            {"plane": "continuous", "chunk": 8, "dispatches_per_step": 1.0,
+             "submit_to_admit_p99_ms": 7.0}]
+
+
+def good_slo():
+    return [{"plane": "static", "deadline_miss_frac": 0.026,
+             "queue_wait_p99": 101, "max_wait_by_class": {"batch": 106}},
+            {"plane": "slo", "deadline_miss_frac": 0.006,
+             "queue_wait_p99": 50, "max_wait_by_class": {"batch": 54},
+             "aging_wait_bound": 80, "starved_class": "batch",
+             "oracle_identical": True}]
+
+
+CASES = [
+    ("fused_step:dispatches", "BENCH_fused_step.json", good_fused_step,
+     [lambda r: r[1].__setitem__("dispatches_per_step", 4.0)]),
+    ("preemption:useful_work", "BENCH_preemption.json", good_preemption,
+     [lambda r: r[1].__setitem__("useful_work_frac", 0.5)]),
+    ("continuous:handoff", "BENCH_continuous.json", good_continuous,
+     [lambda r: r[1].__setitem__("dispatches_per_step", 1.7),
+      lambda r: r[1].__setitem__("submit_to_admit_p99_ms", 46.0),
+      lambda r: r[1].__setitem__("chunk", 6)]),
+    ("slo:policy", "BENCH_slo.json", good_slo,
+     [lambda r: r[1].__setitem__("deadline_miss_frac", 0.03),
+      lambda r: r[1].__setitem__("queue_wait_p99", 101),
+      lambda r: r[1]["max_wait_by_class"].__setitem__("batch", 81),
+      lambda r: r[0]["max_wait_by_class"].__setitem__("batch", 80),
+      lambda r: r[1].__setitem__("oracle_identical", False)]),
+]
+
+
+@pytest.mark.parametrize("gate_name,artifact,good,_regs",
+                         CASES, ids=[c[0] for c in CASES])
+def test_gate_passes_on_known_good(tmp_path, gate_name, artifact, good,
+                                   _regs):
+    _write(tmp_path, artifact, good())
+    assert _run_one(tmp_path, gate_name) == 0
+
+
+@pytest.mark.parametrize("gate_name,artifact,good,regs",
+                         CASES, ids=[c[0] for c in CASES])
+def test_gate_fails_on_each_regression(tmp_path, gate_name, artifact, good,
+                                       regs):
+    for i, regress in enumerate(regs):
+        rows = good()
+        regress(rows)
+        _write(tmp_path, artifact, rows)
+        assert _run_one(tmp_path, gate_name) == 1, (gate_name, i)
+
+
+def test_missing_artifact_fails_loudly(tmp_path, capsys):
+    assert _run_one(tmp_path, "slo:policy") == 1
+    out = capsys.readouterr().out
+    assert "missing artifact" in out and "BENCH_slo.json" in out
+    assert "ISSUE 7" in out                   # the gate's meaning line
+
+
+def test_malformed_artifact_fails_loudly(tmp_path, capsys):
+    _write(tmp_path, "BENCH_slo.json", None, raw="{not json")
+    assert _run_one(tmp_path, "slo:policy") == 1
+    assert "malformed artifact" in capsys.readouterr().out
+
+
+def test_missing_key_is_named_not_keyerror(tmp_path, capsys):
+    rows = good_slo()
+    del rows[1]["aging_wait_bound"]
+    _write(tmp_path, "BENCH_slo.json", rows)
+    assert _run_one(tmp_path, "slo:policy") == 1
+    out = capsys.readouterr().out
+    assert "FAIL slo:policy" in out and "meaning:" in out
+
+
+def test_missing_plane_row_is_named(tmp_path, capsys):
+    _write(tmp_path, "BENCH_slo.json", [good_slo()[0]])
+    assert _run_one(tmp_path, "slo:policy") == 1
+    assert "no 'slo' plane row" in capsys.readouterr().out
+
+
+def test_wellformed_min_rows(tmp_path):
+    _write(tmp_path, "BENCH_roofline.json", [])
+    assert _run_one(tmp_path, "roofline:wellformed") == 0
+    _write(tmp_path, "BENCH_slo.json", [])
+    assert _run_one(tmp_path, "slo:wellformed") == 1
+    _write(tmp_path, "BENCH_slo.json", [["not", "a", "dict"]])
+    assert _run_one(tmp_path, "slo:wellformed") == 1
+
+
+def test_gates_cover_every_emitted_section():
+    """The wellformed table and the run.py sections dict must not drift."""
+    import re
+
+    with open("benchmarks/run.py") as f:
+        body = f.read()
+    emitted = set(re.findall(r'^        "([a-z0-9_]+)": ', body, re.M))
+    assert emitted == set(gates.SECTIONS), (
+        "benchmarks/run.py sections and gates.SECTIONS drifted")
+
+
+def test_typo_only_filter_fails(tmp_path, capsys):
+    assert gates.run(out_dir=str(tmp_path), only="zzz") == 1
+    assert "matched no gate" in capsys.readouterr().out
+
+
+# ------------------------------------------------------- traffic generator
+
+def test_traffic_generator_deterministic():
+    cfg = traffic.smoke_config()
+    a = traffic.generate(cfg)
+    b = traffic.generate(cfg)
+    assert a == b
+    c = traffic.generate(traffic.smoke_config(seed=cfg.seed + 1))
+    assert a != c
+    flat = [r for burst in a for r in burst]
+    assert flat, "smoke trace generated no arrivals"
+    assert [r.uid for r in flat] == list(range(len(flat)))
+    classes = {c.name for c in cfg.classes}
+    for r in flat:
+        assert r.cls in classes
+        assert 0 <= r.place < cfg.frontends
+        assert 1 <= r.step <= cfg.steps
+
+
+def test_traffic_config_validation():
+    cls = traffic.SLOClass(name="a", priority=0.0, weight=1.0, slo_steps=8)
+    with pytest.raises(ValueError, match="at least one"):
+        traffic.TrafficConfig(steps=10, frontends=1, rate=1.0, classes=())
+    with pytest.raises(ValueError, match="unknown class"):
+        traffic.TrafficConfig(
+            steps=10, frontends=1, rate=1.0, classes=(cls,),
+            bursts=(traffic.Burst(step=1, cls="b", count=2),))
+    with pytest.raises(ValueError, match="outside"):
+        traffic.TrafficConfig(
+            steps=10, frontends=1, rate=1.0, classes=(cls,),
+            bursts=(traffic.Burst(step=10, cls="a", count=2),))
+    with pytest.raises(ValueError, match="duplicate"):
+        traffic.TrafficConfig(steps=10, frontends=1, rate=1.0,
+                              classes=(cls, cls))
+
+
+# ------------------------------------------------------ run.py --only typo
+
+def test_run_only_typo_exits_nonzero():
+    """--only with zero matches must exit 2 and list the valid sections
+    (the silent-zero-sections CI hazard this PR fixes)."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", "sloo",
+         "--smoke"],
+        capture_output=True, text=True, env={"PYTHONPATH": "src",
+                                             "JAX_PLATFORMS": "cpu",
+                                             "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 2, (proc.stdout, proc.stderr)
+    assert "matched no section" in proc.stderr
+    assert "slo" in proc.stderr and "fused_step" in proc.stderr

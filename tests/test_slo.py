@@ -1,0 +1,262 @@
+"""SLO-driven scheduling (ISSUE 7 tentpole contract, DESIGN.md §13):
+
+  * ``kpriority.aged_key`` — the static push-time key orders EXACTLY like
+    live linear aging (the uniform −rate·now shift cancels in every
+    pairwise comparison), so aging needs no pop/peek changes and stays
+    bit-identical across planes by construction,
+  * ``kpriority.slack_margin`` (host np) == ``slack_margin_traced``
+    (device jnp) bitwise over a slack grid including ±∞, negatives, and
+    non-representable f32 values,
+  * toy-level differential: fused SLO plane (aging + slack margins +
+    cheapest-victim) == the host ``HybridKQueue`` oracle on randomized
+    deadline traces, for chunk 1 and 5,
+  * engine-level: ``ServeEngine(slo=...)`` admission order, victim order,
+    AND token streams identical across host / device / fused planes on the
+    real reduced model,
+  * anti-starvation: under an adversarial sustained stream of better-
+    priority pushes, an aged low-priority item pops within
+    ~priority-span/rate steps while the unaged queue starves it for the
+    stream's whole lifetime,
+  * ``SLOConfig`` validation and the ``HybridKQueue(aging_rate=...)``
+    push-boundary rewrite pin.
+"""
+import itertools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import kpriority as kp
+from repro.core.host_queue import HybridKQueue
+from repro.serve.slo import SLOConfig
+
+
+# ---------------------------------------------------------------------------
+# aged_key: static push-time transform == live linear aging
+# ---------------------------------------------------------------------------
+
+def test_aged_key_orders_like_live_aging():
+    """With f32-exact inputs (quarter-step priorities/rates, integer push
+    steps), the push-time key ``p + r·t`` compares exactly like the live
+    aged priority ``p − r·(T − t)`` at ANY observation step T."""
+    rate = 0.25
+    prios = [0.0, 0.5, 2.0, 7.75, 8.0]
+    steps = [0, 1, 7, 64, 1000]
+    entries = list(itertools.product(prios, steps))
+    for T in (1000, 5000):
+        for (p1, t1), (p2, t2) in itertools.combinations(entries, 2):
+            static = (kp.aged_key(p1, t1, rate) < kp.aged_key(p2, t2, rate))
+            live = (p1 - rate * (T - t1)) < (p2 - rate * (T - t2))
+            assert static == live, ((p1, t1), (p2, t2), T)
+
+
+def test_aged_key_monotone_and_f32_exact():
+    assert kp.aged_key(2.0, 10, 0.25) == pytest.approx(4.5)
+    # later push of the same priority never ranks better
+    assert kp.aged_key(2.0, 11, 0.25) > kp.aged_key(2.0, 10, 0.25)
+    # rate 0 is the identity (after f32 quantization)
+    assert kp.aged_key(0.1, 99, 0.0) == float(np.float32(0.1))
+    # the exact f32 op order ServeEngine.submit uses
+    assert kp.aged_key(0.1, 3, 0.3) == float(
+        np.float32(np.float32(0.1) + np.float32(0.3) * np.float32(3)))
+
+
+# ---------------------------------------------------------------------------
+# slack_margin: host np twin == traced jnp twin, bitwise
+# ---------------------------------------------------------------------------
+
+def test_slack_margin_host_equals_traced_bitwise():
+    import jax.numpy as jnp
+
+    slacks = [float("inf"), -float("inf"), -1e9, -17.0, -0.1, 0.0, 0.1,
+              1.0, 9.97, 10.0, 48.0, 1e9, 1 / 3, 2 ** 24 + 1.0]
+    for scale, floor, cap in [(0.25, 0.0, 2.5), (0.05, 0.5, 2.5),
+                              (1.0, 0.0, 0.0), (0.1, 1.0, 1.0)]:
+        for s in slacks:
+            host = np.float32(kp.slack_margin(
+                s, scale=scale, floor=floor, cap=cap))
+            dev = np.asarray(kp.slack_margin_traced(
+                jnp.float32(s), scale=scale, floor=floor, cap=cap))
+            assert host.tobytes() == dev.tobytes(), (s, scale, floor, cap)
+
+
+def test_slack_margin_endpoints():
+    # ∞ slack (best-effort victim) clips to the floor; deeply negative
+    # slack (already missed) clips to the cap
+    assert kp.slack_margin(float("inf"), scale=0.25, floor=0.5,
+                           cap=2.5) == 0.5
+    assert kp.slack_margin(-1e9, scale=0.25, floor=0.5, cap=2.5) == 2.5
+
+
+# ---------------------------------------------------------------------------
+# SLOConfig validation + derived helpers
+# ---------------------------------------------------------------------------
+
+def test_sloconfig_validation():
+    with pytest.raises(ValueError, match="victim"):
+        SLOConfig(victim="nope")
+    with pytest.raises(ValueError, match="aging_rate"):
+        SLOConfig(aging_rate=-0.1)
+    with pytest.raises(ValueError, match="margin_floor"):
+        SLOConfig(margin_scale=0.5, margin_floor=3.0, margin_cap=2.0)
+    with pytest.raises(ValueError, match="default_slack"):
+        SLOConfig(default_slack=0)
+    off = SLOConfig()
+    assert not off.ages and not off.slack_margins
+    assert off.age(1.5, 100) == 1.5
+    assert off.deadline_for(None, 7) is None
+    cfg = SLOConfig(aging_rate=0.2, margin_scale=0.25, margin_floor=0.5,
+                    margin_cap=2.5, default_slack=32)
+    assert cfg.ages and cfg.slack_margins
+    assert cfg.deadline_for(16, 4) == 20
+    assert cfg.deadline_for(None, 4) == 36      # default_slack fallback
+    assert cfg.age(2.0, 10) == kp.aged_key(2.0, 10, 0.2)
+
+
+def test_hybrid_queue_aging_rewrites_at_push_boundary():
+    """HybridKQueue(aging_rate=...) must key pushes by aged_key(prio, now)
+    — the host mirror of what ServeEngine.submit stamps for every plane."""
+    q = HybridKQueue(1, 2, spy="min_index", aging_rate=0.5)
+    q.push(0, 8.0, "old", now=0)       # key 8.0
+    q.push(0, 0.0, "new", now=20)      # key 10.0 — aged past the old push
+    q.push(0, 0.0, "newer", now=4)     # key 2.0
+    assert q.pop(0)[1] == "newer"
+    assert q.pop(0)[1] == "old"
+    assert q.pop(0)[1] == "new"
+    with pytest.raises(ValueError):
+        HybridKQueue(1, 2, aging_rate=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# anti-starvation bound (queue level, adversarial sustained stream)
+# ---------------------------------------------------------------------------
+
+def test_aging_bounds_starvation_under_sustained_load():
+    """One prio-8 item vs an endless prio-0 stream (one push + one pop per
+    step). Unaged: the item starves for the stream's entire lifetime.
+    Aged at ``rate``: it pops within span/rate + O(1) steps."""
+    span, rate, horizon = 8.0, 0.25, 200
+
+    def drive(aging_rate):
+        q = HybridKQueue(1, 1, spy="min_index",
+                         aging_rate=aging_rate)
+        q.push(0, span, "victim", now=0)
+        for t in range(1, horizon + 1):
+            q.push(0, 0.0, f"rt{t}", now=t)
+            got = q.pop(0)
+            if got is not None and got[1] == "victim":
+                return t
+        return None
+
+    assert drive(0.0) is None, "unaged queue should starve the victim"
+    waited = drive(rate)
+    bound = int(span / rate) + 2       # +O(1): the pop that drains it
+    assert waited is not None and waited <= bound, (waited, bound)
+
+
+# ---------------------------------------------------------------------------
+# toy-level differential: fused SLO plane == host oracle
+# ---------------------------------------------------------------------------
+
+def _gen_slo_trace(seed, steps, frontends, slo):
+    """Random bursts of (place, aged qprio, uid, max_new, plen, deadline):
+    mixed deadline tightness incl. best-effort, f32-collision priorities."""
+    grid = [0.0, 0.5, 2.0, 2.0 + 1e-12, 7.5, 8.0]
+    rng = np.random.default_rng(seed)
+    trace, uid = [], 0
+    for t in range(1, steps + 1):
+        burst = []
+        for _ in range(int(rng.integers(0, 3))):
+            base = float(np.float32(grid[int(rng.integers(len(grid)))]))
+            rel = [None, 6, 12, 24][int(rng.integers(4))]
+            burst.append((int(rng.integers(frontends)),
+                          slo.age(base, t - 1), uid,
+                          int(rng.integers(2, 7)),
+                          int(rng.integers(1, 4)),
+                          slo.deadline_for(rel, t - 1)))
+            uid += 1
+        trace.append(burst)
+    return trace, uid
+
+
+@pytest.mark.parametrize("seed", [6, 9])
+def test_toy_slo_differential_vs_host_oracle(seed):
+    from benchmarks.slo_bench import _slo_oracle_drive
+    from repro.serve.fused_step import toy_loop
+
+    slots, frontends, k, max_len, steps = 3, 2, 2, 64, 30
+    slo = SLOConfig(aging_rate=0.25, margin_scale=0.25, margin_floor=0.25,
+                    margin_cap=2.5, victim="cheapest")
+    trace, uid = _gen_slo_trace(seed, steps, frontends, slo)
+
+    ref = _slo_oracle_drive(
+        trace, slots=slots, frontends=frontends, k=k, max_len=max_len,
+        queue=HybridKQueue(frontends, k, spy="min_index"), slo=slo)
+    assert len(ref[1]) > 0, "no evictions fired; strengthen the trace"
+
+    def fused(chunk):
+        loop = toy_loop(slots=slots, frontends=frontends, k=k,
+                        max_len=max_len, capacity=uid + slots,
+                        preemption="margin", margin=0.0, slo=slo)
+        for step, burst in enumerate(trace, start=1):
+            for (place, pr, u, max_new, plen, dl) in burst:
+                loop.submit(place, pr, u,
+                            ((np.arange(plen) + u) % 11).astype(np.int32),
+                            max_new, at_step=step, deadline=dl)
+        t = 0
+        while t < len(trace):
+            n = min(chunk, len(trace) - t)
+            loop.run_steps(n)
+            t += n
+        return loop.admission_log, loop.preempt_log
+
+    assert fused(1) == ref
+    assert fused(5) == ref
+
+
+# ---------------------------------------------------------------------------
+# engine-level: host / device / fused planes identical with SLO enabled
+# ---------------------------------------------------------------------------
+
+def test_engine_slo_matches_across_planes():
+    """ServeEngine(slo=...) on the real reduced model: aging keys stamped
+    at submit, slack margins protecting near-deadline victims, and the
+    cheapest-restage tie-break — admission order, victim order, AND token
+    streams identical across host, device, and fused planes."""
+    from repro.configs import get_reduced
+    from repro.models import materialize, model_p
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_reduced("qwen3_1_7b")
+    params = materialize(jax.random.PRNGKey(0), model_p(cfg))
+    rng = np.random.default_rng(4)
+    slo = SLOConfig(aging_rate=0.3, margin_scale=0.25, margin_floor=0.25,
+                    margin_cap=2.5, victim="cheapest")
+    # best-effort long low-priority seats first (floor-margin victims),
+    # then deadline-carrying high-priority waves challenge them
+    low = [(i, rng.integers(0, cfg.vocab_size, 5).astype(np.int32), 7, 9.0,
+            None) for i in range(2)]
+    high = [(i, rng.integers(0, cfg.vocab_size, 4).astype(np.int32), 3,
+             float(i), 6) for i in range(2, 5)]
+
+    def run(mode, chunk=1):
+        eng = ServeEngine(cfg, params, slots=2, max_len=48, frontends=2,
+                          k=1, step=mode, step_chunk=chunk,
+                          preemption="margin", preempt_margin=0.0, slo=slo)
+        for (rid, toks, mn, pr, rel) in low:
+            eng.submit(Request(rid=rid, tokens=toks, max_new=mn,
+                               priority=pr, slo_steps=rel), frontend=rid % 2)
+        eng.step()
+        eng.step()
+        for (rid, toks, mn, pr, rel) in high:
+            eng.submit(Request(rid=rid, tokens=toks, max_new=mn,
+                               priority=pr, slo_steps=rel), frontend=rid % 2)
+        done = eng.run()
+        return (eng.admission_log, eng.preempt_log,
+                {r.rid: r.out for r in done})
+
+    ref = run("host")
+    assert len(ref[1]) > 0, "no preemptions fired; strengthen the trace"
+    assert run("device") == ref
+    assert run("fused", 1) == ref
+    assert run("fused", 3) == ref
