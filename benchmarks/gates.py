@@ -38,7 +38,7 @@ SECTIONS = {
     "fig3_simulation": 1, "fig4_scaling": 1, "fig5_ksweep": 1,
     "batched_speedup": 1, "sharded_speedup": 1, "admission": 1,
     "fused_step": 1, "preemption": 1, "continuous": 1, "slo": 1,
-    "relaxed_topk": 1, "flash_attention": 1, "roofline": 0,
+    "multiqueue": 1, "relaxed_topk": 1, "flash_attention": 1, "roofline": 0,
 }
 
 
@@ -134,6 +134,24 @@ def _check_slo(rows: list) -> str:
             f"{bound} (static {static['max_wait_by_class'][starved]})")
 
 
+def _check_multiqueue(rows: list) -> str:
+    by = {}
+    for r in rows:
+        if not isinstance(r, dict) or "structure" not in r:
+            raise AssertionError(f"row without a 'structure' key: {r!r}")
+        by.setdefault(r["structure"], r)
+    for need in ("multiqueue", "rank_probe"):
+        if need not in by:
+            raise AssertionError(
+                f"no {need!r} row (have {sorted(by)})")
+    probe = by["rank_probe"]
+    assert probe["oracle_identical"] is True, rows
+    assert probe["mean_rank"] <= probe["rank_bound"], rows
+    return (f"mean popped rank {probe['mean_rank']} <= "
+            f"{probe['rank_bound']} (3·P, P = {probe['P']}); "
+            "device == host oracle")
+
+
 GATES: List[Gate] = [
     Gate(f"BENCH_{s}.json", f"{s}:wellformed", _wellformed(n),
          f"the {s} bench section emitted no usable rows")
@@ -152,6 +170,11 @@ GATES: List[Gate] = [
          "SLO scheduling (deadline margins + aging + cheap-victim packing) "
          "no longer beats the static-margin plane on the fixed bursty "
          "trace, or the aging starvation bound broke (ISSUE 7 acceptance)"),
+    Gate("BENCH_multiqueue.json", "multiqueue:rank", _check_multiqueue,
+         "the MULTIQUEUE sampled pop lost its O(P) expected-rank contract "
+         "(mean popped rank above 3·P) or drifted from the host oracle — "
+         "ρ is structurally unbounded, so this probabilistic row is the "
+         "only quality gate the policy has (ISSUE 8 acceptance)"),
 ]
 
 

@@ -682,3 +682,85 @@ def batched_speedup(n=1000, p=0.2, graphs=6, places=8, k=8):
             "us_per_call": round(batched_warm * 1e6 / (batch * n), 2),
         })
     return rows
+
+
+def multiqueue_section(n=800, p=0.5, places=16, graphs=2, ks=(4, 64),
+                       probe_pushes=600):
+    """ISSUE 8: the MULTIQUEUE policy's fig5-style position + its rank
+    contract (DESIGN.md §14.2).
+
+    Part one is a k-sweep in the fig5 mould — CENTRALIZED and HYBRID rows
+    per k, one k-independent MULTIQUEUE row (the structure has no publish
+    step, so k is moot), and an IDEAL reference — all through the batched
+    SSSP engine with correctness asserted per run. MULTIQUEUE pays extra
+    phases (sampled pops miss) but zero coordination; the row records both.
+
+    Part two is the sampled-pop rank probe: a random push/pop trace through
+    the host ``MultiQueue`` with the device
+    ``StreamingAdmitter(policy="multiqueue")`` driven in lockstep and
+    EVERY pop compared in-run (the bit-identity contract of
+    tests/test_multiqueue.py, re-checked on fresh numbers, not assumed).
+    Each successful pop records the popped item's rank among all live
+    items (0 = true global best). The paper's power-of-two-choices bound
+    puts the EXPECTED rank at O(P); the gate pins ``mean_rank <=
+    rank_bound = 3·P`` — structurally ρ is ∞ (rho_bound returns inf), so
+    this probabilistic row is exactly what the gate must watch instead."""
+    from repro.core.host_queue import MultiQueue
+    from repro.serve.streaming import StreamingAdmitter
+
+    ws, finals = _graph_stack(n, p, graphs)
+    rows = []
+    for k in ks:
+        for name, pol in [("centralized", Policy.CENTRALIZED),
+                          ("hybrid", Policy.HYBRID)]:
+            row = _batched_row(ws, finals, places=places, k=k, pol=pol)
+            row.update({"fig": "multiqueue", "structure": name,
+                        "P": places, "k": k})
+            rows.append(row)
+    for name, pol, k in [("ideal", Policy.IDEAL, 1),
+                         ("multiqueue", Policy.MULTIQUEUE, 0)]:
+        row = _batched_row(ws, finals, places=places, k=k, pol=pol)
+        row.update({"fig": "multiqueue", "structure": name,
+                    "P": places, "k": k})
+        rows.append(row)
+
+    rng = np.random.default_rng(0)
+    host = MultiQueue(places, 0)
+    dev = StreamingAdmitter(places, 0, capacity=probe_pushes + 8,
+                            policy="multiqueue")
+    live = {}                        # uid -> prio (host-side truth)
+    ranks = []
+    uid = 0
+    attempts = 0
+    t0 = time.time()
+    while uid < probe_pushes or live:
+        burst = int(rng.integers(1, 6)) if uid < probe_pushes else 0
+        for _ in range(min(burst, probe_pushes - uid)):
+            pr = float(np.float32(rng.integers(0, 64) / 8.0))
+            host.push(0, pr, uid)
+            dev.push(0, pr, uid)
+            live[uid] = pr
+            uid += 1
+        dev.flush()
+        for _ in range(int(rng.integers(1, 4))):
+            got_h = host.pop(0)
+            got_d = dev.pop(0)
+            assert got_d == got_h, (got_d, got_h)    # in-run order assert
+            attempts += 1
+            if got_h is None:
+                continue
+            pr, popped_uid = got_h[0], got_h[1]
+            ranks.append(sorted((q, u) for u, q in live.items())
+                         .index((pr, popped_uid)))
+            del live[popped_uid]
+    wall = time.time() - t0
+    rows.append({
+        "fig": "multiqueue", "structure": "rank_probe", "P": places,
+        "pushes": probe_pushes, "pop_attempts": attempts,
+        "mean_rank": round(float(np.mean(ranks)), 2),
+        "max_rank": int(np.max(ranks)),
+        "rank_bound": 3 * places,
+        "oracle_identical": True,
+        "us_per_call": round(wall * 1e6 / max(attempts, 1), 2),
+    })
+    return rows

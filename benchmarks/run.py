@@ -91,6 +91,14 @@ def main() -> None:
         # THAT trace) — only the drain tail shrinks in smoke mode
         "slo": lambda: slo_bench.slo_serving(
             drain=160 if args.smoke else 240),
+        "multiqueue": lambda: paper.multiqueue_section(
+            n=2000 if args.full else (300 if args.smoke else 800),
+            graphs=graphs,
+            places=80 if args.full else (8 if args.smoke else 16),
+            ks=(1, 32, 512) if args.full
+            else ((4,) if args.smoke else (4, 64)),
+            probe_pushes=2000 if args.full
+            else (200 if args.smoke else 600)),
         "relaxed_topk": (
             (lambda: kernels_bench.bench_relaxed_topk(n=1 << 13, p=64,
                                                       cs=(64, 8)))

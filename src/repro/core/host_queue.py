@@ -1,9 +1,17 @@
-"""Host-side (Python) hybrid k-priority queue — the paper's structure for
+"""Host-side (Python) relaxed priority queues — the paper's structures for
 framework control-plane use: serving admission (one *place* per serving host)
-and priority data sampling. Faithful sequential simulation of the concurrent
-semantics: per-place local lists (≤ k unpublished items), publish-on-k to the
-append-only global list, per-place read pointers, non-destructive *spying*
-when a place's queue is empty, exactly-once pops via the taken set.
+and priority data sampling.
+
+``HybridKQueue`` is the faithful sequential simulation of the hybrid
+k-priority concurrent semantics: per-place local lists (≤ k unpublished
+items), publish-on-k to the append-only global list, per-place read pointers,
+non-destructive *spying* when a place's queue is empty, exactly-once pops via
+the taken set. ``MultiQueue`` is the sequential oracle of
+``Policy.MULTIQUEUE`` (hashed per-place heaps, counter-hashed c=2 sampled
+pops — DESIGN.md §14.2), and ``HostPodQueues`` the np twin of the pod-scale
+cross-pod block-stealing plane (DESIGN.md §14.1); both are bit-identical to
+their device planes by construction (shared integer hashes / f32 margin
+math).
 """
 from __future__ import annotations
 
@@ -11,6 +19,8 @@ import heapq
 import itertools
 import random
 from typing import Any, List, Optional, Tuple
+
+import numpy as np
 
 
 class HybridKQueue:
@@ -138,3 +148,177 @@ class HybridKQueue:
 
     def pending(self, place: int) -> int:
         return len(self._local[place])
+
+
+class MultiQueue:
+    """Sequential host-side MultiQueue — the ``Policy.MULTIQUEUE`` oracle
+    (DESIGN.md §14.2, from "Multi-Queues Can Be State-of-the-Art Priority
+    Schedulers"). A push routes to the (priority, uid)-HASHED home place —
+    the caller's ``place`` argument is accepted for ``HybridKQueue`` drop-in
+    compatibility but ignored by design. A pop samples c=2 distinct places
+    from the pop-attempt counter (misses advance it too) and takes the
+    better (priority, uid) front; both sampled queues empty ⇒ ``None`` even
+    when other queues hold work — there is NO global fallback and no top-k,
+    which is the whole point: every op is O(log n) on one or two local
+    heaps. Hashes are the exact uint32 arithmetic of
+    ``kpriority.mq_place``/``mq_sample``, so the device plane
+    (``StreamingAdmitter(policy="multiqueue")``) is bit-identical
+    (tests/test_multiqueue.py)."""
+
+    def __init__(self, num_places: int, k: int = 0, seed: int = 0):
+        from repro.core.kpriority import mq_place_host, mq_sample_host
+
+        self._mq_place, self._mq_sample = mq_place_host, mq_sample_host
+        self.num_places = num_places
+        self.k = k                       # accepted for signature parity; the
+        #                                  structure has no publish step
+        self._counter = itertools.count()
+        self._heaps: List[List[tuple]] = [[] for _ in range(num_places)]
+        self._items = {}
+        self._pops = 0
+
+    def push(self, place: int, priority: float, item: Any,
+             k: Optional[int] = None, now: Optional[int] = None):
+        """Lower priority value = popped first. ``place``/``k``/``now`` are
+        accepted for ``HybridKQueue`` parity; routing is by hash."""
+        prio = float(np.float32(priority))
+        uid = next(self._counter)
+        home = self._mq_place(prio, uid, self.num_places)
+        heapq.heappush(self._heaps[home], (prio, uid))
+        self._items[uid] = item
+
+    def flush(self, place: Optional[int] = None):
+        """No-op: MULTIQUEUE has no unpublished state (everything is
+        pop-visible to the places that sample its queue)."""
+
+    def pop(self, place: Optional[int] = None) -> Optional[Tuple[float, Any]]:
+        """Sampled c=2 pop; ``place`` is ignored (any caller may pop)."""
+        t = self._pops
+        self._pops += 1
+        v1, v2 = self._mq_sample(t, self.num_places)
+        fronts = [h[0] for h in (self._heaps[v1], self._heaps[v2]) if h]
+        if not fronts:
+            return None
+        rec = min(fronts)
+        src = v1 if self._heaps[v1] and self._heaps[v1][0] == rec else v2
+        heapq.heappop(self._heaps[src])
+        prio, uid = rec
+        return prio, self._items.pop(uid)
+
+    @property
+    def pop_attempts(self) -> int:
+        """Pop-attempt counter (misses included) — the ``t`` the device twin
+        must be driven with."""
+        return self._pops
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def pending(self, place: int) -> int:
+        return 0                         # nothing is ever unpublished
+
+
+class HostPodQueues:
+    """np/host twin of the pod-scale cross-pod block-stealing plane
+    (DESIGN.md §14.1; device side: ``kpriority.pod_*`` +
+    ``sharded_batch.make_pod_engine``). Each pod holds one list of
+    ``(prio, uid, block)`` records (``block = -1`` while unpublished);
+    pushes publish-on-k into whole blocks, and :meth:`steal_phase` replays
+    the replicated claim scan — pods fire in pod index order when their
+    front is empty or the best unclaimed victim head beats it by the f32
+    margin, stealing the victim's best published block as a unit. Pops and
+    payloads are (prio, uid)-lexicographic, so no slot layout is modelled
+    at all — the differential compares pure (prio, uid) streams."""
+
+    def __init__(self, num_pods: int, k: int, block_cap: int,
+                 margin: float = 0.0):
+        self.num_pods, self.k = num_pods, k
+        self.block_cap, self.margin = block_cap, float(margin)
+        self._pods: List[List[tuple]] = [[] for _ in range(num_pods)]
+        self._next_block = [0] * num_pods
+
+    # ------------------------------------------------------------------ push
+    def push(self, pod: int, items):
+        """``items``: iterable of (priority, uid); publish-on-k after."""
+        for prio, uid in items:
+            self._pods[pod].append((float(np.float32(prio)), int(uid), -1))
+        unpub = sum(1 for r in self._pods[pod] if r[2] < 0)
+        if unpub >= self.k and unpub > 0:
+            bid = self._next_block[pod]
+            if unpub > self.block_cap:
+                raise ValueError(
+                    f"block of {unpub} items exceeds block_cap="
+                    f"{self.block_cap}; the device plane would truncate")
+            self._pods[pod] = [
+                (p, u, bid if b < 0 else b) for (p, u, b) in self._pods[pod]]
+            self._next_block[pod] += 1
+
+    # ----------------------------------------------------------------- steal
+    def _front(self, pod: int):
+        live = [(p, u) for (p, u, _b) in self._pods[pod]]
+        return min(live) if live else None
+
+    def _best_block(self, pod: int):
+        """(head (prio, uid), members sorted) of the best published block."""
+        pub = [(p, u, b) for (p, u, b) in self._pods[pod] if b >= 0]
+        if not pub:
+            return None, None
+        head = min((p, u) for (p, u, _b) in pub)
+        bid = next(b for (p, u, b) in pub if (p, u) == head)
+        members = sorted((p, u) for (p, u, b) in pub if b == bid)
+        return head, members
+
+    def steal_phase(self):
+        """One replicated claim scan over all pods; applies fired steals and
+        returns ``[(thief, victim, payload)]`` in firing order (the
+        differential's trace record). f32 margin math matches
+        ``kpriority.pod_steal_plan`` bit-for-bit."""
+        # pre-phase snapshot — the all-gathered headers/payloads; claims and
+        # applications both read THIS, never mid-apply state (the device
+        # plane extracts payloads before any pod mutates)
+        heads = [self._best_block(p) for p in range(self.num_pods)]
+        fronts = [self._front(p) for p in range(self.num_pods)]
+        claimed = [False] * self.num_pods
+        plan = []
+        for p in range(self.num_pods):
+            avail = [(heads[v][0], v) for v in range(self.num_pods)
+                     if v != p and not claimed[v] and heads[v][0] is not None]
+            if not avail:
+                continue
+            (hp, hu), victim = min(avail)
+            beats = bool(np.float32(np.float32(hp) + np.float32(self.margin))
+                         < (np.float32(fronts[p][0]) if fronts[p] else
+                            np.float32(np.inf)))
+            fire = fronts[p] is None or beats
+            if not fire:
+                continue
+            claimed[victim] = True
+            plan.append((p, victim))
+        out = []
+        for thief, victim in plan:
+            members = heads[victim][1]
+            member_set = set(members)
+            self._pods[victim] = [
+                r for r in self._pods[victim] if (r[0], r[1]) not in member_set]
+            bid = self._next_block[thief]
+            self._next_block[thief] += 1
+            self._pods[thief].extend((p, u, bid) for (p, u) in members)
+            out.append((thief, victim, members))
+        return out
+
+    # ------------------------------------------------------------------- pop
+    def pop(self, pod: int):
+        """Pop the pod's (prio, uid) front; ``None`` when empty."""
+        front = self._front(pod)
+        if front is None:
+            return None
+        self._pods[pod] = [
+            r for r in self._pods[pod] if (r[0], r[1]) != front]
+        return front
+
+    def snapshot(self, pod: int):
+        """Sorted (prio, uid, block) records — the state-comparison view."""
+        return sorted(self._pods[pod])
+
+    def __len__(self) -> int:
+        return sum(len(p) for p in self._pods)

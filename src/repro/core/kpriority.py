@@ -9,15 +9,11 @@ more than ρ items, regardless of age. We therefore implement the structures as
 **phase-synchronous functional states**: each of P places pops its best
 *visible* task per phase; the policy defines visibility:
 
-  IDEAL        every active task visible to every place                (ρ = 0)
-  CENTRALIZED  all but the k globally-newest tasks visible to all;
-               creators always see their own tasks                     (ρ = k)
-  HYBRID       published tasks visible to all; each place publishes its
-               local list once it has accumulated k unpublished pushes;
-               empty places *spy* (non-destructive read of a victim's
-               unpublished list)                                       (ρ = P·k)
-  WORK_STEAL   owner-only visibility; empty places steal half the
-               victim's tasks (destructive)                            (ρ = ∞)
+<<POLICY_TABLE>>
+
+(The table above is rendered from :data:`POLICY_TABLE` at import time —
+one row per :class:`Policy` member, so it cannot drift from the enum;
+tests/test_docs.py gates the rendering.)
 
 Exactly-once pop is guaranteed by deterministic arbitration inside the phase
 (the analogue of the paper's CAS-on-tag: lowest-order claimant wins; the
@@ -50,6 +46,120 @@ class Policy(enum.Enum):
     CENTRALIZED = "centralized"
     HYBRID = "hybrid"
     WORK_STEALING = "ws"
+    MULTIQUEUE = "multiqueue"
+
+
+#: One row per policy: (visibility rule, structural ρ string). The module
+#: docstring table is rendered from THIS dict at import time and
+#: tests/test_docs.py asserts every enum member has a row whose ρ string
+#: matches :func:`rho_bound` — a 6th policy cannot land without a row here,
+#: and a stale row cannot survive the docs gate.
+POLICY_TABLE = {
+    Policy.IDEAL: (
+        "every active task visible to every place", "0"),
+    Policy.CENTRALIZED: (
+        "all but the k globally-newest tasks visible to all; creators "
+        "always see their own tasks", "k"),
+    Policy.HYBRID: (
+        "published tasks visible to all; each place publishes its local "
+        "list once it has accumulated k unpublished pushes; empty places "
+        "*spy* (non-destructive read of a victim's unpublished list)",
+        "P·k"),
+    Policy.WORK_STEALING: (
+        "owner-only visibility; empty places steal half the victim's "
+        "tasks (destructive)", "∞"),
+    Policy.MULTIQUEUE: (
+        "per-place queues addressed by a (priority, uid) hash; a pop "
+        "samples c=2 places and takes the better front — no global top-k "
+        "at all (arXiv 2109.00657)", "∞ structural, O(P) expected rank"),
+}
+
+
+def format_policy_table(width: int = 79) -> str:
+    """Render the module-docstring policy table from :data:`POLICY_TABLE`
+    (one row per :class:`Policy` member, KeyError if a member lacks a row)."""
+    import textwrap
+
+    lines = []
+    for pol in Policy:
+        rule, rho = POLICY_TABLE[pol]
+        body = f"{rule}  (ρ = {rho})"
+        wrapped = textwrap.wrap(body, width=width - 15)
+        lines.append(f"  {pol.name:<13}{wrapped[0]}")
+        lines.extend(f"  {'':<13}{w}" for w in wrapped[1:])
+    return "\n".join(lines)
+
+
+if __doc__ is not None:  # python -OO strips docstrings
+    __doc__ = __doc__.replace("<<POLICY_TABLE>>", format_policy_table())
+
+
+# ---------------------------------------------------------------------------
+# MULTIQUEUE hashing (DESIGN.md §14.2)
+#
+# Both the home-place hash (push) and the c=2 sampling (pop) are plain
+# uint32 multiplicative hashes — NOT jax.random — so the host oracle
+# (host_queue.MultiQueue) reproduces them with Python int arithmetic and the
+# serve planes stay bit-identical without sharing a PRNG stream. Constants
+# are the usual Knuth/xxhash odd multipliers.
+# ---------------------------------------------------------------------------
+
+_MQ_HOME_A = 2654435761      # Knuth multiplicative hash
+_MQ_HOME_B = 2246822519      # xxhash PRIME32_2
+_MQ_POP_A = 0x9E3779B1       # xxhash PRIME32_1
+_MQ_POP_B = 0x85EBCA77       # xxhash PRIME32_3
+_MQ_POP_C1 = 0x7F4A7C15
+_MQ_POP_C2 = 0xC2B2AE3D
+
+
+def mq_place(prios: jnp.ndarray, uids: jnp.ndarray,
+             num_places: int) -> jnp.ndarray:
+    """i32[...] — MULTIQUEUE home place of each (priority, uid) pair: a
+    uint32 hash of the f32 bit pattern and the uid, mod P. Traced twin of
+    :func:`mq_place_host` (identical wrap-around arithmetic)."""
+    bits = jax.lax.bitcast_convert_type(
+        prios.astype(jnp.float32), jnp.uint32)
+    h = (bits * jnp.uint32(_MQ_HOME_A)
+         + uids.astype(jnp.uint32) * jnp.uint32(_MQ_HOME_B))
+    return (h % jnp.uint32(num_places)).astype(jnp.int32)
+
+
+def mq_place_host(priority: float, uid: int, num_places: int) -> int:
+    """Host mirror of :func:`mq_place` — exact Python-int uint32 math."""
+    import numpy as np
+
+    bits = int(np.float32(priority).view(np.uint32))
+    h = (bits * _MQ_HOME_A + int(uid) * _MQ_HOME_B) & 0xFFFFFFFF
+    return h % num_places
+
+
+def mq_sample(t: jnp.ndarray, num_places: int):
+    """(v1 i32[], v2 i32[]) — the two DISTINCT places the ``t``-th pop
+    samples (c = 2, power-of-two-choices). ``t`` is the pop-attempt counter
+    (misses count too — the host twin advances it identically). With P = 1
+    both samples are place 0."""
+    t = t.astype(jnp.uint32)
+    h1 = t * jnp.uint32(_MQ_POP_A) + jnp.uint32(_MQ_POP_C1)
+    v1 = (h1 % jnp.uint32(num_places)).astype(jnp.int32)
+    if num_places == 1:
+        return v1, v1
+    h2 = t * jnp.uint32(_MQ_POP_B) + jnp.uint32(_MQ_POP_C2)
+    v2 = (h2 % jnp.uint32(num_places - 1)).astype(jnp.int32)
+    v2 = v2 + (v2 >= v1).astype(jnp.int32)   # distinct second sample
+    return v1, v2
+
+
+def mq_sample_host(t: int, num_places: int):
+    """Host mirror of :func:`mq_sample` — exact Python-int uint32 math."""
+    h1 = (t * _MQ_POP_A + _MQ_POP_C1) & 0xFFFFFFFF
+    v1 = h1 % num_places
+    if num_places == 1:
+        return v1, v1
+    h2 = (t * _MQ_POP_B + _MQ_POP_C2) & 0xFFFFFFFF
+    v2 = h2 % (num_places - 1)
+    if v2 >= v1:
+        v2 += 1
+    return v1, v2
 
 
 class PoolState(NamedTuple):
@@ -206,7 +316,11 @@ def push(
     then HYBRID applies :func:`publish` (publish-on-k ⇒ ignored ≤ P·k);
     IDEAL/CENTRALIZED mark items published immediately (visibility is derived
     from ``seq`` for CENTRALIZED, so ρ = 0 resp. k); WORK_STEALING never
-    publishes (ρ = ∞).
+    publishes (ρ = ∞). MULTIQUEUE never publishes either and re-routes each
+    item to its hashed home place — ``creator`` becomes
+    ``mq_place(prio, seq, P)``, the push-side half of the MultiQueue
+    structure (DESIGN.md §14.2); the submitted ``creators`` are ignored by
+    design (any front-end may stage any item).
     """
     unpub_before = state.unpub_pushes
     state = push_batch(state, mask, prios, creators, key=key)
@@ -217,6 +331,13 @@ def push(
         # HYBRID-only state — keep them untouched on the non-streaming paths
         return state._replace(
             published=state.published | mask,
+            unpub_pushes=unpub_before,
+        )
+    if policy is Policy.MULTIQUEUE:
+        num_places = state.unpub_pushes.shape[0]
+        home = mq_place(state.prio, state.seq, num_places)
+        return state._replace(
+            creator=jnp.where(mask, home, state.creator),
             unpub_pushes=unpub_before,
         )
     # WORK_STEALING: never published.
@@ -241,7 +362,9 @@ def visibility(state: PoolState, *, num_places: int, k: int, policy: Policy) -> 
         return act & (old_enough | own)
     if policy is Policy.HYBRID:
         return act & (state.published[None, :] | own | state.spied)
-    if policy is Policy.WORK_STEALING:
+    if policy in (Policy.WORK_STEALING, Policy.MULTIQUEUE):
+        # owner-only: a place sees its own queue (MULTIQUEUE's owner is the
+        # hashed home place; pop-time c=2 sampling happens in phase_prepare)
         return act & own
     raise ValueError(policy)
 
@@ -260,7 +383,7 @@ def common_visibility(state: PoolState, *, k: int, policy: Policy) -> jnp.ndarra
         return state.active & (state.seq < (state.next_seq - k))
     if policy is Policy.HYBRID:
         return state.active & state.published
-    if policy is Policy.WORK_STEALING:
+    if policy in (Policy.WORK_STEALING, Policy.MULTIQUEUE):
         return jnp.zeros_like(state.active)  # owner-only: nothing is common
     raise ValueError(policy)
 
@@ -456,6 +579,20 @@ def _spy(
     return vis | new_refs, spied
 
 
+def _mq_sample_places(key: jax.Array, num_places: int):
+    """Per-place c=2 distinct queue samples for a MULTIQUEUE *phase* —
+    (v1 i32[P], v2 i32[P]). Phase pops are property-tested (not host-bit-
+    matched), so this path may use jax.random; the streaming pop
+    (:func:`stream_pop_mq`) uses the counter hash instead."""
+    k1, k2 = jax.random.split(key)
+    v1 = jax.random.randint(k1, (num_places,), 0, num_places, jnp.int32)
+    if num_places == 1:
+        return v1, v1
+    v2 = jax.random.randint(k2, (num_places,), 0, num_places - 1, jnp.int32)
+    v2 = v2 + (v2 >= v1).astype(jnp.int32)
+    return v1, v2
+
+
 def phase_prepare(
     state: PoolState,
     key: jax.Array,
@@ -477,6 +614,13 @@ def phase_prepare(
     if policy is Policy.HYBRID:
         vis, spied = _spy(state, vis, k_spy, num_places)
         state = state._replace(spied=spied)
+    if policy is Policy.MULTIQUEUE:
+        # pop-time sampling (DESIGN.md §14.2): each place sees the union of
+        # c=2 distinct sampled queues — never the full pool; no global top-k
+        v1, v2 = _mq_sample_places(k_spy, num_places)
+        cr = state.creator[None, :]
+        vis = state.active[None, :] & (
+            (cr == v1[:, None]) | (cr == v2[:, None]))
     order = jax.random.permutation(k_order, num_places).astype(jnp.int32)
     return state, vis, order
 
@@ -638,6 +782,42 @@ def stream_peek(
     state this op touches. Returns ``(state, slot, prio, valid)``."""
     spied, slot, prio_out, valid = _stream_best(state, place)
     return state._replace(spied=spied), slot, prio_out, valid
+
+
+def stream_pop_mq(
+    state: PoolState, t: jnp.ndarray
+) -> Tuple[PoolState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """MULTIQUEUE streaming pop (DESIGN.md §14.2): the ``t``-th pop attempt
+    samples c=2 distinct places via the counter hash (:func:`mq_sample`),
+    takes the (prio, seq)-lexicographic min over the union of those two
+    queues, and deactivates it. A miss (both sampled queues empty) returns
+    ``valid=False`` even when OTHER queues hold work — that is the point of
+    the MultiQueue structure: no global fallback, no top-k, so the pop
+    touches O(M) local state and shards perfectly. The caller owns the pop
+    counter ``t`` (i32[], traced) and must advance it on EVERY attempt,
+    including misses — the host twin (``host_queue.MultiQueue``) advances
+    its counter identically, which is what makes the two planes
+    bit-identical (tests/test_multiqueue.py).
+
+    Returns ``(state, slot i32[], prio f32[], valid bool[])``.
+    """
+    m = state.prio.shape[0]
+    num_places = state.unpub_pushes.shape[0]
+    v1, v2 = mq_sample(t, num_places)
+    vis = state.active & ((state.creator == v1) | (state.creator == v2))
+    best = jnp.min(jnp.where(vis, state.prio, INF))
+    valid = jnp.isfinite(best)
+    cand = vis & (state.prio == best)
+    slot = jnp.argmin(
+        jnp.where(cand, state.seq, jnp.iinfo(jnp.int32).max)
+    ).astype(jnp.int32)
+    prio_out = jnp.where(valid, state.prio[slot], INF)
+    is_slot = jnp.arange(m) == slot
+    new_state = state._replace(
+        active=state.active & ~(is_slot & valid),
+        prio=jnp.where(is_slot & valid, INF, state.prio),
+    )
+    return new_state, slot, prio_out, valid
 
 
 def preempt_beats(challenger: float, margin: float, incumbent: float) -> bool:
@@ -817,7 +997,7 @@ def queue_phase_chunk(
     ``phase_chunk``, DESIGN.md §10), for ANY policy. The per-step ignored
     count is computed in-trace so the structural ρ bound stays checkable
     without unfusing. Chunked == step-by-step bit-for-bit (the scan body is
-    exactly the unfused step; pinned for all four policies by
+    exactly the unfused step; pinned for every policy by
     tests/test_fused_step.py).
 
     Returns ``(state, PopResult [T, P], ignored i32[T])``.
@@ -846,9 +1026,13 @@ def queue_phase_chunk(
 
 def rho_bound(policy: Policy, k: int, num_places: int) -> float:
     """The structural relaxation each policy guarantees (the DESIGN.md §2
-    table): IDEAL 0, CENTRALIZED k, HYBRID P·k, WORK_STEALING ∞. Every pop
-    path in the repo — phase arbitration (§3), batched/sharded engines
-    (§4/§8), streaming admission (§9) — preserves ignored ≤ this bound."""
+    table, rendered from :data:`POLICY_TABLE`): IDEAL 0, CENTRALIZED k,
+    HYBRID P·k, WORK_STEALING ∞, MULTIQUEUE ∞ (structurally — its guarantee
+    is the PROBABILISTIC O(P) expected rank of sample-c-of-P pops, pinned
+    empirically by the ``multiqueue`` bench section, not a structural
+    bound). Every pop path in the repo — phase arbitration (§3),
+    batched/sharded engines (§4/§8), streaming admission (§9) — preserves
+    ignored ≤ this bound."""
     if policy is Policy.IDEAL:
         return 0
     if policy is Policy.CENTRALIZED:
@@ -871,3 +1055,209 @@ def ignored_count(
     popped = jnp.zeros_like(state_before.active).at[result.slot].max(result.valid)
     better = state_before.active & (state_before.prio < worst) & ~popped
     return jnp.sum(better)
+
+
+# ---------------------------------------------------------------------------
+# pod-scale cross-pod work-stealing of published blocks (DESIGN.md §14.1)
+#
+# The paper's hybrid structure lifted one level up: each POD is a place-like
+# scheduling domain holding a HybridKQueue-equivalent slot pool; pushes
+# publish-on-k into whole BLOCKS ("Configurable Strategies for
+# Work-stealing": steal granularity = one published block, never single
+# tasks), and a pod whose visible front is empty or worse by a margin steals
+# the best published block of another pod. These ops are pure single-pod jnp;
+# the collective phase (all_gather over the "pod" mesh axis + replicated
+# claim scan) lives in core/sharded_batch.py, the host np twin in
+# core/host_queue.HostPodQueues.
+# ---------------------------------------------------------------------------
+
+class PodState(NamedTuple):
+    """One pod's slot pool. M slots; ``uid < 0`` marks a free slot,
+    ``block < 0`` an unpublished (still pod-local) item. ``uid`` is the
+    globally-unique task id the driver assigns (lexicographic (prio, uid)
+    is the pop/steal order everywhere). ``next_block`` is the pod-local
+    id of the next published block."""
+
+    prio: jnp.ndarray        # f32[M]  +inf where free
+    uid: jnp.ndarray         # i32[M]  -1 where free
+    block: jnp.ndarray       # i32[M]  -1 while unpublished
+    next_block: jnp.ndarray  # i32[]
+
+
+def init_pod(num_slots: int) -> PodState:
+    return PodState(
+        prio=jnp.full((num_slots,), INF, jnp.float32),
+        uid=jnp.full((num_slots,), -1, jnp.int32),
+        block=jnp.full((num_slots,), -1, jnp.int32),
+        next_block=jnp.zeros((), jnp.int32),
+    )
+
+
+def _pod_scatter(state: PodState, prios: jnp.ndarray, uids: jnp.ndarray,
+                 block_id) -> PodState:
+    """Insert the ``uids >= 0`` entries of a padded batch into free slots
+    (ascending slot index), tagging them with ``block_id`` (-1 =
+    unpublished, or a traced scalar for a stolen-block splice). Entries
+    beyond the free capacity are dropped (the host twin raises instead —
+    size pools so this never fires)."""
+    m = state.uid.shape[0]
+    real = uids >= 0
+    rank = (jnp.cumsum(real) - 1).astype(jnp.int32)          # per-item rank
+    (free_slots,) = jnp.nonzero(state.uid < 0, size=m, fill_value=-1)
+    tgt = free_slots[jnp.clip(rank, 0, m - 1)]
+    tgt = jnp.where(real & (tgt >= 0), tgt, m)               # m ⇒ dropped
+    blk = jnp.broadcast_to(jnp.asarray(block_id, jnp.int32), uids.shape)
+    return state._replace(
+        prio=state.prio.at[tgt].set(prios, mode="drop"),
+        uid=state.uid.at[tgt].set(uids, mode="drop"),
+        block=state.block.at[tgt].set(blk, mode="drop"),
+    )
+
+
+def pod_publish(state: PodState, *, k: int, force: bool = False) -> PodState:
+    """Publish-on-k at block granularity: once the pod holds ≥ k unpublished
+    items (or on ``force``), ALL of them become published block
+    ``next_block`` — the k-FIFO block the steal plane trades in. Between
+    phase-granular pushes the unpublished count stays < k + batch, which
+    statically bounds the block size (the ``block_cap`` contract of
+    :func:`pod_extract_block`)."""
+    unpub = (state.uid >= 0) & (state.block < 0)
+    fire = ((jnp.sum(unpub) >= k) | force) & jnp.any(unpub)
+    return state._replace(
+        block=jnp.where(unpub & fire, state.next_block, state.block),
+        next_block=state.next_block + fire.astype(jnp.int32),
+    )
+
+
+def pod_push(state: PodState, prios: jnp.ndarray, uids: jnp.ndarray,
+             *, k: int) -> PodState:
+    """One phase's push into a pod: stage the padded batch (``uids >= 0``
+    are real) into free slots, then :func:`pod_publish` on-k."""
+    return pod_publish(_pod_scatter(state, prios, uids, -1), k=k)
+
+
+def pod_front(state: PodState):
+    """(slot i32[], prio f32[], uid i32[], valid bool[]) — the pod's visible
+    front: lexicographic (prio, uid) min over ALL live items (published or
+    not; the pod always sees its own queue, exactly like a HYBRID place)."""
+    act = state.uid >= 0
+    best = jnp.min(jnp.where(act, state.prio, INF))
+    valid = jnp.isfinite(best)
+    cand = act & (state.prio == best)
+    slot = jnp.argmin(
+        jnp.where(cand, state.uid, jnp.iinfo(jnp.int32).max)
+    ).astype(jnp.int32)
+    prio = jnp.where(valid, state.prio[slot], INF)
+    uid = jnp.where(valid, state.uid[slot], jnp.int32(-1))
+    return slot, prio, uid, valid
+
+
+def pod_pop(state: PodState):
+    """Pop the pod's front (lex (prio, uid) min): deactivate and return
+    ``(state, prio f32[], uid i32[], valid bool[])``."""
+    slot, prio, uid, valid = pod_front(state)
+    is_slot = jnp.arange(state.uid.shape[0]) == slot
+    hit = is_slot & valid
+    return state._replace(
+        prio=jnp.where(hit, INF, state.prio),
+        uid=jnp.where(hit, -1, state.uid),
+        block=jnp.where(hit, -1, state.block),
+    ), prio, uid, valid
+
+
+def pod_best_block(state: PodState):
+    """Header + membership of the pod's best PUBLISHED block — the one whose
+    head (lex-min item) is smallest. Returns ``(head_prio f32[],
+    head_uid i32[], has bool[], members bool[M])``; ``members`` is empty
+    when nothing is published."""
+    pub = state.block >= 0
+    best = jnp.min(jnp.where(pub, state.prio, INF))
+    has = jnp.isfinite(best)
+    cand = pub & (state.prio == best)
+    slot = jnp.argmin(
+        jnp.where(cand, state.uid, jnp.iinfo(jnp.int32).max)
+    ).astype(jnp.int32)
+    bid = jnp.where(has, state.block[slot], -1)
+    members = pub & (state.block == bid) & has
+    head_prio = jnp.where(has, state.prio[slot], INF)
+    head_uid = jnp.where(has, state.uid[slot], jnp.int32(-1))
+    return head_prio, head_uid, has, members
+
+
+def pod_extract_block(state: PodState, members: jnp.ndarray, block_cap: int):
+    """Serialize a block for the steal collective: its items sorted by
+    (prio, uid), padded to ``block_cap`` with (+inf, -1). Slot layout never
+    crosses the wire — the host twin compares/splices sorted payloads, so it
+    needs no notion of device slots. ``block_cap`` must bound the block size
+    (≥ k − 1 + max pushes per phase; larger blocks would silently truncate,
+    which the host twin guards with an assert)."""
+    p = jnp.where(members, state.prio, INF)
+    u = jnp.where(members, state.uid, jnp.iinfo(jnp.int32).max)
+    ix = jnp.lexsort((u, p))[:block_cap]
+    pay_p = p[ix]
+    pay_u = jnp.where(jnp.isfinite(pay_p), u[ix], -1)
+    return jnp.where(pay_u >= 0, pay_p, INF), pay_u
+
+
+def pod_remove_block(state: PodState, members: jnp.ndarray) -> PodState:
+    """Victim side of a fired steal: the claimed block's items leave the
+    pod (their identity travels with the payload — exactly-once)."""
+    return state._replace(
+        prio=jnp.where(members, INF, state.prio),
+        uid=jnp.where(members, -1, state.uid),
+        block=jnp.where(members, -1, state.block),
+    )
+
+
+def pod_insert_block(state: PodState, pay_prio: jnp.ndarray,
+                     pay_uid: jnp.ndarray) -> PodState:
+    """Thief side of a fired steal: splice the payload into free slots as a
+    NEW published block of this pod (block ids are pod-local, so the stolen
+    block simply becomes ``next_block`` here — stealable onward as a
+    whole, preserving block granularity)."""
+    state = _pod_scatter(state, pay_prio, pay_uid, state.next_block)
+    return state._replace(next_block=state.next_block + 1)
+
+
+def pod_steal_plan(
+    head_prio: jnp.ndarray,   # f32[N] per-pod best-block head priority
+    head_uid: jnp.ndarray,    # i32[N]
+    has_block: jnp.ndarray,   # bool[N]
+    front_prio: jnp.ndarray,  # f32[N] per-pod visible front
+    front_valid: jnp.ndarray,  # bool[N]
+    *,
+    margin: float,
+    claimed0: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The replicated steal arbitration (DESIGN.md §14.1), run identically
+    on every pod from the all-gathered headers: pods claim IN POD INDEX
+    ORDER (the deterministic analogue of the CAS race, mirroring
+    ``distributed.phase``'s greedy claim scan). Pod p *fires* iff its front
+    is empty or the best unclaimed victim head beats it by the margin —
+    ``f32(head + margin) < front``, same f32 arithmetic as
+    :func:`preempt_beats` — and the victim is the lex-(prio, uid)-min
+    unclaimed header of ANOTHER pod. Each victim loses at most one block
+    per phase (its best), each thief gains at most one.
+
+    ``claimed0`` lets shard_map callers pass a vma-cast carry seed
+    (``jax.lax.pcast``); defaults to zeros. Returns ``(fire bool[N],
+    victim i32[N])`` — ``victim`` undefined where ``~fire``."""
+    n = head_prio.shape[0]
+    pods = jnp.arange(n, dtype=jnp.int32)
+    imax = jnp.iinfo(jnp.int32).max
+    if claimed0 is None:
+        claimed0 = jnp.zeros((n,), bool)
+
+    def claim(claimed, p):
+        avail = has_block & ~claimed & (pods != p)
+        best = jnp.min(jnp.where(avail, head_prio, INF))
+        exists = jnp.isfinite(best)
+        cand = avail & (head_prio == best)
+        victim = jnp.argmin(jnp.where(cand, head_uid, imax)).astype(jnp.int32)
+        beats = (best + jnp.float32(margin)) < front_prio[p]
+        fire = exists & (~front_valid[p] | beats)
+        claimed = claimed | (fire & (pods == victim))
+        return claimed, (fire, victim)
+
+    _, (fire, victim) = jax.lax.scan(claim, claimed0, pods)
+    return fire, victim

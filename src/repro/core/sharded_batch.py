@@ -298,6 +298,102 @@ def make_engine_batched(mesh: Mesh, m_loc: int, g_cap: int, k: int, k_buf: int):
 
 
 # ---------------------------------------------------------------------------
+# cross-pod work-stealing of published blocks (DESIGN.md §14.1)
+# ---------------------------------------------------------------------------
+
+POD_AXIS = "pod"
+
+
+def make_pod_engine(
+    mesh: Mesh, *, num_slots: int, k: int, block_cap: int,
+    margin: float = 0.0,
+):
+    """The pod-scale steal plane on a ``batch × pod [× data × model]`` mesh
+    (``launch.mesh.make_production_batch_mesh(multi_pod=True)``): each pod
+    owns a :class:`kpriority.PodState` slot pool (state leaves [N_POD, ...],
+    sharded over ``pod``; the batch/data/model axes replicate — the pool
+    co-locates with every model shard of its pod). One jitted step =
+    push → steal → pop, with the steal phase's ONLY collective a bounded
+    all_gather over ``pod`` of (header, front, serialized-best-block)
+    triples — ≤ N·(block_cap + 5) scalars per phase, independent of queue
+    depth, the paper's traffic argument lifted to the pod level. The claim
+    scan itself (:func:`kpriority.pod_steal_plan`) runs replicated on every
+    pod from the gathered headers, mirroring ``distributed.phase``'s
+    deterministic CAS-winner analogue.
+
+    Returns jitted ``(state, (prios f32[N, n], uids i32[N, n]))
+    -> (state, fire bool[N], victim i32[N], pop_prio f32[N],
+    pop_uid i32[N], pop_valid bool[N])``; ``uids < 0`` are padding.
+    Host twin: ``host_queue.HostPodQueues`` (bit-identical — the
+    ``--selftest-pod`` differential and tests/test_sharded_batch.py pin it).
+    """
+    spec = PS(POD_AXIS)
+
+    @functools.partial(
+        _shard_map, mesh=mesh,
+        in_specs=(spec, (spec, spec)),
+        out_specs=(spec, spec, spec, spec, spec, spec),
+    )
+    def step(state, pushes):
+        st = jax.tree.map(lambda a: a[0], state)          # drop pod dim
+        prios, uids = pushes
+        st = kp.pod_push(st, prios[0], uids[0], k=k)
+
+        # my header/front/payload, then the one bounded collective
+        head_p, head_u, has, members = kp.pod_best_block(st)
+        _, front_p, _, front_v = kp.pod_front(st)
+        pay_p, pay_u = kp.pod_extract_block(st, members, block_cap)
+        heads_p = jax.lax.all_gather(head_p, POD_AXIS)    # [N]
+        heads_u = jax.lax.all_gather(head_u, POD_AXIS)
+        hases = jax.lax.all_gather(has, POD_AXIS)
+        fronts_p = jax.lax.all_gather(front_p, POD_AXIS)
+        fronts_v = jax.lax.all_gather(front_v, POD_AXIS)
+        pays_p = jax.lax.all_gather(pay_p, POD_AXIS)      # [N, block_cap]
+        pays_u = jax.lax.all_gather(pay_u, POD_AXIS)
+
+        n = heads_p.shape[0]
+        claimed0 = jnp.zeros((n,), bool)
+        # vma bookkeeping: the scan carry mixes with all_gather-derived
+        # (varying) headers (post-0.4.x shard_map only, as in distributed.py)
+        if hasattr(jax.lax, "pcast"):
+            claimed0 = jax.lax.pcast(claimed0, (POD_AXIS,), to="varying")
+        fire, victim = kp.pod_steal_plan(
+            heads_p, heads_u, hases, fronts_p, fronts_v,
+            margin=margin, claimed0=claimed0,
+        )
+
+        # apply: remove my block if claimed (pre-phase members — payloads
+        # were extracted before any pod mutates), splice my stolen payload
+        me = jax.lax.axis_index(POD_AXIS)
+        st = jax.lax.cond(
+            jnp.any(fire & (victim == me)),
+            lambda s: kp.pod_remove_block(s, members), lambda s: s, st,
+        )
+        my_fire, my_victim = fire[me], victim[me]
+        st = jax.lax.cond(
+            my_fire,
+            lambda s: kp.pod_insert_block(
+                s, pays_p[my_victim], pays_u[my_victim]),
+            lambda s: s, st,
+        )
+
+        st, pop_p, pop_u, pop_v = kp.pod_pop(st)
+        st = jax.tree.map(lambda a: a[None], st)
+        return (st, my_fire[None], my_victim[None],
+                pop_p[None], pop_u[None], pop_v[None])
+
+    return jax.jit(step)
+
+
+def init_pod_sharded(num_slots: int, num_pods: int) -> kp.PodState:
+    """[N_POD, ...] pod-state tree for :func:`make_pod_engine`."""
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (num_pods,) + a.shape),
+        kp.init_pod(num_slots),
+    )
+
+
+# ---------------------------------------------------------------------------
 # selftest (subprocess: device count locks at jax init)
 # ---------------------------------------------------------------------------
 
@@ -445,6 +541,77 @@ def _selftest_serve_mesh():  # pragma: no cover
     print(f"SERVE_MESH_OK slots={len(jax.devices())}")
 
 
+def _selftest_pod(seed: int = 7, phases: int = 90) -> None:  # pragma: no cover
+    """Cross-pod steal plane == HostPodQueues replay, bit-for-bit: steal
+    decisions (fire + victim), per-pod pop streams, and the full sorted
+    (prio, uid, block) state records after every phase, over a randomized
+    uneven-push trace on the multi-pod test mesh; exactly-once at drain."""
+    import numpy as np
+
+    from repro.core.host_queue import HostPodQueues
+    from repro.launch.mesh import make_test_production_batch_mesh
+
+    mesh = make_test_production_batch_mesh(multi_pod=True)
+    npods = mesh.shape[POD_AXIS]
+    m, k, n_push, margin = 128, 3, 4, 0.25
+    block_cap = k + n_push
+    engine = make_pod_engine(
+        mesh, num_slots=m, k=k, block_cap=block_cap, margin=margin)
+    state = init_pod_sharded(m, npods)
+    host = HostPodQueues(npods, k=k, block_cap=block_cap, margin=margin)
+
+    rng = np.random.default_rng(seed)
+    uid = 0
+    pushed, popped = set(), []
+    steals = 0
+    for phase_i in range(phases):
+        pr = np.full((npods, n_push), np.inf, np.float32)
+        ui = np.full((npods, n_push), -1, np.int32)
+        if phase_i < 12:
+            for p in range(npods):
+                # uneven on purpose: pods that drain early must steal
+                for j in range(rng.integers(0, n_push + 1)):
+                    pr[p, j] = np.float32(rng.random())
+                    ui[p, j] = uid
+                    pushed.add(uid)
+                    uid += 1
+        for p in range(npods):
+            host.push(p, [(float(pr[p, j]), int(ui[p, j]))
+                          for j in range(n_push) if ui[p, j] >= 0])
+        host_plan = {t: (v, pay) for (t, v, pay) in host.steal_phase()}
+        host_pops = [host.pop(p) for p in range(npods)]
+
+        state, fire, victim, pop_p, pop_u, pop_v = engine(
+            state, (jnp.asarray(pr), jnp.asarray(ui)))
+        fire, victim = np.asarray(fire), np.asarray(victim)
+        pop_p, pop_u = np.asarray(pop_p), np.asarray(pop_u)
+        pop_v = np.asarray(pop_v)
+        prio_a, uid_a = np.asarray(state.prio), np.asarray(state.uid)
+        blk_a = np.asarray(state.block)
+
+        for p in range(npods):
+            assert bool(fire[p]) == (p in host_plan), (phase_i, p)
+            if fire[p]:
+                assert int(victim[p]) == host_plan[p][0], (phase_i, p)
+                steals += 1
+            hp = host_pops[p]
+            assert bool(pop_v[p]) == (hp is not None), (phase_i, p)
+            if hp is not None:
+                assert (float(pop_p[p]), int(pop_u[p])) == hp, (phase_i, p)
+                popped.append(int(pop_u[p]))
+            dev = sorted(
+                (float(prio_a[p, i]), int(uid_a[p, i]), int(blk_a[p, i]))
+                for i in range(m) if uid_a[p, i] >= 0)
+            assert dev == host.snapshot(p), (phase_i, p)
+        if phase_i >= 12 and len(host) == 0:
+            break
+    assert len(host) == 0, f"{len(host)} items left after {phases} phases"
+    assert sorted(popped) == sorted(pushed), (
+        f"exactly-once violated: {len(popped)} popped vs {len(pushed)} pushed")
+    assert steals > 0, "trace never exercised a steal"
+    print(f"POD_STEAL_OK pods={npods} tasks={len(pushed)} steals={steals}")
+
+
 def selftest() -> None:  # pragma: no cover - exercised via subprocess
     d = len(jax.devices())
     _selftest_pool_bit_identity(d)            # B divisible by D
@@ -460,5 +627,7 @@ def selftest() -> None:  # pragma: no cover - exercised via subprocess
 if __name__ == "__main__":
     import sys
 
-    if "--selftest" in sys.argv:
+    if "--selftest-pod" in sys.argv:
+        _selftest_pod()
+    elif "--selftest" in sys.argv:
         selftest()

@@ -75,12 +75,21 @@ def make_production_batch_mesh(
     return jax.make_mesh(shape, axes, **axis_types_kwargs(len(axes)))
 
 
-def make_test_production_batch_mesh():
+def make_test_production_batch_mesh(*, multi_pod: bool = False):
     """The 8-device (2 × 2 × 2) batch × data × model mesh every multi-device
     serving selftest runs under (subprocesses forced to 8 host devices via
     XLA_FLAGS): the smallest mesh that exercises the full composed-axis
     placement of :func:`make_production_batch_mesh` — admission pool and
-    decode slots sharded over ``batch``, model over data × model."""
+    decode slots sharded over ``batch``, model over data × model.
+
+    ``multi_pod=True`` reshapes the same 8 devices to the 4-axis
+    (2 × 2 × 2 × 1) ``batch × pod × data × model`` mesh — the smallest mesh
+    with a real ``pod`` axis, which the cross-pod block-stealing selftest
+    (``python -m repro.core.sharded_batch --selftest-pod``, DESIGN.md §14.1)
+    runs its steal collectives over."""
+    if multi_pod:
+        return make_production_batch_mesh(
+            multi_pod=True, batch=2, data=2, model=1)
     return make_production_batch_mesh(batch=2, data=2, model=2)
 
 

@@ -47,7 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.host_queue import HybridKQueue
+from repro.core.host_queue import HybridKQueue, MultiQueue
 from repro.models import decode_step, init_cache, prefill
 
 
@@ -174,6 +174,14 @@ class ServeEngine:
     Both use the deterministic min-index spy so the two planes are
     interchangeable mid-deployment.
 
+    ``admission_policy="multiqueue"`` (DESIGN.md §14.2) swaps the admission
+    structure for the sampled MultiQueue on both eager planes — pushes route
+    to a (priority, uid)-hashed home place, pops sample c=2 places, no
+    global top-k at all — with host (``host_queue.MultiQueue``) and device
+    (``StreamingAdmitter(policy="multiqueue")``) bit-identical
+    (tests/test_multiqueue.py). The fused step modes and preemption keep
+    HYBRID admission (the sampled pop has no peek contract).
+
     ``mesh``: shard the decode-cache slot axis over the mesh's ``batch``
     axis (§8) — with a composed ``make_production_batch_mesh`` the admission
     pool co-locates with the decode slots it feeds.
@@ -200,6 +208,7 @@ class ServeEngine:
         k: int = 4,
         mesh=None,
         admission: str = "host",
+        admission_policy: str = "hybrid",
         admission_capacity: int = 256,
         step: Optional[str] = None,
         step_chunk: int = 1,
@@ -233,6 +242,24 @@ class ServeEngine:
             admission = step
         elif step not in ("fused", "continuous"):
             raise ValueError(f"unknown step mode: {step!r}")
+        if admission_policy not in ("hybrid", "multiqueue"):
+            raise ValueError(
+                f"unknown admission policy: {admission_policy!r}")
+        if admission_policy == "multiqueue":
+            # the sampled pop has no peek-then-pop front contract: the fused
+            # planes' in-trace preempt/fill path and the eager preemption
+            # rounds both peek before popping, so MQ admission is
+            # eager-host/eager-device only (ROADMAP follow-up: fused MQ)
+            if step in ("fused", "continuous"):
+                raise ValueError(
+                    "admission_policy='multiqueue' supports only the eager "
+                    "step modes ('host'/'device'); the fused planes fold "
+                    "with HYBRID publish replay")
+            if preemption != "off":
+                raise ValueError(
+                    "admission_policy='multiqueue' is incompatible with "
+                    "preemption: the sampled pop has no peek")
+        self.admission_policy = admission_policy
         self.step_mode = step
         self.step_chunk = step_chunk
         self.admission = admission
@@ -244,15 +271,19 @@ class ServeEngine:
         if step in ("fused", "continuous"):
             self.queue = None        # installed after caches exist, below
         elif admission == "host":
-            # min-index spy: pins the same victim choice as the device plane
-            # so "host" stays the bit-exact equivalence oracle (DESIGN.md §9)
-            self.queue = HybridKQueue(frontends, k, spy="min_index")
+            if admission_policy == "multiqueue":
+                self.queue = MultiQueue(frontends, k)
+            else:
+                # min-index spy: pins the same victim choice as the device
+                # plane so "host" stays the bit-exact equivalence oracle
+                # (DESIGN.md §9)
+                self.queue = HybridKQueue(frontends, k, spy="min_index")
         elif admission == "device":
             from repro.serve.streaming import StreamingAdmitter
 
             self.queue = StreamingAdmitter(
                 frontends, k, capacity=admission_capacity, mesh=mesh,
-                retain=preemption == "margin")
+                retain=preemption == "margin", policy=admission_policy)
         else:
             raise ValueError(f"unknown admission plane: {admission!r}")
         self.frontends = frontends

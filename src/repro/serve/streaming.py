@@ -275,6 +275,7 @@ def _jitted_fold_places(k: int) -> _JitHolder:
 _jitted_buffer_push = jax.jit(buffer_push, donate_argnums=(0,))
 _jitted_stream_pop = jax.jit(kp.stream_pop, donate_argnums=(0,))
 _jitted_stream_peek = jax.jit(kp.stream_peek, donate_argnums=(0,))
+_jitted_stream_pop_mq = jax.jit(kp.stream_pop_mq, donate_argnums=(0,))
 
 
 def _jitted_repush(k: int) -> _JitHolder:
@@ -452,6 +453,18 @@ class StreamingAdmitter:
     with its original priority — the re-queue half of decode-slot
     preemption. With ``retain`` the pool capacity therefore bounds
     submitted-plus-running requests, not just the queued backlog.
+
+    ``policy="multiqueue"`` (DESIGN.md §14.2) swaps the admission structure
+    for the MultiQueue: a push routes to the (priority, uid)-HASHED home
+    place (the ``place`` argument is ignored by design — computed host-side
+    with ``kpriority.mq_place_host``, bit-identical to the traced hash),
+    and a pop samples c=2 places from the instance's pop-attempt counter
+    (:func:`kpriority.stream_pop_mq`; misses advance the counter too) with
+    NO global top-k or fallback. Bit-identical to ``host_queue.MultiQueue``
+    on any trace (tests/test_multiqueue.py). The sampled pop has no
+    peek-then-pop front contract, so ``retain``/:meth:`peek`/:meth:`repush`
+    (the preemption plane) are unavailable — ``ServeEngine`` rejects the
+    combination up front.
     """
 
     #: aggregating ledger over per-instance dispatch counters — benchmarks
@@ -469,9 +482,18 @@ class StreamingAdmitter:
         buffer_cap: int = 64,
         mesh=None,
         retain: bool = False,
+        policy: str = "hybrid",
     ):
+        if policy not in ("hybrid", "multiqueue"):
+            raise ValueError(f"unknown admission policy: {policy!r}")
+        if policy == "multiqueue" and retain:
+            raise ValueError(
+                "policy='multiqueue' cannot retain pool slots: the sampled "
+                "pop has no peek-then-pop front, so the preemption plane "
+                "(the only retain user) is HYBRID-only")
         self.num_places = num_places
         self.k = k
+        self.policy = policy
         self.capacity = capacity
         self.buffer_cap = buffer_cap
         self.retain = retain
@@ -488,6 +510,7 @@ class StreamingAdmitter:
         self._running = {}                     # slot -> item (retain mode)
         self._next_slot = 0
         self._arrival = 0
+        self._pops = 0                         # MQ pop-attempt counter (§14.2)
         self._staged = [0] * num_places        # unfolded pushes (host mirror)
         self._unpub = [0] * num_places         # device unpub_pushes mirror
         self._push_fn = _jitted_buffer_push
@@ -498,6 +521,7 @@ class StreamingAdmitter:
         self._flush_fn = _jitted_fold(k, True)
         self._flush_place_fn = _jitted_fold_places(k)
         self._pop_fn = _jitted_stream_pop
+        self._pop_mq_fn = _jitted_stream_pop_mq
         self._peek_fn = _jitted_stream_peek
         self._repush_fn = _jitted_repush(k)
         self._dispatch_cell = type(self).dispatch_ledger.attach(self)
@@ -533,10 +557,17 @@ class StreamingAdmitter:
         """Stream one request into ``place``'s device buffer (lower priority
         value = admitted first, matching ``HybridKQueue.push``). ``k`` is
         accepted for signature parity but must equal the constructor's —
-        per-push k-override stays a host-queue-only feature."""
+        per-push k-override stays a host-queue-only feature. Under
+        ``policy="multiqueue"`` the ``place`` argument is ignored: the item
+        buffers into its HASHED home place (``kp.mq_place_host`` of the
+        f32-quantized priority and the arrival uid), exactly like
+        ``host_queue.MultiQueue.push``."""
         if k is not None and min(self.k, k) != self.k:
             raise ValueError("StreamingAdmitter folds with a fixed k; "
                              "per-push k overrides are host-queue-only")
+        if self.policy == "multiqueue":
+            place = kp.mq_place_host(
+                float(np.float32(priority)), self._arrival, self.num_places)
         if self._staged[place] >= self.buffer_cap:
             self.fold()
         slot = self._alloc_slot()
@@ -596,9 +627,19 @@ class StreamingAdmitter:
         """:meth:`pop` that also reports the popped pool slot — the handle
         the preemption plane needs for :meth:`repush`/:meth:`release`. In
         ``retain`` mode the slot stays reserved until one of those is
-        called; otherwise it frees immediately (today's behaviour)."""
-        self.pool, slot, prio, valid = self._pop_fn(
-            self.pool, jnp.int32(place))
+        called; otherwise it frees immediately (today's behaviour). Under
+        ``policy="multiqueue"`` the ``place`` argument is ignored — the pop
+        samples c=2 places from the instance's attempt counter, which
+        advances on EVERY attempt (misses included, like
+        ``MultiQueue.pop``)."""
+        if self.policy == "multiqueue":
+            t = self._pops
+            self._pops += 1
+            self.pool, slot, prio, valid = self._pop_mq_fn(
+                self.pool, jnp.uint32(t))
+        else:
+            self.pool, slot, prio, valid = self._pop_fn(
+                self.pool, jnp.int32(place))
         self._count()
         if not bool(valid):
             return None
@@ -614,6 +655,10 @@ class StreamingAdmitter:
         without popping — the ``HybridKQueue.peek`` mirror
         (:func:`repro.core.kpriority.stream_peek`; spy refs persist either
         way, so peek-then-pop agrees with the host oracle, DESIGN.md §11)."""
+        if self.policy == "multiqueue":
+            raise RuntimeError(
+                "MULTIQUEUE has no peek: the sampled pop commits to the "
+                "c=2 draw, so there is no stable front to preview")
         self.pool, _slot, prio, valid = self._peek_fn(
             self.pool, jnp.int32(place))
         self._count()
@@ -627,6 +672,9 @@ class StreamingAdmitter:
         (DESIGN.md §11). Immediate (not buffered): callers re-queue between
         a fold and the next step's pushes, so buffers are drained and the
         push order matches the host queue's call order."""
+        if self.policy == "multiqueue":
+            raise RuntimeError("repush is part of the preemption plane, "
+                               "which is HYBRID-only (no MQ peek)")
         if sum(self._staged) != 0:
             raise RuntimeError(
                 "repush with undrained buffers would reorder publish-on-k "

@@ -3,6 +3,11 @@
 Every ``repro.*`` module named in the README module map must import, every
 ``examples/*.py`` and ``benchmarks/*`` path it mentions must exist, and every
 fenced shell block's ``make`` targets must exist in the Makefile.
+
+ISSUE 8 adds the policy-table gate: the ``kpriority`` module docstring's
+policy table is RENDERED from ``POLICY_TABLE`` (one row per ``Policy``
+member) at import time, and README/DESIGN must carry a row per policy —
+a new enum member cannot land without docs.
 """
 import importlib
 import pathlib
@@ -41,6 +46,37 @@ def test_readme_make_targets_exist():
     }
     for t in set(re.findall(r"make ([\w-]+)", README)):
         assert t in targets, f"README names unknown make target {t}"
+
+
+def test_kpriority_policy_table_rendered_from_enum():
+    """The docstring table is generated, complete, and consistent: the
+    ``<<POLICY_TABLE>>`` marker is gone from the rendered ``__doc__``,
+    every ``Policy`` member appears by name, ``POLICY_TABLE`` has exactly
+    one row per member, and each row's ρ string agrees with
+    ``rho_bound`` (finite strings ↔ finite bounds)."""
+    from repro.core import kpriority as kp
+
+    assert kp.__doc__ is not None
+    assert "<<POLICY_TABLE>>" not in kp.__doc__, "table was not rendered"
+    rendered = kp.format_policy_table()
+    assert rendered in kp.__doc__, "docstring table drifted from the enum"
+    assert set(kp.POLICY_TABLE) == set(kp.Policy), "row set != enum"
+    for pol in kp.Policy:
+        assert pol.name in kp.__doc__, f"{pol.name} missing from docstring"
+        _rule, rho_str = kp.POLICY_TABLE[pol]
+        finite = "∞" not in rho_str
+        assert (kp.rho_bound(pol, 3, 4) < float("inf")) is finite, pol
+
+
+def test_readme_and_design_cover_every_policy():
+    """One ρ-table row per policy in README AND a DESIGN.md mention — the
+    user-facing docs move in lockstep with the enum."""
+    from repro.core import kpriority as kp
+
+    design = (ROOT / "DESIGN.md").read_text()
+    for pol in kp.Policy:
+        assert pol.name in README, f"README lacks a {pol.name} row"
+        assert pol.name in design, f"DESIGN.md lacks a {pol.name} mention"
 
 
 def test_design_sections_referenced_in_code_exist():

@@ -10,8 +10,8 @@
   * step-chunk identity: the chunked scan equals step-by-step execution
     bit-for-bit, events and final carry alike,
   * the ρ/ignored-work bound holds through the fused chunked program for
-    ALL FOUR policies, and chunked == step-by-step for the generic
-    ``queue_phase_chunk`` program,
+    EVERY policy (``list(kp.Policy)`` — the enum is the table), and
+    chunked == step-by-step for the generic ``queue_phase_chunk`` program,
   * ``stream_pop_fill`` replicates the engine's stop-at-first-miss admit
     loop exactly (single and batched),
   * capacity-full raises like the eager plane; flush-after-chunk-boundary
@@ -32,7 +32,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import batched, kpriority as kp
-from repro.core.host_queue import HybridKQueue
+from repro.core.host_queue import HostPodQueues, HybridKQueue, MultiQueue
 from repro.serve.fused_step import TOY_VOCAB, toy_loop
 from repro.serve.streaming import StreamingAdmitter
 
@@ -359,8 +359,9 @@ def test_batched_stream_pop_fill_matches_loop():
 # invariants: ρ bound + chunk identity for the generic fused queue program
 # ---------------------------------------------------------------------------
 
-ALL_POLICIES = [kp.Policy.IDEAL, kp.Policy.CENTRALIZED, kp.Policy.HYBRID,
-                kp.Policy.WORK_STEALING]
+# ONE table for the policy-generic differentials: the enum itself, so a new
+# Policy member is parametrized into the chunk identity / ρ harness for free
+ALL_POLICIES = list(kp.Policy)
 
 
 def _chunk_inputs(seed, t, m, places):
@@ -383,8 +384,8 @@ def _chunk_inputs(seed, t, m, places):
 
 @pytest.mark.parametrize("policy", ALL_POLICIES)
 def test_queue_phase_chunk_rho_bound(policy):
-    """ignored ≤ rho at EVERY step of the fused chunked program, all four
-    policies (the in-trace ignored counter of queue_phase_chunk)."""
+    """ignored ≤ rho at EVERY step of the fused chunked program, every
+    policy (the in-trace ignored counter of queue_phase_chunk)."""
     t, m, places, k = 10, 48, 4, 3
     state = kp.init_pool(m, places)
     xs = _chunk_inputs(3, t, m, places)
@@ -394,7 +395,7 @@ def test_queue_phase_chunk_rho_bound(policy):
     )(state, *xs)
     rho = kp.rho_bound(policy, k, places)
     assert int(jnp.max(ignored)) <= rho or rho == float("inf")
-    if policy is not kp.Policy.WORK_STEALING:
+    if policy not in (kp.Policy.WORK_STEALING, kp.Policy.MULTIQUEUE):
         assert float(rho) < float("inf")
         np.testing.assert_array_less(np.asarray(ignored), rho + 1)
 
@@ -402,7 +403,7 @@ def test_queue_phase_chunk_rho_bound(policy):
 @pytest.mark.parametrize("policy", ALL_POLICIES)
 def test_queue_phase_chunk_identity(policy):
     """Chunked scan == step-by-step push/phase_pop, bit-for-bit: state,
-    per-step results, AND per-step ignored counts, for all four policies."""
+    per-step results, AND per-step ignored counts, for every policy."""
     t, m, places, k = 8, 40, 3, 2
     xs = _chunk_inputs(7, t, m, places)
     st_c = kp.init_pool(m, places)
@@ -1056,3 +1057,202 @@ def test_engine_preemption_matches_across_planes():
     assert run("device") == ref
     assert run("fused", 1) == ref
     assert run("fused", 3) == ref
+
+
+# ---------------------------------------------------------------------------
+# §14: pod-scale cross-pod block stealing — device plane vs HostPodQueues
+# ---------------------------------------------------------------------------
+
+def drive_pod_steal(seed, *, npods, k=3, n_push=4, margin=0.25,
+                    push_phases=10, max_phases=600):
+    """Single-process replay of the pod-steal plane (DESIGN.md §14.1): the
+    ``make_pod_engine`` all-gather becomes a manual stack over a list of
+    per-pod ``PodState``\\ s, the claim scan is ``kp.pod_steal_plan``
+    verbatim, and EVERY phase is compared against the ``HostPodQueues``
+    twin — fire/victim decisions, popped (prio, uid) streams, and full
+    sorted (prio, uid, block) state records. Ends with exactly-once drain.
+    Returns the number of fired steals (for trace-strength asserts)."""
+    block_cap = k + n_push
+    m = npods * n_push * push_phases + block_cap  # no pod can ever overflow
+    rng = np.random.default_rng(seed)
+    states = [kp.init_pod(m) for _ in range(npods)]
+    host = HostPodQueues(npods, k=k, block_cap=block_cap, margin=margin)
+    uid = 0
+    popped_uids, steals = [], 0
+    for phase in range(max_phases):
+        if phase < push_phases:
+            # uneven pushes across pods, collision-grid priorities: fronts
+            # diverge, so the margin test and the (prio, uid) tie-break on
+            # victim choice both carry weight
+            for p in range(npods):
+                n = int(rng.integers(0, n_push + 1))
+                prios = np.full(n_push, np.inf, np.float32)
+                uids = np.full(n_push, -1, np.int32)
+                items = []
+                for i in range(n):
+                    pr = float(np.float32(
+                        PRIO_GRID[rng.integers(len(PRIO_GRID))]))
+                    prios[i], uids[i] = pr, uid
+                    items.append((pr, uid))
+                    uid += 1
+                states[p] = kp.pod_push(
+                    states[p], jnp.asarray(prios), jnp.asarray(uids), k=k)
+                host.push(p, items)
+        # steal phase: the manual all-gather (headers, fronts, payloads are
+        # ALL pre-phase snapshots, exactly like the shard_map engine)
+        heads = [kp.pod_best_block(s) for s in states]
+        fronts = [kp.pod_front(s) for s in states]
+        pays = [kp.pod_extract_block(states[p], heads[p][3], block_cap)
+                for p in range(npods)]
+        fire, victim = kp.pod_steal_plan(
+            jnp.stack([h[0] for h in heads]),
+            jnp.stack([h[1] for h in heads]),
+            jnp.stack([h[2] for h in heads]),
+            jnp.stack([f[1] for f in fronts]),
+            jnp.stack([f[3] for f in fronts]),
+            margin=margin)
+        host_plan = {t: (v, pay) for (t, v, pay) in host.steal_phase()}
+        for p in range(npods):
+            assert bool(fire[p]) == (p in host_plan), (phase, p)
+            if bool(fire[p]):
+                assert int(victim[p]) == host_plan[p][0], (phase, p)
+        for p in range(npods):                      # victims lose their block
+            if any(bool(fire[t]) and int(victim[t]) == p
+                   for t in range(npods)):
+                states[p] = kp.pod_remove_block(states[p], heads[p][3])
+        for p in range(npods):                      # thieves splice payloads
+            if bool(fire[p]):
+                v = int(victim[p])
+                states[p] = kp.pod_insert_block(states[p], *pays[v])
+                steals += 1
+        for p in range(npods):                      # one pop per pod
+            states[p], pr, u, valid = kp.pod_pop(states[p])
+            got = (float(pr), int(u)) if bool(valid) else None
+            assert got == host.pop(p), (phase, p)
+            if got is not None:
+                popped_uids.append(got[1])
+        for p in range(npods):                      # full state records
+            su = np.asarray(states[p].uid)
+            live = su >= 0
+            recs = sorted(zip(
+                np.asarray(states[p].prio)[live].tolist(),
+                su[live].tolist(),
+                np.asarray(states[p].block)[live].tolist()))
+            assert recs == host.snapshot(p), (phase, p)
+        if phase >= push_phases and len(host) == 0:
+            break
+    assert len(host) == 0, "pods failed to drain"
+    assert sorted(popped_uids) == list(range(uid)), "not exactly-once"
+    return steals
+
+
+@pytest.mark.parametrize("npods,k,margin", [
+    (2, 3, 0.25), (3, 2, 0.0), (4, 1, 0.5)])
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_pod_steal_matches_host_twin(npods, k, margin, seed):
+    """ISSUE 8 acceptance core, host half: the pod-steal plane is
+    bit-identical to HostPodQueues on random traces — decisions, pop
+    streams, records, exactly-once — incl. margin = 0 tie edges and k = 1
+    single-item blocks. (The shard_map half is the 8-device selftest in
+    tests/test_sharded_batch.py.)"""
+    drive_pod_steal(seed, npods=npods, k=k, margin=margin)
+
+
+def test_pod_steal_fires_and_is_block_granular():
+    """Deterministic scenario: an empty pod steals the victim's best
+    published block WHOLE (arXiv 1305.6474 — block, not item, granularity),
+    the host twin fires identically, and the spliced block is re-published
+    under the thief (stealable onward as a unit)."""
+    k, cap, margin = 2, 4, 0.0
+    states = [kp.init_pod(16), kp.init_pod(16)]
+    host = HostPodQueues(2, k=k, block_cap=cap, margin=margin)
+    p = jnp.asarray([0.5, 0.25], jnp.float32)
+    u = jnp.asarray([0, 1], jnp.int32)
+    states[1] = kp.pod_push(states[1], p, u, k=k)   # publishes block 0
+    host.push(1, [(0.5, 0), (0.25, 1)])
+    heads = [kp.pod_best_block(s) for s in states]
+    fronts = [kp.pod_front(s) for s in states]
+    fire, victim = kp.pod_steal_plan(
+        jnp.stack([h[0] for h in heads]), jnp.stack([h[1] for h in heads]),
+        jnp.stack([h[2] for h in heads]),
+        jnp.stack([f[1] for f in fronts]), jnp.stack([f[3] for f in fronts]),
+        margin=margin)
+    assert [bool(x) for x in fire] == [True, False]
+    assert int(victim[0]) == 1
+    assert host.steal_phase() == [(0, 1, [(0.25, 1), (0.5, 0)])]
+    pay = kp.pod_extract_block(states[1], heads[1][3], cap)
+    states[1] = kp.pod_remove_block(states[1], heads[1][3])
+    states[0] = kp.pod_insert_block(states[0], *pay)
+    assert int(jnp.sum(states[0].uid >= 0)) == 2    # whole block moved
+    assert int(jnp.sum(states[1].uid >= 0)) == 0
+    hp, hu, has, _ = kp.pod_best_block(states[0])
+    assert bool(has) and float(hp) == 0.25 and int(hu) == 1
+    for pod in (0, 1):
+        su = np.asarray(states[pod].uid)
+        live = su >= 0
+        recs = sorted(zip(np.asarray(states[pod].prio)[live].tolist(),
+                          su[live].tolist(),
+                          np.asarray(states[pod].block)[live].tolist()))
+        assert recs == host.snapshot(pod), pod
+
+
+@pytest.mark.slow
+def test_pod_steal_fuzz_soak():
+    """Pod-steal fuzz soak (slow; nightly CI raises SOAK_SEEDS): the full
+    phase-by-phase differential with randomized (npods, k, n_push, margin,
+    push_phases) per seed."""
+    for seed in _soak_seeds(6):
+        try:
+            rng = np.random.default_rng(seed * 101 + 13)
+            drive_pod_steal(
+                seed,
+                npods=int(rng.integers(2, 6)),
+                k=int(rng.integers(1, 5)),
+                n_push=int(rng.integers(1, 6)),
+                margin=float(np.float32(
+                    [0.0, 0.25, 0.5, 1.0][rng.integers(4)])),
+                push_phases=int(rng.integers(6, 13)))
+        except Exception as e:
+            _dump_soak_repro("test_pod_steal_fuzz_soak", seed, e)
+            raise AssertionError(
+                f"pod-steal soak failed at seed={seed}") from e
+
+
+@pytest.mark.slow
+def test_multiqueue_fuzz_soak():
+    """MULTIQUEUE fuzz soak: StreamingAdmitter(policy="multiqueue") vs the
+    host MultiQueue over long interleaved push/pop traces with randomized
+    (places, k) per seed — every pop (hits AND misses), the pop-attempt
+    counters, and the final drain compared bit-for-bit. places = 1 pins the
+    degenerate both-samples-same-queue edge."""
+    for seed in _soak_seeds(6):
+        try:
+            rng = np.random.default_rng(seed * 77 + 5)
+            places = int(rng.integers(1, 7))
+            k = int(rng.integers(0, 4))
+            dev = StreamingAdmitter(places, k, capacity=512,
+                                    policy="multiqueue")
+            host = MultiQueue(places, k)
+            uid = 0
+            for _phase in range(40):
+                for _ in range(int(rng.integers(0, 6))):
+                    place = int(rng.integers(places))
+                    pr = float(np.float32(
+                        PRIO_GRID[rng.integers(len(PRIO_GRID))]))
+                    dev.push(place, pr, uid)
+                    host.push(place, pr, uid)
+                    uid += 1
+                dev.flush()                 # MQ visibility is fold-granular
+                for _ in range(int(rng.integers(0, 4))):
+                    assert dev.pop(0) == host.pop(0)
+            budget = 200 * places + 1000    # sampled drain: misses are legal
+            while len(host) and budget:
+                assert dev.pop(0) == host.pop(0)
+                budget -= 1
+            assert len(host) == 0 and len(dev) == 0, "failed to drain"
+            assert dev._pops == host.pop_attempts
+        except Exception as e:
+            _dump_soak_repro("test_multiqueue_fuzz_soak", seed, e)
+            raise AssertionError(
+                f"multiqueue soak failed at seed={seed}") from e

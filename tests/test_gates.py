@@ -59,6 +59,14 @@ def good_slo():
              "oracle_identical": True}]
 
 
+def good_multiqueue():
+    return [{"structure": "hybrid", "P": 16, "k": 4},
+            {"structure": "multiqueue", "P": 16, "k": 0},
+            {"structure": "rank_probe", "P": 16, "pushes": 600,
+             "mean_rank": 2.4, "max_rank": 21, "rank_bound": 48,
+             "oracle_identical": True}]
+
+
 CASES = [
     ("fused_step:dispatches", "BENCH_fused_step.json", good_fused_step,
      [lambda r: r[1].__setitem__("dispatches_per_step", 4.0)]),
@@ -74,6 +82,11 @@ CASES = [
       lambda r: r[1]["max_wait_by_class"].__setitem__("batch", 81),
       lambda r: r[0]["max_wait_by_class"].__setitem__("batch", 80),
       lambda r: r[1].__setitem__("oracle_identical", False)]),
+    ("multiqueue:rank", "BENCH_multiqueue.json", good_multiqueue,
+     [lambda r: r[2].__setitem__("mean_rank", 49.0),
+      lambda r: r[2].__setitem__("oracle_identical", False),
+      lambda r: r.pop(2),                  # rank probe row vanished
+      lambda r: r.pop(1)]),                # multiqueue sweep row vanished
 ]
 
 

@@ -5,7 +5,14 @@ preserve (ISSUE 1): for every Policy × random phase traces,
     at every phase (structural ρ-relaxation, paper §5.3),
   * exactly-once pop — no slot is popped twice while active, and every
     pushed task is eventually popped,
-  * progress — at least one pop per phase while tasks are active.
+  * progress — at least one pop per phase while tasks are active
+    (MULTIQUEUE excepted: a phase where every place's c=2 sample misses
+    the nonempty queues is legal — the structure trades per-phase progress
+    for zero global coordination, so only eventual drain is asserted).
+
+The policy list is ``list(kp.Policy)`` — the enum IS the table, so a new
+policy is parametrized into every invariant here (and into the
+differential harness of tests/test_fused_step.py) the moment it lands.
 
 Runs against the default (fused) arbitration; ``test_kpriority.py`` covers
 the same invariants through its own traces, and ``test_batched.py`` pins
@@ -19,12 +26,12 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import kpriority as kp
 
-ALL_POLICIES = [
-    kp.Policy.IDEAL,
-    kp.Policy.CENTRALIZED,
-    kp.Policy.HYBRID,
-    kp.Policy.WORK_STEALING,
-]
+# ONE table for every policy-generic test: the Policy enum itself
+ALL_POLICIES = list(kp.Policy)
+
+#: policies whose phase plane may legally pop nothing while work is live
+#: (sampled visibility can miss every nonempty queue for a phase)
+SAMPLED_POLICIES = {kp.Policy.MULTIQUEUE}
 
 
 def run_trace(policy, k, num_places, seed, *, m=48, push_phases=5):
@@ -34,7 +41,10 @@ def run_trace(policy, k, num_places, seed, *, m=48, push_phases=5):
     key = jax.random.PRNGKey(seed)
     popped, violations = [], []
     live = set()
-    phase, max_phases = 0, push_phases + m + 8
+    sampled = policy in SAMPLED_POLICIES
+    phase = 0
+    # sampled policies drain probabilistically — give them headroom
+    max_phases = push_phases + m + 8 + (6 * m if sampled else 0)
     while phase < max_phases:
         if phase < push_phases:
             mask = np.zeros(m, bool)
@@ -67,7 +77,7 @@ def run_trace(policy, k, num_places, seed, *, m=48, push_phases=5):
             if bool(res.valid[i]):
                 popped.append(int(res.slot[i]))
                 n_popped += 1
-        if int(jnp.sum(before.active)) > 0:
+        if int(jnp.sum(before.active)) > 0 and not sampled:
             assert n_popped >= 1, f"progress violated at phase {phase}"
         phase += 1
         if phase >= push_phases and int(jnp.sum(state.active)) == 0:
@@ -79,7 +89,7 @@ def run_trace(policy, k, num_places, seed, *, m=48, push_phases=5):
 @settings(max_examples=6, deadline=None)
 @given(seed=st.integers(0, 10_000), k=st.integers(1, 6))
 def test_rho_bound_and_exactly_once(policy, seed, k):
-    """Acceptance: ignored_count <= rho_bound for all four policies, plus
+    """Acceptance: ignored_count <= rho_bound for EVERY policy, plus
     exactly-once pop, over random traces."""
     popped, live, violations, state = run_trace(policy, k, 4, seed)
     assert not violations, f"rho violations: {violations}"
@@ -108,7 +118,10 @@ def test_underfull_pool_drains_with_bounded_ignorance(policy):
     )
     key = jax.random.PRNGKey(0)
     popped = []
-    for _ in range(4):
+    # sampled pops can miss for whole phases — "a couple of phases" only
+    # holds for the deterministic-visibility policies
+    budget = 120 if policy in SAMPLED_POLICIES else 4
+    for _ in range(budget):
         key, sub = jax.random.split(key)
         before = state
         state, res = kp.phase_pop(
@@ -127,12 +140,18 @@ def test_underfull_pool_drains_with_bounded_ignorance(policy):
 
 
 def test_rho_bound_table():
-    """DESIGN.md §2 table: the four policies' structural ρ bounds."""
+    """DESIGN.md §2/§14.2 table: every policy's structural ρ bound — and
+    completeness: rho_bound answers for every enum member."""
     P, k = 8, 16
     assert kp.rho_bound(kp.Policy.IDEAL, k, P) == 0
     assert kp.rho_bound(kp.Policy.CENTRALIZED, k, P) == k
     assert kp.rho_bound(kp.Policy.HYBRID, k, P) == P * k
     assert kp.rho_bound(kp.Policy.WORK_STEALING, k, P) == float("inf")
+    # MULTIQUEUE: structurally unbounded (the probabilistic O(P) expected
+    # rank is pinned by benchmarks --only multiqueue, not by rho_bound)
+    assert kp.rho_bound(kp.Policy.MULTIQUEUE, k, P) == float("inf")
+    for pol in kp.Policy:
+        assert kp.rho_bound(pol, k, P) >= 0
 
 
 def test_common_visibility_is_intersection():
@@ -142,6 +161,7 @@ def test_common_visibility_is_intersection():
     for policy, k in [
         (kp.Policy.IDEAL, 2), (kp.Policy.CENTRALIZED, 3),
         (kp.Policy.HYBRID, 2), (kp.Policy.WORK_STEALING, 1),
+        (kp.Policy.MULTIQUEUE, 2),
     ]:
         state = kp.init_pool(m, places)
         key = jax.random.PRNGKey(1)

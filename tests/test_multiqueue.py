@@ -1,0 +1,217 @@
+"""MULTIQUEUE admission (ISSUE 8 tentpole b, DESIGN.md §14.2): the sampled
+c=2 relaxed priority queue from "Multi-Queues Can Be State-of-the-Art
+Priority Schedulers", as a fifth ``kp.Policy`` wired through every eager
+serving plane. Pins
+
+  * hash parity — the traced ``mq_place``/``mq_sample`` and their host
+    mirrors are the SAME uint32 arithmetic, bit-for-bit, over f32-collision
+    priority grids, the P = 1 degenerate, and long counter ranges (incl.
+    the distinct-second-sample shift),
+  * plane parity — ``StreamingAdmitter(policy="multiqueue")`` ==
+    ``host_queue.MultiQueue`` on interleaved push/pop traces: every pop
+    (hits AND misses), the pop-attempt counters, exactly-once drain,
+  * engine parity — ``ServeEngine(admission_policy="multiqueue")`` host ==
+    device on the real reduced model: admission order and token streams,
+  * the guard rails — MULTIQUEUE has no peek-then-pop front, so the fused /
+    continuous step modes, the preemption plane, ``retain``, ``peek`` and
+    ``repush`` are all rejected loudly, never silently misscheduled.
+
+The long-trace randomized soak lives with the other nightly soaks in
+tests/test_fused_step.py (``test_multiqueue_fuzz_soak``).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kpriority as kp
+from repro.core.host_queue import MultiQueue
+from repro.serve.streaming import StreamingAdmitter
+
+# same grid as test_fused_step: repeated values + pairs that collide after
+# f32 quantization, so hashed homes and (prio, uid) tie-breaks both matter
+PRIO_GRID = [0.0, 0.5, 1.0, 1.5, 0.1, 0.1 + 1e-12, 7.5, 7.5 + 1e-12]
+
+
+# ---------------------------------------------------------------------------
+# hash parity: traced == host mirrors, exactly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("places", [1, 2, 3, 5, 8])
+def test_mq_place_hash_parity(places):
+    prios = np.asarray(
+        [float(np.float32(p)) for p in PRIO_GRID] + [0.0, -1.5, 3e8],
+        np.float32)
+    uids = np.arange(len(prios), dtype=np.int32) * 7
+    dev = kp.mq_place(jnp.asarray(prios), jnp.asarray(uids), places)
+    for i in range(len(prios)):
+        want = kp.mq_place_host(float(prios[i]), int(uids[i]), places)
+        assert int(dev[i]) == want, (places, i)
+        assert 0 <= want < places
+    # f32-collision pair: same bits ⇒ home differs only through the uid term
+    a = kp.mq_place_host(float(np.float32(0.1)), 3, places)
+    b = kp.mq_place_host(float(np.float32(0.1 + 1e-12)), 3, places)
+    assert a == b
+
+
+@pytest.mark.parametrize("places", [1, 2, 3, 5, 8])
+def test_mq_sample_hash_parity_distinct_and_covering(places):
+    seen = set()
+    for t in range(600):
+        v1, v2 = kp.mq_sample_host(t, places)
+        d1, d2 = kp.mq_sample(jnp.uint32(t), places)
+        assert (int(d1), int(d2)) == (v1, v2), t
+        assert 0 <= v1 < places and 0 <= v2 < places
+        if places == 1:
+            assert (v1, v2) == (0, 0)
+        else:
+            assert v1 != v2, t   # c = 2 means two DISTINCT queues
+        seen.update((v1, v2))
+    # the counter hash must eventually sample every place — this is what
+    # makes the all-miss pop loop terminate (progress is eventual, §14.2)
+    assert seen == set(range(places))
+
+
+# ---------------------------------------------------------------------------
+# StreamingAdmitter(policy="multiqueue") == host MultiQueue
+# ---------------------------------------------------------------------------
+
+def _drive_pair(seed, places, k, *, phases=25):
+    """Interleaved push/pop differential; returns the two planes drained."""
+    rng = np.random.default_rng(seed)
+    dev = StreamingAdmitter(places, k, capacity=256, policy="multiqueue")
+    host = MultiQueue(places, k)
+    uid = 0
+    for _ in range(phases):
+        for _ in range(int(rng.integers(0, 5))):
+            place = int(rng.integers(places))
+            pr = float(np.float32(PRIO_GRID[rng.integers(len(PRIO_GRID))]))
+            dev.push(place, pr, uid)
+            host.push(place, pr, uid)
+            uid += 1
+        dev.flush()                     # device visibility is fold-granular
+        for _ in range(int(rng.integers(0, 4))):
+            assert dev.pop(0) == host.pop(0)
+    budget = 200 * places + 500
+    while len(host) and budget:
+        assert dev.pop(0) == host.pop(0)
+        budget -= 1
+    return dev, host, uid
+
+
+@pytest.mark.parametrize("places,k", [(1, 0), (2, 2), (3, 0), (5, 3)])
+@pytest.mark.parametrize("seed", [0, 7, 23])
+def test_streaming_admitter_matches_multiqueue(places, k, seed):
+    """Every pop agrees — value AND misses — and both planes drain with
+    identical pop-attempt counters (the counter is shared scheduler state:
+    a miss on one plane but not the other would desync every later
+    sample)."""
+    dev, host, _uid = _drive_pair(seed, places, k)
+    assert len(host) == 0 and len(dev) == 0, "failed to drain"
+    assert dev._pops == host.pop_attempts
+
+
+def test_multiqueue_exactly_once():
+    """No item is lost or duplicated through hash routing + sampled pops."""
+    places = 4
+    host = MultiQueue(places, 0)
+    n = 60
+    for uid in range(n):
+        host.push(0, float(np.float32(uid % 7)), uid)
+    got = []
+    budget = 200 * places
+    while len(host) and budget:
+        rec = host.pop()
+        if rec is not None:
+            got.append(rec[1])
+        budget -= 1
+    assert sorted(got) == list(range(n))
+
+
+def test_multiqueue_no_global_fallback():
+    """Both sampled queues empty ⇒ None, even while another queue holds
+    work — the structure's defining trade (no top-k, no global scan). The
+    shared pop counter is driven to a known-missing sample directly, so the
+    miss is deterministic, then to a hitting one to show the item was never
+    lost."""
+    places = 8
+    host = MultiQueue(places, 0)
+    host.push(0, 1.0, 0)            # internal uid 0
+    home = kp.mq_place_host(float(np.float32(1.0)), 0, places)
+    t_miss = next(t for t in range(10_000)
+                  if home not in kp.mq_sample_host(t, places))
+    host._pops = t_miss             # white-box: jump the shared counter
+    assert host.pop() is None       # miss despite a live item elsewhere
+    assert host.pop_attempts == t_miss + 1
+    assert len(host) == 1           # a miss never loses the item
+    t_hit = next(t for t in range(t_miss + 1, 20_000)
+                 if home in kp.mq_sample_host(t, places))
+    host._pops = t_hit
+    assert host.pop() == (1.0, 0)
+    assert len(host) == 0
+
+
+# ---------------------------------------------------------------------------
+# ServeEngine: host == device under MULTIQUEUE, on the real reduced model
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("frontends,k", [(2, 2), (3, 0)])
+def test_engine_multiqueue_host_matches_device(frontends, k):
+    from repro.configs import get_reduced
+    from repro.models import materialize, model_p
+    from repro.serve.engine import Request, ServeEngine
+
+    import jax
+
+    cfg = get_reduced("qwen3_1_7b")
+    params = materialize(jax.random.PRNGKey(0), model_p(cfg))
+    rng = np.random.default_rng(5)
+    reqs = [(i, rng.integers(0, cfg.vocab_size, 4 + i % 3).astype(np.int32),
+             int(rng.integers(2, 5)),
+             float(np.float32(PRIO_GRID[i % len(PRIO_GRID)])))
+            for i in range(7)]
+
+    def run(admission):
+        eng = ServeEngine(cfg, params, slots=2, max_len=48,
+                          frontends=frontends, k=k, admission=admission,
+                          admission_policy="multiqueue")
+        for (rid, toks, mn, pr) in reqs:
+            eng.submit(Request(rid=rid, tokens=toks, max_new=mn,
+                               priority=pr), frontend=rid % frontends)
+        eng.flush_frontends()
+        done = eng.run()
+        return eng.admission_log, {r.rid: r.out for r in done}
+
+    host_log, host_out = run("host")
+    dev_log, dev_out = run("device")
+    assert dev_log == host_log
+    assert dev_out == host_out
+    assert sorted(host_log) == [r[0] for r in reqs]   # everyone served
+
+
+# ---------------------------------------------------------------------------
+# guard rails: no silent misscheduling
+# ---------------------------------------------------------------------------
+
+def test_multiqueue_guards():
+    from repro.configs import get_reduced
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_reduced("qwen3_1_7b")
+    with pytest.raises(ValueError, match="unknown admission policy"):
+        StreamingAdmitter(2, 1, policy="lifo")
+    with pytest.raises(ValueError, match="retain"):
+        StreamingAdmitter(2, 1, retain=True, policy="multiqueue")
+    adm = StreamingAdmitter(2, 1, policy="multiqueue")
+    with pytest.raises(RuntimeError, match="no peek"):
+        adm.peek(0)
+    with pytest.raises(RuntimeError):
+        adm.repush(0, 0, 1.0)
+    with pytest.raises(ValueError, match="unknown admission policy"):
+        ServeEngine(cfg, None, admission_policy="nope")
+    for step in ("fused", "continuous"):
+        with pytest.raises(ValueError, match="eager"):
+            ServeEngine(cfg, None, step=step,
+                        admission_policy="multiqueue")
+    with pytest.raises(ValueError, match="preemption"):
+        ServeEngine(cfg, None, preemption="margin",
+                    admission_policy="multiqueue")

@@ -215,6 +215,22 @@ def test_sharded_selftest_8_devices():
     assert "SERVE_MESH_OK" in out.stdout, out.stdout[-500:]
 
 
+def test_pod_steal_selftest_8_devices():
+    """Pins the cross-pod block-stealing plane (ISSUE 8 tentpole) on the
+    4-axis multi-pod test mesh: steal decisions, pop streams, and full state
+    records bit-identical to the HostPodQueues twin, exactly-once at drain,
+    and at least one steal actually fired."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.core.sharded_batch", "--selftest-pod"],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert "POD_STEAL_OK" in out.stdout, (out.stdout[-500:],
+                                          out.stderr[-2000:])
+
+
 # ---------------------------------------------------------------------------
 # serve engine mesh= path (1-device mesh: placement-only smoke)
 # ---------------------------------------------------------------------------
