@@ -38,7 +38,8 @@ SECTIONS = {
     "fig3_simulation": 1, "fig4_scaling": 1, "fig5_ksweep": 1,
     "batched_speedup": 1, "sharded_speedup": 1, "admission": 1,
     "fused_step": 1, "preemption": 1, "continuous": 1, "slo": 1,
-    "multiqueue": 1, "relaxed_topk": 1, "flash_attention": 1, "roofline": 0,
+    "multiqueue": 1, "klsm": 1, "relaxed_topk": 1, "flash_attention": 1,
+    "roofline": 0,
 }
 
 
@@ -152,6 +153,23 @@ def _check_multiqueue(rows: list) -> str:
             "device == host oracle")
 
 
+def _check_klsm(rows: list) -> str:
+    sweep = [r for r in rows
+             if isinstance(r, dict) and r.get("structure") == "sweep"]
+    if not sweep:
+        raise AssertionError(f"no 'sweep' rows: {rows!r}")
+    deep = max(sweep, key=lambda r: r["capacity"])
+    # the deepest row carries the in-run host-identity verdict: the bench
+    # replayed one pop scan against the HostKLSM twin before timing
+    assert deep.get("oracle_identical") is True, rows
+    # the scaling claim: at deep capacity the level-front probe must not
+    # cost more than the flat O(M) pool scan it replaces
+    assert deep["klsm_us_per_pop"] <= deep["flat_us_per_pop"], rows
+    return (f"capacity {deep['capacity']} (L={deep['levels']}): klsm "
+            f"{deep['klsm_us_per_pop']}us/pop <= flat "
+            f"{deep['flat_us_per_pop']}us/pop; device == host twin")
+
+
 GATES: List[Gate] = [
     Gate(f"BENCH_{s}.json", f"{s}:wellformed", _wellformed(n),
          f"the {s} bench section emitted no usable rows")
@@ -175,6 +193,10 @@ GATES: List[Gate] = [
          "(mean popped rank above 3·P) or drifted from the host oracle — "
          "ρ is structurally unbounded, so this probabilistic row is the "
          "only quality gate the policy has (ISSUE 8 acceptance)"),
+    Gate("BENCH_klsm.json", "klsm:scaling", _check_klsm,
+         "the klsm level-store pop lost its deep-capacity win over the "
+         "flat O(M) pool scan, or the device plane drifted from the "
+         "HostKLSM twin in the bench's in-run replay (ISSUE 9 acceptance)"),
 ]
 
 

@@ -764,3 +764,103 @@ def multiqueue_section(n=800, p=0.5, places=16, graphs=2, ks=(4, 64),
         "us_per_call": round(wall * 1e6 / max(attempts, 1), 2),
     })
     return rows
+
+
+def klsm_section(capacities=(512, 2048, 8192, 16384), places=4, k=4,
+                 pops_per_dispatch=32, repeats=5):
+    """ISSUE 9: klsm level-store pop cost vs the flat O(M) scan, swept over
+    pool capacity (DESIGN.md §15).
+
+    Per capacity M the pool is filled to M published items, the level store
+    synced once, and a jitted ``lax.scan`` of ``pops_per_dispatch`` pops is
+    timed per dispatch for both planes — the flat ``stream_pop`` (argmin
+    over the whole [M] pool per pop) and ``klsm_pop`` (argmin over ≤ P·L
+    level heads + O(1) scatters). The flat cost grows with M; the klsm cost
+    tracks L = log2(M/K) and stays flat-to-sublinear — the tentpole's
+    scaling claim, which the ``klsm:scaling`` gate pins at the deepest
+    capacity.
+
+    Identity is asserted IN-RUN, not assumed: at the deepest capacity the
+    first scan's pops are replayed against the host twin (``HostKLSM``,
+    itself pinned to the flat ``HybridKQueue`` by tests/test_klsm.py) and
+    compared pop-for-pop — (priority, uid) both — before any timing row is
+    emitted."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import kpriority as kp
+    from repro.core.host_queue import HostKLSM
+
+    def fill(m):
+        rng = np.random.default_rng(17)
+        prios = (rng.integers(0, 64, size=m) / 8.0).astype(np.float32)
+        creators = (np.arange(m) % places).astype(np.int32)
+        pool = kp.init_pool(m, places)
+        pool = kp.push_batch(
+            pool, jnp.ones((m,), bool), jnp.asarray(prios),
+            jnp.asarray(creators), tie=jnp.arange(m, dtype=jnp.int32))
+        pool = kp.publish(pool, k=k, force=True)
+        return pool, prios, creators
+
+    b = pops_per_dispatch
+    pvec = jnp.arange(b, dtype=jnp.int32) % places
+
+    @jax.jit
+    def flat_pops(pool):
+        def body(pl, p):
+            pl, slot, prio, valid = kp.stream_pop(pl, p)
+            return pl, (slot, prio, valid)
+        return jax.lax.scan(body, pool, pvec)
+
+    @jax.jit
+    def klsm_pops(pool, store):
+        def body(c, p):
+            pl, st = c
+            pl, st, slot, prio, valid = kp.klsm_pop(pl, st, p)
+            return (pl, st), (slot, prio, valid)
+        return jax.lax.scan(body, (pool, store), pvec)
+
+    def timeit(fn, *args):
+        fn(*args)                                   # compile + warm
+        t0 = time.time()
+        for _ in range(repeats):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        return (time.time() - t0) * 1e6 / (repeats * b)
+
+    rows = []
+    deepest = max(capacities)
+    for m in sorted(capacities):
+        pool, prios, creators = fill(m)
+        store = kp.klsm_sync(pool, kp.klsm_init(m, places, k=k),
+                             batch_cap=m)
+        jax.block_until_ready(store)
+        big_k, levels, _, _, _ = kp.klsm_geometry(m, k)
+        us_flat = timeit(flat_pops, pool)
+        us_klsm = timeit(klsm_pops, pool, store)
+        row = {"fig": "klsm", "structure": "sweep", "capacity": m,
+               "P": places, "k": k, "levels": levels,
+               "pops_per_dispatch": b,
+               "flat_us_per_pop": round(us_flat, 3),
+               "klsm_us_per_pop": round(us_klsm, 3),
+               "us_per_call": round(us_klsm, 3)}
+        if m == deepest:
+            # in-run host identity at the deepest capacity: replay one
+            # scan's pops against the host twin, pop-for-pop
+            host = HostKLSM(places, k)
+            for uid in range(m):
+                host.push(int(creators[uid]), float(prios[uid]), uid)
+            for p in range(places):
+                host.flush(p)
+            (pool2, store2), (slots, pr, valid) = klsm_pops(pool, store)
+            identical = True
+            for i in range(b):
+                got = host.pop(int(pvec[i]))
+                ok = (bool(valid[i]) == (got is not None)
+                      and (got is None
+                           or (float(pr[i]) == got[0]
+                               and int(slots[i]) == got[1])))
+                identical = identical and ok
+            row["oracle_identical"] = bool(identical)
+        rows.append(row)
+    return rows

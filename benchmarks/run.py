@@ -99,6 +99,13 @@ def main() -> None:
             else ((4,) if args.smoke else (4, 64)),
             probe_pushes=2000 if args.full
             else (200 if args.smoke else 600)),
+        # deep-capacity pop-cost sweep: the klsm:scaling gate compares the
+        # two structures at the DEEPEST capacity, so keep the sweep's max
+        # meaningful even in smoke mode
+        "klsm": lambda: paper.klsm_section(
+            capacities=(65536, 16384, 8192, 2048, 512) if args.full
+            else ((2048, 512) if args.smoke else (16384, 8192, 2048, 512)),
+            repeats=2 if args.smoke else 5),
         "relaxed_topk": (
             (lambda: kernels_bench.bench_relaxed_topk(n=1 << 13, p=64,
                                                       cs=(64, 8)))

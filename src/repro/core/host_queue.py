@@ -150,6 +150,152 @@ class HybridKQueue:
         return len(self._local[place])
 
 
+class HostKLSM:
+    """Sequential host twin of the hierarchical k-LSM published store
+    (DESIGN.md §15; device side ``kpriority.klsm_*``): per-place geometric
+    sorted-run levels (capacities K·2^l, K = max(k, 1)) with
+    merge-on-overflow, publish-on-k local lists, level-head front probing,
+    and the deterministic min-index spy. Pop streams are bit-identical to
+    ``HybridKQueue(spy="min_index")`` — the storage layout changes, the
+    HYBRID visibility semantics do not — and to the device klsm plane
+    (tests/test_klsm.py drives all three). API is ``HybridKQueue``-drop-in
+    (push/flush/pop/peek/len/pending)."""
+
+    def __init__(self, num_places: int, k: int, spy: str = "min_index",
+                 aging_rate: float = 0.0):
+        if spy != "min_index":
+            raise ValueError(
+                "HostKLSM mirrors the deterministic device plane; only "
+                "spy='min_index' is defined")
+        if aging_rate < 0:
+            raise ValueError("aging_rate must be >= 0")
+        self.num_places = num_places
+        self.k = k
+        self._cap0 = max(k, 1)
+        self.aging_rate = float(aging_rate)
+        self._counter = itertools.count()
+        self._local: List[List[tuple]] = [[] for _ in range(num_places)]
+        # levels[p][l] = (run, head): run a (prio, uid)-sorted list, live
+        # region run[head:] — a level entry dies ONLY by being popped as
+        # the selected front (head += 1), the device invariant
+        self._levels: List[List[list]] = [[] for _ in range(num_places)]
+        self._spy: List[List[tuple]] = [[] for _ in range(num_places)]
+        self._taken = set()
+        self._published = set()
+        self._items = {}
+
+    # ------------------------------------------------------------------ push
+    def push(self, place: int, priority: float, item: Any,
+             k: Optional[int] = None, now: Optional[int] = None):
+        """Lower priority value = popped first; ``now`` arms aging exactly
+        as on :class:`HybridKQueue`."""
+        if self.aging_rate > 0 and now is not None:
+            from repro.core.kpriority import aged_key
+
+            priority = aged_key(priority, now, self.aging_rate)
+        uid = next(self._counter)
+        self._items[uid] = item
+        self._local[place].append((priority, uid, place))
+        k_eff = self.k if k is None else min(self.k, k)
+        if len(self._local[place]) >= k_eff:
+            self._publish(place)
+
+    def _publish(self, place: int):
+        run = sorted((p, u) for (p, u, _pl) in self._local[place]
+                     if u not in self._taken)
+        self._published.update(u for (_p, u) in run)
+        self._local[place].clear()
+        if run:
+            self._insert_run(place, run)
+
+    def _insert_run(self, place: int, carry: list):
+        """Merge-on-overflow cascade: level l absorbs when its live run +
+        carry fit in K·2^l, else it spills (carry ← merge(carry, live),
+        level cleared); a fresh deepest level is appended whenever the
+        cascade runs off the end (the host analogue of the device's
+        force-absorbing top level)."""
+        levels = self._levels[place]
+        for lvl in range(len(levels) + 1):
+            if lvl == len(levels):
+                levels.append([sorted(carry), 0])
+                return
+            cap = self._cap0 << lvl
+            run, head = levels[lvl]
+            live = run[head:]
+            if len(live) + len(carry) <= cap:
+                levels[lvl] = [sorted(live + carry), 0]
+                return
+            carry = sorted(live + carry)
+            levels[lvl] = [[], 0]
+
+    def flush(self, place: int):
+        """Make all of a place's items globally visible."""
+        self._publish(place)
+
+    # ------------------------------------------------------------------- pop
+    def _candidates(self, place: int):
+        """Level heads of every place (the published front) + ``place``'s
+        live local run + its live spy refs, as (prio, uid, kind) where
+        kind identifies the head to advance on pop."""
+        cands = []
+        for q in range(self.num_places):
+            for lvl, (run, head) in enumerate(self._levels[q]):
+                if head < len(run):
+                    cands.append((run[head], ("head", q, lvl)))
+        for rec in self._local[place]:
+            if rec[1] not in self._taken:
+                cands.append(((rec[0], rec[1]), ("ref",)))
+        for (p, u) in self._spy[place]:
+            if u not in self._taken and u not in self._published:
+                cands.append(((p, u), ("ref",)))
+        return cands
+
+    def _front(self, place: int):
+        """Shared selection of pop/peek (peek-then-pop cannot disagree).
+        Empty visible set ⇒ deterministic min-index spy: acquire the
+        victim's live local run as the new persistent spy run (all prior
+        refs are dead when the set is empty, so replace == accumulate)."""
+        cands = self._candidates(place)
+        if not cands:
+            victims = [
+                p for p in range(self.num_places)
+                if p != place
+                and any(r[1] not in self._taken for r in self._local[p])
+            ]
+            if not victims:
+                return None
+            v = victims[0]
+            self._spy[place] = [
+                (r[0], r[1]) for r in self._local[v]
+                if r[1] not in self._taken]
+            cands = self._candidates(place)
+        return min(cands)
+
+    def pop(self, place: int) -> Optional[Tuple[float, Any]]:
+        got = self._front(place)
+        if got is None:
+            return None
+        (prio, uid), kind = got
+        if kind[0] == "head":
+            _, q, lvl = kind
+            self._levels[q][lvl][1] += 1
+        self._taken.add(uid)
+        return prio, self._items.pop(uid)
+
+    def peek(self, place: int) -> Optional[float]:
+        """Priority the next ``pop(place)`` would return; spy refs acquired
+        while peeking persist (DESIGN.md §11)."""
+        got = self._front(place)
+        return None if got is None else got[0][0]
+
+    # --------------------------------------------------------------- queries
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def pending(self, place: int) -> int:
+        return len(self._local[place])
+
+
 class MultiQueue:
     """Sequential host-side MultiQueue — the ``Policy.MULTIQUEUE`` oracle
     (DESIGN.md §14.2, from "Multi-Queues Can Be State-of-the-Art Priority

@@ -255,9 +255,15 @@ def push_batch(
 
     creator = jnp.where(mask, creators.astype(jnp.int32), state.creator)
     num_places = state.unpub_pushes.shape[0]
-    counts = jnp.zeros((num_places,), jnp.int32).at[
-        jnp.where(mask, creator, 0)
-    ].add(mask.astype(jnp.int32))
+    zeros = jnp.zeros((num_places,), jnp.int32)
+    counts = zeros.at[jnp.where(mask, creator, 0)].add(mask.astype(jnp.int32))
+    # Overwriting a still-unpublished active slot (eager dead-task
+    # elimination) replaces one unpublished item with another: the old
+    # creator's counter must come back down or it drifts past the ≤ k−1
+    # structural invariant and publishes early vs the host oracle.
+    was_unpub = mask & state.active & ~state.published
+    dec = zeros.at[jnp.where(was_unpub, state.creator, 0)].add(
+        was_unpub.astype(jnp.int32))
 
     return PoolState(
         prio=jnp.where(mask, prios, state.prio),
@@ -265,7 +271,7 @@ def push_batch(
         creator=creator,
         seq=jnp.where(mask, new_seq, state.seq),
         published=jnp.where(mask, False, state.published),
-        unpub_pushes=state.unpub_pushes + counts,
+        unpub_pushes=state.unpub_pushes + counts - dec,
         next_seq=state.next_seq + n_new,
         # a re-pushed slot is a NEW task: stale spy refs die with the old one
         spied=jnp.where(mask[None, :], False, state.spied),
@@ -1261,3 +1267,439 @@ def pod_steal_plan(
 
     _, (fire, victim) = jax.lax.scan(claim, claimed0, pods)
     return fire, victim
+
+
+# ---------------------------------------------------------------------------
+# hierarchical k-LSM published storage (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+_SEQ_MAX = jnp.iinfo(jnp.int32).max
+
+
+class KlsmState(NamedTuple):
+    """Level-structured published store riding ALONGSIDE :class:`PoolState`
+    (DESIGN.md §15) — the "k-LSM" half of arXiv 1503.05698 in fixed-shape
+    functional form. Each place keeps L sorted levels of geometrically
+    growing logical capacity c_l = K·2^l (K = max(k, 1)), packed into one
+    flat row of width W = K·(2^L − 1); level l occupies the STATIC slice
+    ``[K·(2^l − 1), K·(2^l − 1) + c_l)``, so every per-level op keeps static
+    shapes. A level's live run is ``[head, head+len)``, sorted ascending by
+    the (prio, seq) lexicographic key — its minimum is its head, which is
+    what turns the pop-side linear pool scan into an argmin over ≤ P·L + 2K
+    candidates (:func:`klsm_pop`).
+
+    Leaves: ``lv_prio f32[P, W]`` / ``lv_seq i32[P, W]`` / ``lv_slot
+    i32[P, W]`` level entries (slot = backing :class:`PoolState` slot);
+    ``lv_head`` / ``lv_len i32[P, L]``; ``loc_* [P, K]`` + ``loc_len
+    i32[P]`` each place's sorted UNPUBLISHED run (≤ k−1 entries, rebuilt at
+    every :func:`klsm_sync`); ``spy_* [P, K]`` + ``spy_len i32[P]`` the
+    persistent spy run (refs into a victim's unpublished slots, §4.2.2
+    semantics — validated against (slot, seq) at pop time, so overwrites
+    and pops of the referenced slot kill the ref exactly like the flat
+    plane's ``spied`` matrix); ``in_level bool[M]`` marks pool slots already
+    mirrored into some level (the sync frontier).
+
+    Invariant (the front-probe soundness argument): a level entry dies ONLY
+    by being popped as the selected front — which advances its head — so
+    every level head is live in the pool and the min over published items
+    is always some head. Unpublished refs (loc/spy) can go stale (their
+    slot popped, overwritten, or published); they carry (slot, seq) and are
+    revalidated against the pool on every probe.
+    """
+    lv_prio: jnp.ndarray
+    lv_seq: jnp.ndarray
+    lv_slot: jnp.ndarray
+    lv_head: jnp.ndarray
+    lv_len: jnp.ndarray
+    loc_prio: jnp.ndarray
+    loc_seq: jnp.ndarray
+    loc_slot: jnp.ndarray
+    loc_len: jnp.ndarray
+    spy_prio: jnp.ndarray
+    spy_seq: jnp.ndarray
+    spy_slot: jnp.ndarray
+    spy_len: jnp.ndarray
+    in_level: jnp.ndarray
+
+
+def klsm_geometry(num_slots: int, k: int):
+    """Static level geometry for an M-slot pool: ``(K, L, caps, offs, W)``
+    with K = max(k, 1), level capacities ``caps[l] = K·2^l``, row offsets
+    ``offs[l] = K·(2^l − 1)`` and row width ``W = K·(2^L − 1)``. L is the
+    smallest depth whose TOP level alone holds the whole pool
+    (``K·2^(L−1) ≥ M``), which is what lets the merge cascade force-absorb
+    at the top: total live published entries per place never exceed M."""
+    big_k = max(int(k), 1)
+    levels = 1
+    while big_k * (1 << (levels - 1)) < num_slots:
+        levels += 1
+    caps = [big_k << lvl for lvl in range(levels)]
+    offs = [big_k * ((1 << lvl) - 1) for lvl in range(levels)]
+    return big_k, levels, caps, offs, big_k * ((1 << levels) - 1)
+
+
+def klsm_init(num_slots: int, num_places: int, *, k: int) -> KlsmState:
+    """Fresh empty store for an ``init_pool(num_slots, num_places)`` pool
+    under publish-on-``k`` (DESIGN.md §15)."""
+    big_k, levels, _, _, width = klsm_geometry(num_slots, k)
+    p = num_places
+
+    def frun(shape):
+        return (jnp.full(shape, INF, jnp.float32),
+                jnp.full(shape, _SEQ_MAX, jnp.int32),
+                jnp.full(shape, -1, jnp.int32))
+
+    lv_prio, lv_seq, lv_slot = frun((p, width))
+    loc_prio, loc_seq, loc_slot = frun((p, big_k))
+    spy_prio, spy_seq, spy_slot = frun((p, big_k))
+    return KlsmState(
+        lv_prio=lv_prio, lv_seq=lv_seq, lv_slot=lv_slot,
+        lv_head=jnp.zeros((p, levels), jnp.int32),
+        lv_len=jnp.zeros((p, levels), jnp.int32),
+        loc_prio=loc_prio, loc_seq=loc_seq, loc_slot=loc_slot,
+        loc_len=jnp.zeros((p,), jnp.int32),
+        spy_prio=spy_prio, spy_seq=spy_seq, spy_slot=spy_slot,
+        spy_len=jnp.zeros((p,), jnp.int32),
+        in_level=jnp.zeros((num_slots,), bool),
+    )
+
+
+def _klsm_geom_of(store: KlsmState, num_slots: int):
+    big_k = store.loc_prio.shape[1]
+    levels = store.lv_head.shape[1]
+    caps = [big_k << lvl for lvl in range(levels)]
+    offs = [big_k * ((1 << lvl) - 1) for lvl in range(levels)]
+    return big_k, levels, caps, offs
+
+
+def _pad_run(prio, seq, slot, n):
+    """Force the padding convention (entries ≥ n are (INF, SEQ_MAX, −1))
+    so merged runs sort valid-first under the (prio, seq) lexsort."""
+    live = jnp.arange(prio.shape[0]) < n
+    return (jnp.where(live, prio, INF),
+            jnp.where(live, seq, _SEQ_MAX),
+            jnp.where(live, slot, -1))
+
+
+def _merge_runs(a, b):
+    """Merge two sorted (prio, seq) runs — concat + stable ``jnp.lexsort``
+    (static shapes; exact, no two-pointer epsilon games). Padding sorts
+    last, so the result is again a padded sorted run of width |a| + |b|."""
+    ap, aq, asl, an = a
+    bp, bq, bsl, bn = b
+    ap, aq, asl = _pad_run(ap, aq, asl, an)
+    bp, bq, bsl = _pad_run(bp, bq, bsl, bn)
+    prio = jnp.concatenate([ap, bp])
+    seq = jnp.concatenate([aq, bq])
+    slot = jnp.concatenate([asl, bsl])
+    order = jnp.lexsort((seq, prio))
+    return prio[order], seq[order], slot[order], an + bn
+
+
+def _cascade_insert(store: KlsmState, pi: int, batch):
+    """Insert a sorted batch run into place ``pi``'s levels with
+    merge-on-overflow (DESIGN.md §15). Python loop over levels (so every
+    slice shape is static); per level a nested ``lax.cond`` picks
+    done / absorb / spill, and the TOP level force-absorbs (its capacity
+    ≥ M by construction, and ≤ M entries are live). The carry entering
+    level l has static width B + K·(2^l − 1) — the geometric sum of all
+    shallower capacities — so spills never truncate."""
+    levels = store.lv_head.shape[1]
+    big_k, _, caps, offs = _klsm_geom_of(store, store.in_level.shape[0])
+    bp, bq, bsl, bn = batch
+
+    def insert():
+        row_p, row_q, row_sl = (store.lv_prio[pi], store.lv_seq[pi],
+                                store.lv_slot[pi])
+        heads, lens = store.lv_head[pi], store.lv_len[pi]
+        out_heads, out_lens = [], []
+        carry = (bp, bq, bsl, bn)
+        new_p, new_q, new_sl = row_p, row_q, row_sl
+        for lvl in range(levels):
+            off, cap = offs[lvl], caps[lvl]
+            sp = row_p[off:off + cap]
+            sq = row_q[off:off + cap]
+            ssl = row_sl[off:off + cap]
+            head, llen = heads[lvl], lens[lvl]
+            # compact the live run to the front (gather clamps; padding
+            # is enforced by _pad_run's length mask inside the merge)
+            idx = jnp.minimum(head + jnp.arange(cap), cap - 1)
+            live = (sp[idx], sq[idx], ssl[idx], llen)
+            cp, cq, csl, cn = carry
+            cw = cp.shape[0]
+
+            def done():
+                return (sp, sq, ssl, head, llen,
+                        jnp.full((cw + cap,), INF, jnp.float32),
+                        jnp.full((cw + cap,), _SEQ_MAX, jnp.int32),
+                        jnp.full((cw + cap,), -1, jnp.int32),
+                        jnp.zeros((), jnp.int32))
+
+            def absorb():
+                mp, mq, msl, mn = _merge_runs(live, carry)
+                return (mp[:cap], mq[:cap], msl[:cap],
+                        jnp.zeros((), jnp.int32), mn,
+                        jnp.full((cw + cap,), INF, jnp.float32),
+                        jnp.full((cw + cap,), _SEQ_MAX, jnp.int32),
+                        jnp.full((cw + cap,), -1, jnp.int32),
+                        jnp.zeros((), jnp.int32))
+
+            def spill():
+                mp, mq, msl, mn = _merge_runs(carry, live)
+                return (sp, sq, ssl, jnp.zeros((), jnp.int32),
+                        jnp.zeros((), jnp.int32), mp, mq, msl, mn)
+
+            if lvl == levels - 1:
+                outs = jax.lax.cond(cn == 0, done, absorb)
+            else:
+                fits = (llen + cn) <= cap
+
+                def grow():
+                    return jax.lax.cond(fits, absorb, spill)
+
+                outs = jax.lax.cond(cn == 0, done, grow)
+            nsp, nsq, nssl, nhead, nlen, ncp, ncq, ncsl, ncn = outs
+            new_p = new_p.at[off:off + cap].set(nsp)
+            new_q = new_q.at[off:off + cap].set(nsq)
+            new_sl = new_sl.at[off:off + cap].set(nssl)
+            out_heads.append(nhead)
+            out_lens.append(nlen)
+            carry = (ncp, ncq, ncsl, ncn)
+        return (new_p, new_q, new_sl,
+                jnp.stack(out_heads), jnp.stack(out_lens))
+
+    def keep():
+        return (store.lv_prio[pi], store.lv_seq[pi], store.lv_slot[pi],
+                store.lv_head[pi], store.lv_len[pi])
+
+    rp, rq, rsl, rh, rl = jax.lax.cond(bn > 0, insert, keep)
+    return store._replace(
+        lv_prio=store.lv_prio.at[pi].set(rp),
+        lv_seq=store.lv_seq.at[pi].set(rq),
+        lv_slot=store.lv_slot.at[pi].set(rsl),
+        lv_head=store.lv_head.at[pi].set(rh),
+        lv_len=store.lv_len.at[pi].set(rl),
+    )
+
+
+def klsm_sync(pool: PoolState, store: KlsmState, *,
+              batch_cap: int) -> KlsmState:
+    """Re-derive the store from the pool after ANY flat mutation (fold,
+    publish, repush): per place, extract newly published entries
+    (``active & published & ~in_level``, ≤ ``batch_cap`` per sync — callers
+    size it at buffer_cap + K, the most one fold can publish per place) as
+    a sorted level-0 run and cascade-insert it; rebuild the ≤ k−1 entry
+    local run from the unpublished set. This "sync-derivation" keeps the
+    flat :class:`PoolState` the single source of truth — the store is a
+    pop-side index over it, so fold/publish semantics (and the exact host
+    equivalence they're pinned to) are untouched. O(P·M log M) at sync
+    time, which buys the O(P·L + K) pop."""
+    num_places = pool.unpub_pushes.shape[0]
+    m = pool.active.shape[0]
+    big_k = store.loc_prio.shape[1]
+    cap = min(int(batch_cap), m)
+    in_level = store.in_level
+    for pi in range(num_places):
+        newly = (pool.active & pool.published & (pool.creator == pi)
+                 & ~in_level)
+        key_p = jnp.where(newly, pool.prio, INF)
+        key_q = jnp.where(newly, pool.seq, _SEQ_MAX)
+        order = jnp.lexsort((key_q, key_p))[:cap].astype(jnp.int32)
+        bn = jnp.minimum(jnp.sum(newly), cap).astype(jnp.int32)
+        store = _cascade_insert(
+            store, pi, (key_p[order], key_q[order], order, bn))
+        in_level = in_level.at[
+            jnp.where(jnp.arange(cap) < bn, order, m)
+        ].set(True, mode="drop")
+        loc = pool.active & ~pool.published & (pool.creator == pi)
+        lp = jnp.where(loc, pool.prio, INF)
+        lq = jnp.where(loc, pool.seq, _SEQ_MAX)
+        lorder = jnp.lexsort((lq, lp))[:big_k].astype(jnp.int32)
+        store = store._replace(
+            loc_prio=store.loc_prio.at[pi].set(lp[lorder]),
+            loc_seq=store.loc_seq.at[pi].set(lq[lorder]),
+            loc_slot=store.loc_slot.at[pi].set(lorder),
+            loc_len=store.loc_len.at[pi].set(
+                jnp.minimum(jnp.sum(loc), big_k).astype(jnp.int32)),
+        )
+    return store._replace(in_level=in_level)
+
+
+def _ref_live(pool: PoolState, slot, seq):
+    """(slot, seq) revalidation for unpublished refs: live iff the pool
+    slot is active, still holds the SAME item, and is still unpublished
+    (a published item is reachable via its level instead — popping it
+    through a stale ref would strand its level head)."""
+    m = pool.active.shape[0]
+    safe = jnp.clip(slot, 0, m - 1)
+    return (jnp.take(pool.active, safe)
+            & (jnp.take(pool.seq, safe) == seq)
+            & ~jnp.take(pool.published, safe))
+
+
+def _klsm_best(pool: PoolState, store: KlsmState, place: jnp.ndarray):
+    """Shared front-probe of :func:`klsm_pop` / :func:`klsm_peek` — ONE
+    implementation for the same reason as :func:`_stream_best` (DESIGN.md
+    §11: peek-then-pop cannot disagree). Candidates are the P·L level
+    heads (published items visible to all; each head is its level's
+    (prio, seq) minimum) plus ``place``'s revalidated local and spy runs;
+    the winner is the lexicographic argmin — no O(M) pool scan. When the
+    candidate set is empty the place spies: same deterministic
+    lowest-index-victim rule as the flat plane, acquiring the victim's
+    unpublished run as the new (persistent) spy run under ``lax.cond`` so
+    non-empty pops never pay the O(M) victim extraction.
+
+    Returns ``(store, slot, prio, valid, head_hit bool[P, L])``."""
+    m = pool.active.shape[0]
+    num_places, levels = store.lv_head.shape
+    big_k, _, caps, offs = _klsm_geom_of(store, m)
+
+    hp, hq, hsl, hv = [], [], [], []
+    for lvl in range(levels):
+        off, cap = offs[lvl], caps[lvl]
+        idx = off + jnp.minimum(store.lv_head[:, lvl], cap - 1)   # [P]
+        gp = jnp.take_along_axis(store.lv_prio, idx[:, None], 1)[:, 0]
+        gq = jnp.take_along_axis(store.lv_seq, idx[:, None], 1)[:, 0]
+        gsl = jnp.take_along_axis(store.lv_slot, idx[:, None], 1)[:, 0]
+        alive = store.lv_len[:, lvl] > 0
+        # heads are live by the structural invariant; the (slot, seq)
+        # check is defense in depth, not a semantic branch
+        safe = jnp.clip(gsl, 0, m - 1)
+        alive &= (jnp.take(pool.active, safe)
+                  & (jnp.take(pool.seq, safe) == gq))
+        hp.append(gp)
+        hq.append(gq)
+        hsl.append(gsl)
+        hv.append(alive)
+    head_prio = jnp.stack(hp, 1)      # [P, L]
+    head_seq = jnp.stack(hq, 1)
+    head_slot = jnp.stack(hsl, 1)
+    head_valid = jnp.stack(hv, 1)
+
+    lrow = jnp.arange(big_k)
+    loc_p = jnp.take(store.loc_prio, place, axis=0)
+    loc_q = jnp.take(store.loc_seq, place, axis=0)
+    loc_sl = jnp.take(store.loc_slot, place, axis=0)
+    loc_v = ((lrow < jnp.take(store.loc_len, place))
+             & _ref_live(pool, loc_sl, loc_q))
+    spy_p = jnp.take(store.spy_prio, place, axis=0)
+    spy_q = jnp.take(store.spy_seq, place, axis=0)
+    spy_sl = jnp.take(store.spy_slot, place, axis=0)
+    spy_v = ((lrow < jnp.take(store.spy_len, place))
+             & _ref_live(pool, spy_sl, spy_q))
+
+    empty = ~(jnp.any(head_valid) | jnp.any(loc_v) | jnp.any(spy_v))
+
+    def spy():
+        unpub = pool.active & ~pool.published
+        counts = jnp.zeros((num_places,), jnp.int32).at[pool.creator].add(
+            unpub.astype(jnp.int32))
+        w = (counts > 0) & (jnp.arange(num_places, dtype=jnp.int32) != place)
+        victim = jnp.argmax(w).astype(jnp.int32)
+        vm = unpub & (pool.creator == victim)
+        vp = jnp.where(vm, pool.prio, INF)
+        vq = jnp.where(vm, pool.seq, _SEQ_MAX)
+        vorder = jnp.lexsort((vq, vp))[:big_k].astype(jnp.int32)
+        n = jnp.where(jnp.any(w),
+                      jnp.minimum(jnp.sum(vm), big_k), 0).astype(jnp.int32)
+        return vp[vorder], vq[vorder], vorder, n
+
+    def keep():
+        return spy_p, spy_q, spy_sl, jnp.take(store.spy_len, place)
+
+    # all prior spy refs are dead when `empty`, so overwrite == the flat
+    # plane's accumulate (dead refs are unreachable either way)
+    nsp_p, nsp_q, nsp_sl, nsp_n = jax.lax.cond(empty, spy, keep)
+    store = store._replace(
+        spy_prio=store.spy_prio.at[place].set(nsp_p),
+        spy_seq=store.spy_seq.at[place].set(nsp_q),
+        spy_slot=store.spy_slot.at[place].set(nsp_sl),
+        spy_len=store.spy_len.at[place].set(nsp_n),
+    )
+    spy_v = (lrow < nsp_n) & _ref_live(pool, nsp_sl, nsp_q)
+
+    cand_p = jnp.concatenate([head_prio.reshape(-1), loc_p, nsp_p])
+    cand_q = jnp.concatenate([head_seq.reshape(-1), loc_q, nsp_q])
+    cand_sl = jnp.concatenate([head_slot.reshape(-1), loc_sl, nsp_sl])
+    cand_v = jnp.concatenate([head_valid.reshape(-1), loc_v, spy_v])
+    mp = jnp.where(cand_v, cand_p, INF)
+    mq = jnp.where(cand_v, cand_q, _SEQ_MAX)
+    best = jnp.min(mp)
+    valid = jnp.isfinite(best)
+    tie = cand_v & (mp == best)
+    ci = jnp.argmin(jnp.where(tie, mq, _SEQ_MAX)).astype(jnp.int32)
+    slot = cand_sl[ci]
+    prio_out = jnp.where(valid, mp[ci], INF)
+    head_hit = head_valid & (head_slot == slot)
+    return store, slot, prio_out, valid, head_hit
+
+
+def klsm_pop(
+    pool: PoolState, store: KlsmState, place: jnp.ndarray
+) -> Tuple[PoolState, KlsmState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """:func:`stream_pop` over the level store: same HYBRID visibility,
+    same (prio, seq) winner, same deterministic spy — bit-identical pop
+    stream (tests/test_klsm.py pins device == host twin == flat oracle) —
+    but selection probes ≤ P·L + 2K heads instead of scanning M slots, and
+    the removal is two O(1) scatters (pool deactivate + head advance), so
+    pop cost is flat in pool capacity (the ``klsm`` bench section's
+    contract). ρ = P·k is untouched: visibility is pointwise identical to
+    the flat plane's, only its index changed. Returns
+    ``(pool, store, slot, prio, valid)``."""
+    m = pool.active.shape[0]
+    store, slot, prio, valid, head_hit = _klsm_best(pool, store, place)
+    tgt = jnp.where(valid, slot, m)
+    pool = pool._replace(
+        active=pool.active.at[tgt].set(False, mode="drop"),
+        prio=pool.prio.at[tgt].set(INF, mode="drop"),
+    )
+    adv = (head_hit & valid).astype(jnp.int32)
+    store = store._replace(
+        lv_head=store.lv_head + adv,
+        lv_len=store.lv_len - adv,
+        in_level=store.in_level.at[tgt].set(False, mode="drop"),
+    )
+    return pool, store, slot, prio, valid
+
+
+def klsm_peek(
+    pool: PoolState, store: KlsmState, place: jnp.ndarray
+) -> Tuple[KlsmState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """:func:`stream_peek` over the level store: the exact item the next
+    :func:`klsm_pop` would take; only the persistent spy run may change
+    (DESIGN.md §11 peek-then-pop contract). Returns
+    ``(store, slot, prio, valid)``."""
+    store, slot, prio, valid, _ = _klsm_best(pool, store, place)
+    return store, slot, prio, valid
+
+
+def klsm_pop_fill(
+    pool: PoolState,
+    store: KlsmState,
+    want: jnp.ndarray,     # bool[S] slot s needs a request
+    places: jnp.ndarray,   # i32[S]  place popping for slot s
+) -> Tuple[PoolState, KlsmState, PopResult]:
+    """:func:`stream_pop_fill` over the level store — the same
+    stop-at-first-miss ``lax.scan``, threading (pool, store) through the
+    carry (DESIGN.md §10/§15). Returns ``(pool, store, PopResult)``."""
+
+    def step(carry, xs):
+        pl, st, stopped = carry
+        w, plc = xs
+        do = w & ~stopped
+
+        def pop_branch(ps):
+            return klsm_pop(ps[0], ps[1], plc)
+
+        def skip_branch(ps):
+            return (ps[0], ps[1], jnp.int32(0), jnp.float32(INF),
+                    jnp.zeros((), bool))
+
+        pl, st, slot, prio, valid = jax.lax.cond(
+            do, pop_branch, skip_branch, (pl, st))
+        stopped = stopped | (do & ~valid)
+        return (pl, st, stopped), (slot, prio, valid & do)
+
+    (pool, store, _), (slots, prios, valids) = jax.lax.scan(
+        step, (pool, store, jnp.zeros((), bool)), (want, places))
+    return pool, store, PopResult(slot=slots, prio=prios, valid=valids)

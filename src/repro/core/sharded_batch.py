@@ -188,6 +188,31 @@ def admission_shardings(mesh: Mesh, tree):
     return jax.tree.map(lambda x: spec_for("", x), tree)
 
 
+def klsm_shardings(mesh: Mesh, store):
+    """NamedShardings for the klsm level store (``kpriority.KlsmState``,
+    DESIGN.md §15) on a composed serving mesh: replicate every leaf except
+    ``in_level`` (the only [M] slot-indexed leaf, which follows the pool's
+    slot placement). The level rows are [P, W]/[P, K] sorted runs that the
+    cascade/merge reads and rewrites wholesale — sharding a sort network's
+    operand over ``batch`` would buy nothing but collectives — and the
+    front probe only gathers P·L heads from them. Placement only, like
+    :func:`admission_shardings`: klsm ops are ordinary jit programs and the
+    host equivalence is mesh-independent."""
+    from jax.sharding import NamedSharding
+
+    d = batch_axis_size(mesh)
+    rep = NamedSharding(mesh, PS())
+
+    def spec_for(name, x):
+        if name == "in_level" and x.ndim == 1 and x.shape[0] % d == 0:
+            return NamedSharding(mesh, PS(BATCH_AXIS))
+        return rep
+
+    return type(store)(
+        *(spec_for(n, getattr(store, n)) for n in store._fields)
+    )
+
+
 def slot_dim_sharding(mesh: Mesh):
     """THE slot-dim placement rule, shared by the eager engine's decode
     caches, the fused carry, and the fused staging (DESIGN.md §9.4/§10):
@@ -239,6 +264,9 @@ def fused_carry_shardings(mesh: Mesh, carry):
         # boundary fold reads in full — replicate, like the buffers
         plan=jax.tree.map(lambda _: rep, carry.plan),
         plan_sel=rep,
+        # klsm level store (§15): None under storage="flat" (empty subtree)
+        store=(None if carry.store is None
+               else klsm_shardings(mesh, carry.store)),
     )
 
 

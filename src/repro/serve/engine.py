@@ -182,6 +182,15 @@ class ServeEngine:
     (tests/test_multiqueue.py). The fused step modes and preemption keep
     HYBRID admission (the sampled pop has no peek contract).
 
+    ``admission_storage="klsm"`` (DESIGN.md §15) swaps the published-set
+    INDEX — not the semantics — for the hierarchical k-LSM level store:
+    pops probe ≤ P·L sorted-level heads instead of scanning the pool.
+    Admission order is bit-identical to the flat storage on every plane
+    (host = ``HostKLSM``, device = ``StreamingAdmitter(storage="klsm")``,
+    fused/continuous = the level-synced chunk program;
+    tests/test_klsm.py). Fused preemption keeps flat storage (its in-trace
+    rounds use the flat probe).
+
     ``mesh``: shard the decode-cache slot axis over the mesh's ``batch``
     axis (§8) — with a composed ``make_production_batch_mesh`` the admission
     pool co-locates with the decode slots it feeds.
@@ -209,6 +218,7 @@ class ServeEngine:
         mesh=None,
         admission: str = "host",
         admission_policy: str = "hybrid",
+        admission_storage: str = "flat",
         admission_capacity: int = 256,
         step: Optional[str] = None,
         step_chunk: int = 1,
@@ -259,7 +269,22 @@ class ServeEngine:
                 raise ValueError(
                     "admission_policy='multiqueue' is incompatible with "
                     "preemption: the sampled pop has no peek")
+        if admission_storage not in ("flat", "klsm"):
+            raise ValueError(
+                f"unknown admission storage: {admission_storage!r}")
+        if admission_storage == "klsm" and admission_policy != "hybrid":
+            raise ValueError(
+                "admission_storage='klsm' indexes the HYBRID published set "
+                "(the MULTIQUEUE pop has no global front for the level "
+                "store to index)")
+        if (admission_storage == "klsm" and preemption != "off"
+                and step in ("fused", "continuous")):
+            raise ValueError(
+                "admission_storage='klsm' is incompatible with fused "
+                "preemption (the in-trace preempt rounds use the flat "
+                "probe); use the eager planes for klsm + preemption")
         self.admission_policy = admission_policy
+        self.admission_storage = admission_storage
         self.step_mode = step
         self.step_chunk = step_chunk
         self.admission = admission
@@ -273,6 +298,14 @@ class ServeEngine:
         elif admission == "host":
             if admission_policy == "multiqueue":
                 self.queue = MultiQueue(frontends, k)
+            elif admission_storage == "klsm":
+                # the host-side klsm twin (DESIGN.md §15): bit-identical to
+                # HybridKQueue(spy="min_index") by construction, so the
+                # host plane stays the equivalence oracle under either
+                # storage
+                from repro.core.host_queue import HostKLSM
+
+                self.queue = HostKLSM(frontends, k)
             else:
                 # min-index spy: pins the same victim choice as the device
                 # plane so "host" stays the bit-exact equivalence oracle
@@ -283,7 +316,8 @@ class ServeEngine:
 
             self.queue = StreamingAdmitter(
                 frontends, k, capacity=admission_capacity, mesh=mesh,
-                retain=preemption == "margin", policy=admission_policy)
+                retain=preemption == "margin", policy=admission_policy,
+                storage=admission_storage)
         else:
             raise ValueError(f"unknown admission plane: {admission!r}")
         self.frontends = frontends
@@ -330,7 +364,7 @@ class ServeEngine:
                 prefill_fn=prefill_fn, mesh=mesh,
                 preemption=preemption, margin=self.preempt_margin,
                 staging_rows=staging_rows, continuous=step == "continuous",
-                slo=slo,
+                slo=slo, storage=admission_storage,
             )
             self.queue = self._fused       # queue-like: __len__/flush/pending
             # cache ownership moves into the fused carry (donated each

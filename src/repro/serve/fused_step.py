@@ -100,6 +100,9 @@ class FusedCarry(NamedTuple):
     staged_caches: Any    # staged KV; every leaf [lead, staging_rows, ...]
     plan: AdmissionBuffer  # ping-pong arrival plans; leaves [2, P, C]/[2, P]
     plan_sel: jnp.ndarray  # i32[] plan slot the NEXT chunk folds (§12)
+    store: Any = None      # klsm level store (§15); None under storage="flat"
+                           # (an empty pytree subtree, so flat programs are
+                           # byte-identical to the pre-klsm ones)
 
 
 class StepEvents(NamedTuple):
@@ -152,7 +155,7 @@ def build_chunk_fn(decode_fn: Callable, *, k: int, frontends: int,
                    rounds: int = 0, continuous: bool = False,
                    slo_margin: bool = False, margin_scale: float = 0.0,
                    margin_floor: float = 0.0, margin_cap: float = 0.0,
-                   victim_cost: bool = False):
+                   victim_cost: bool = False, storage: str = "flat"):
     """Build THE fused program: n steps of fold → ``stream_pop_fill`` →
     splice → [preempt ×``rounds``] → decode → complete as one jitted
     ``lax.scan`` over per-step AdmissionBuffer rows — one dispatch per chunk
@@ -178,7 +181,8 @@ def build_chunk_fn(decode_fn: Callable, *, k: int, frontends: int,
     """
     key = ("chunk_fn", decode_fn, k, frontends, slots, max_len, n,
            preempt, margin, rounds, continuous,
-           slo_margin, margin_scale, margin_floor, margin_cap, victim_cost)
+           slo_margin, margin_scale, margin_floor, margin_cap, victim_cost,
+           storage)
     return streaming.shared_jit(
         key,
         lambda: _build_chunk_impl(
@@ -186,7 +190,8 @@ def build_chunk_fn(decode_fn: Callable, *, k: int, frontends: int,
             max_len=max_len, n=n, preempt=preempt, margin=margin,
             rounds=rounds, continuous=continuous, slo_margin=slo_margin,
             margin_scale=margin_scale, margin_floor=margin_floor,
-            margin_cap=margin_cap, victim_cost=victim_cost))
+            margin_cap=margin_cap, victim_cost=victim_cost,
+            storage=storage))
 
 
 def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
@@ -194,9 +199,17 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
                       margin: float, rounds: int, continuous: bool,
                       slo_margin: bool = False, margin_scale: float = 0.0,
                       margin_floor: float = 0.0, margin_cap: float = 0.0,
-                      victim_cost: bool = False):
+                      victim_cost: bool = False, storage: str = "flat"):
     places_vec = jnp.arange(slots, dtype=jnp.int32) % frontends
     n_rounds = rounds if (preempt and rounds > 0) else 0
+    if storage == "klsm" and n_rounds > 0:
+        # the in-trace preempt rounds pop challengers with the flat O(M)
+        # probe and re-push victims mid-step — both would leave level heads
+        # stale until the next sync, breaking the head-liveness invariant
+        # (DESIGN.md §15). FusedServeLoop rejects the combination up front;
+        # this is the backstop.
+        raise ValueError("storage='klsm' is incompatible with the fused "
+                         "preempt rounds")
 
     def splice_in(caches, staged_caches, rows, mask):
         """Gather staged rows into decode-slot columns where ``mask``."""
@@ -295,7 +308,18 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
             # unmasked program); only decode + preempt arbitration are
             # gated on the step having any work
             pool, _ = fold(c.pool, buf, k=k)
-            pool, res = kp.stream_pop_fill(pool, c.slot_req < 0, places_vec)
+            if storage == "klsm":
+                # re-derive the level store from the freshly folded pool,
+                # then pop through the level-front probe (§15): one fold
+                # publishes ≤ per-step buffer width + K entries per place
+                bc = buf.prio.shape[-1] + max(k, 1)
+                store = kp.klsm_sync(pool, c.store, batch_cap=bc)
+                pool, store, res = kp.klsm_pop_fill(
+                    pool, store, c.slot_req < 0, places_vec)
+            else:
+                store = c.store
+                pool, res = kp.stream_pop_fill(
+                    pool, c.slot_req < 0, places_vec)
             got = res.valid                              # bool[S]
             live = jnp.any(got) | jnp.any(c.slot_req >= 0)
             # the engine increments its clock at the top of EVERY step
@@ -347,7 +371,7 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
                     slot_prio=slot_prio, slot_uid=slot_uid,
                     slot_creator=slot_creator, slot_deadline=slot_deadline,
                     clock=clock, staging=staging,
-                    staged_caches=staged_caches)
+                    staged_caches=staged_caches, store=store)
                 ev = StepEvents(admit=jnp.where(got, res.slot, -1),
                                 token=nxt, active=active, done=done,
                                 live=jnp.bool_(True),
@@ -364,7 +388,7 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
                     done=jnp.zeros((slots,), bool),
                     live=jnp.bool_(False),
                     pre_slot=rfill, pre_vps=rfill, pre_ps=rfill)
-                return c._replace(pool=pool, clock=clock), ev
+                return c._replace(pool=pool, clock=clock, store=store), ev
 
             return jax.lax.cond(live, live_step, dead_step, c)
 
@@ -381,6 +405,13 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
                 prio=plan.prio[sel], slot=plan.slot[sel],
                 arrival=plan.arrival[sel], count=plan.count[sel])
             pool, _ = fold(carry.pool, ready, k=k)
+            if storage == "klsm":
+                # sync HERE, not at the scan's first step: the boundary fold
+                # can publish a full plan row (+ carried unpublished) per
+                # place, more than the per-step batch_cap budgets for
+                carry = carry._replace(store=kp.klsm_sync(
+                    pool, carry.store,
+                    batch_cap=ready.prio.shape[-1] + max(k, 1)))
             cleared = AdmissionBuffer(
                 prio=plan.prio.at[sel].set(jnp.inf),
                 slot=plan.slot.at[sel].set(-1),
@@ -521,12 +552,22 @@ class FusedServeLoop:
         staging_rows: Optional[int] = None,
         continuous: bool = False,
         slo=None,
+        storage: str = "flat",
     ):
         if preemption not in ("off", "margin"):
             raise ValueError(f"unknown preemption mode: {preemption!r}")
         if margin < 0:
             raise ValueError("preemption margin must be >= 0")
+        if storage not in ("flat", "klsm"):
+            raise ValueError(f"unknown admission storage: {storage!r}")
+        if storage == "klsm" and preemption != "off":
+            raise ValueError(
+                "storage='klsm' is incompatible with fused preemption: the "
+                "in-trace preempt rounds pop/re-push through the flat probe "
+                "mid-step, which would leave klsm level heads stale until "
+                "the next sync (DESIGN.md §15)")
         self.slots, self.frontends, self.k = slots, frontends, k
+        self.storage = storage
         self.max_len, self.capacity = max_len, capacity
         self.buffer_cap = buffer_cap
         self.params = params
@@ -583,6 +624,8 @@ class FusedServeLoop:
                 count=jnp.zeros((2, frontends), jnp.int32),
             ),
             plan_sel=jnp.zeros((), jnp.int32),
+            store=(kp.klsm_init(capacity, frontends, k=k)
+                   if storage == "klsm" else None),
         )
         if mesh is not None:
             from repro.core.sharded_batch import fused_carry_shardings
@@ -614,8 +657,12 @@ class FusedServeLoop:
         self._plan_pending = None              # uploaded-not-folded counts
         # weakly-shared compiled programs: holding them HERE is what keeps
         # them alive/shared while this loop exists (streaming.shared_jit)
-        self._flush_fold = streaming._jitted_fold(k, True)
-        self._flush_fold_places = streaming._jitted_fold_places(k)
+        if storage == "klsm":
+            self._flush_fold = streaming._jitted_klsm_fold_dyn(k, True)
+            self._flush_fold_places = streaming._jitted_klsm_fold_places_dyn(k)
+        else:
+            self._flush_fold = streaming._jitted_fold(k, True)
+            self._flush_fold_places = streaming._jitted_fold_places(k)
         self._chunk_holders = {}
         self._stage_batch_holders = {}
         self._dispatch_cell = type(self).dispatch_ledger.attach(self)
@@ -848,7 +895,7 @@ class FusedServeLoop:
                 margin_scale=slo.margin_scale if self._slo_margin else 0.0,
                 margin_floor=slo.margin_floor if self._slo_margin else 0.0,
                 margin_cap=slo.margin_cap if self._slo_margin else 0.0,
-                victim_cost=self._victim_cost)
+                victim_cost=self._victim_cost, storage=self.storage)
             self._chunk_holders[n] = h
         return h
 
@@ -990,17 +1037,27 @@ class FusedServeLoop:
             prio=jnp.asarray(prio), slot=jnp.asarray(slot),
             arrival=jnp.asarray(arrival), count=jnp.asarray(count),
         )
+        store = self.carry.store
         if place is None:
-            pool, _ = self._flush_fold(self.carry.pool, buf)
+            if self.storage == "klsm":
+                pool, store = self._flush_fold(
+                    self.carry.pool, buf, store)
+            else:
+                pool, _ = self._flush_fold(self.carry.pool, buf)
             self._unpub = [0] * p
         else:
             mask = jnp.zeros((p,), bool).at[place].set(True)
-            pool, _ = self._flush_fold_places(self.carry.pool, buf, mask)
+            if self.storage == "klsm":
+                pool, store = self._flush_fold_places(
+                    self.carry.pool, buf, mask, store)
+            else:
+                pool, _ = self._flush_fold_places(
+                    self.carry.pool, buf, mask)
             for pl in range(p):
                 u = self._unpub[pl] + int(count[pl])
                 self._unpub[pl] = (
                     0 if (pl == place or self.k == 0) else u % self.k)
-        self.carry = self.carry._replace(pool=pool)
+        self.carry = self.carry._replace(pool=pool, store=store)
         self._count()
 
     # --------------------------------------------------------------- queries
@@ -1048,7 +1105,8 @@ def toy_prefill_fn(params, toks):
 
 def toy_loop(*, slots, frontends, k, max_len=10_000, capacity=128,
              buffer_cap=32, mesh=None, preemption="off", margin=0.0,
-             staging_rows=None, continuous=False, slo=None) -> FusedServeLoop:
+             staging_rows=None, continuous=False, slo=None,
+             storage="flat") -> FusedServeLoop:
     """A :class:`FusedServeLoop` over the toy model, with the engine's cache
     convention (slot dim = axis 1 of every leaf) — splice/staging machinery
     is exercised end-to-end, compiles are shared across LIVE instances (the
@@ -1060,7 +1118,8 @@ def toy_loop(*, slots, frontends, k, max_len=10_000, capacity=128,
         capacity=capacity, buffer_cap=buffer_cap, params=None,
         caches=caches, decode_fn=toy_decode_fn, prefill_fn=toy_prefill_fn,
         mesh=mesh, preemption=preemption, margin=margin,
-        staging_rows=staging_rows, continuous=continuous, slo=slo)
+        staging_rows=staging_rows, continuous=continuous, slo=slo,
+        storage=storage)
 
 
 # ---------------------------------------------------------------------------

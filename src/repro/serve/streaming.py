@@ -174,6 +174,7 @@ def fold(
     k: int,
     force: bool = False,
     force_places: Optional[jnp.ndarray] = None,   # bool[P], traced
+    count_clobbers: bool = False,
 ) -> Tuple[kp.PoolState, AdmissionBuffer]:
     """Drain the buffers into the pool with stream-accurate publish-on-k.
 
@@ -194,7 +195,13 @@ def fold(
     Publishing is monotone ⇒ ignored ≤ P·k is preserved.
 
     One fused device program: pure jnp, jit/shard_map-compatible; returns
-    the updated pool and an empty buffer.
+    the updated pool and an empty buffer. ``count_clobbers=True`` arms the
+    admission-plane capacity guard: colliding writes to LIVE pool slots are
+    masked out (the incumbent request survives) and the return grows a
+    third element — the i32[] collision count — which
+    :class:`StreamingAdmitter` accumulates and surfaces as a loud error
+    (ISSUE 9 satellite; the phase plane keeps the default overwrite
+    semantics, where slot reuse IS the paper's dead-task elimination).
     """
     num_places, cap = buf.prio.shape
     m = pool.prio.shape[0]
@@ -235,6 +242,17 @@ def fold(
     pub_new_m = jnp.zeros((m,), bool).at[tgt].set(
         (j < limit[:, None]).reshape(-1), mode="drop")
 
+    if count_clobbers:
+        # admission-plane capacity guard (ISSUE 9 satellite): on this plane
+        # pool slots are request identities handed out by alloc_pool_slot,
+        # so a buffered slot landing on a LIVE slot is never legitimate
+        # "dead-task elimination" — it means capacity accounting desynced
+        # and a request would be silently dropped. Mask the collision (the
+        # incumbent survives) and count it; StreamingAdmitter raises when
+        # the counter moves.
+        clobbered = jnp.sum(mask_m & pool.active).astype(jnp.int32)
+        mask_m = mask_m & ~pool.active
+
     st = kp.push_batch(pool, mask_m, prio_m, creator_m, tie=arr_m)
     published = (
         st.published
@@ -242,6 +260,8 @@ def fold(
         | (~mask_m & st.active & pub_prev[st.creator])
     )
     st = st._replace(published=published, unpub_pushes=new_unpub)
+    if count_clobbers:
+        return st, init_buffer(num_places, cap), clobbered
     return st, init_buffer(num_places, cap)
 
 
@@ -272,10 +292,126 @@ def _jitted_fold_places(k: int) -> _JitHolder:
     return shared_jit(("fold_places", k), build)
 
 
+def _jitted_fold_guarded(k: int, force: bool) -> _JitHolder:
+    """Admitter-plane fold with the live-slot clobber guard: threads the
+    i32[] collision counter through the same program (zero extra
+    dispatches; the counter is read back at pop time, an existing sync
+    point)."""
+
+    def build():
+        def f(pool, buf, clob):
+            pool, buf, n = fold(pool, buf, k=k, force=force,
+                                count_clobbers=True)
+            return pool, buf, clob + n
+
+        return jax.jit(f, donate_argnums=(0, 1, 2))
+
+    return shared_jit(("fold_guard", k, force), build)
+
+
+def _jitted_fold_places_guarded(k: int) -> _JitHolder:
+    def build():
+        def f(pool, buf, mask, clob):
+            pool, buf, n = fold(pool, buf, k=k, force_places=mask,
+                                count_clobbers=True)
+            return pool, buf, clob + n
+
+        return jax.jit(f, donate_argnums=(0, 1, 3))
+
+    return shared_jit(("fold_places_guard", k), build)
+
+
+def _jitted_klsm_fold(k: int, force: bool, batch_cap: int) -> _JitHolder:
+    """klsm-storage fold: guarded flat fold + :func:`kp.klsm_sync` in ONE
+    program — the pool stays the source of truth, the level store is
+    re-derived from whatever the fold published (DESIGN.md §15)."""
+
+    def build():
+        def f(pool, buf, store, clob):
+            pool, buf, n = fold(pool, buf, k=k, force=force,
+                                count_clobbers=True)
+            store = kp.klsm_sync(pool, store, batch_cap=batch_cap)
+            return pool, buf, store, clob + n
+
+        return jax.jit(f, donate_argnums=(0, 1, 2, 3))
+
+    return shared_jit(("klsm_fold", k, force, batch_cap), build)
+
+
+def _jitted_klsm_fold_places(k: int, batch_cap: int) -> _JitHolder:
+    def build():
+        def f(pool, buf, mask, store, clob):
+            pool, buf, n = fold(pool, buf, k=k, force_places=mask,
+                                count_clobbers=True)
+            store = kp.klsm_sync(pool, store, batch_cap=batch_cap)
+            return pool, buf, store, clob + n
+
+        return jax.jit(f, donate_argnums=(0, 1, 3, 4))
+
+    return shared_jit(("klsm_fold_places", k, batch_cap), build)
+
+
+def _jitted_klsm_fold_dyn(k: int, force: bool) -> _JitHolder:
+    """klsm fold for one-shot (variable-width) buffers — the fused loop's
+    flush path. batch_cap derives from the buffer width at trace time, so
+    each bucketed flush width compiles its own sync: the same per-width
+    specialization the flat flush already pays."""
+
+    def build():
+        def f(pool, buf, store):
+            pool, _ = fold(pool, buf, k=k, force=force)
+            store = kp.klsm_sync(
+                pool, store, batch_cap=buf.prio.shape[-1] + max(k, 1))
+            return pool, store
+
+        return jax.jit(f, donate_argnums=(0, 2))
+
+    return shared_jit(("klsm_fold_dyn", k, force), build)
+
+
+def _jitted_klsm_fold_places_dyn(k: int) -> _JitHolder:
+    def build():
+        def f(pool, buf, mask, store):
+            pool, _ = fold(pool, buf, k=k, force_places=mask)
+            store = kp.klsm_sync(
+                pool, store, batch_cap=buf.prio.shape[-1] + max(k, 1))
+            return pool, store
+
+        return jax.jit(f, donate_argnums=(0, 3))
+
+    return shared_jit(("klsm_fold_places_dyn", k), build)
+
+
+def _jitted_klsm_repush(k: int, batch_cap: int) -> _JitHolder:
+    """klsm twin of :func:`_jitted_repush`: the ordinary HYBRID re-push may
+    publish (publish-on-k), so the level store is re-synced in the same
+    program — a re-push publishes ≤ K entries for one place, well under
+    ``batch_cap``."""
+
+    def build():
+        def f(pool, store, slot, place, prio):
+            m = pool.prio.shape[0]
+            mask = jnp.arange(m) == slot
+            pool = kp.push(
+                pool, mask,
+                jnp.full((m,), jnp.float32(prio)),
+                jnp.full((m,), jnp.int32(place), jnp.int32),
+                k=k, policy=kp.Policy.HYBRID,
+            )
+            store = kp.klsm_sync(pool, store, batch_cap=batch_cap)
+            return pool, store
+
+        return jax.jit(f, donate_argnums=(0, 1))
+
+    return shared_jit(("klsm_repush", k, batch_cap), build)
+
+
 _jitted_buffer_push = jax.jit(buffer_push, donate_argnums=(0,))
 _jitted_stream_pop = jax.jit(kp.stream_pop, donate_argnums=(0,))
 _jitted_stream_peek = jax.jit(kp.stream_peek, donate_argnums=(0,))
 _jitted_stream_pop_mq = jax.jit(kp.stream_pop_mq, donate_argnums=(0,))
+_jitted_klsm_pop = jax.jit(kp.klsm_pop, donate_argnums=(0, 1))
+_jitted_klsm_peek = jax.jit(kp.klsm_peek, donate_argnums=(1,))
 
 
 def _jitted_repush(k: int) -> _JitHolder:
@@ -483,6 +619,7 @@ class StreamingAdmitter:
         mesh=None,
         retain: bool = False,
         policy: str = "hybrid",
+        storage: str = "flat",
     ):
         if policy not in ("hybrid", "multiqueue"):
             raise ValueError(f"unknown admission policy: {policy!r}")
@@ -491,14 +628,34 @@ class StreamingAdmitter:
                 "policy='multiqueue' cannot retain pool slots: the sampled "
                 "pop has no peek-then-pop front, so the preemption plane "
                 "(the only retain user) is HYBRID-only")
+        if storage not in ("flat", "klsm"):
+            raise ValueError(f"unknown admission storage: {storage!r}")
+        if storage == "klsm" and policy != "hybrid":
+            raise ValueError(
+                "storage='klsm' indexes the HYBRID published set; the "
+                "MULTIQUEUE pop samples places instead of probing a global "
+                "front, so it has nothing for the level store to index")
         self.num_places = num_places
         self.k = k
         self.policy = policy
+        self.storage = storage
         self.capacity = capacity
         self.buffer_cap = buffer_cap
         self.retain = retain
         self.pool = kp.init_pool(capacity, num_places)
         self.buf = init_buffer(num_places, buffer_cap)
+        # klsm level store (DESIGN.md §15): fixed-shape sorted levels over
+        # the published set, re-derived inside the fold program. batch_cap
+        # bounds newly published entries per place per sync: one fold drains
+        # ≤ buffer_cap staged pushes plus ≤ K carried-unpublished.
+        self.store = (kp.klsm_init(capacity, num_places, k=k)
+                      if storage == "klsm" else None)
+        self._batch_cap = buffer_cap + max(k, 1)
+        #: device-scalar live-slot clobber counter (ISSUE 9 satellite):
+        #: accumulated inside the guarded fold program, read back (and
+        #: raised on) at pop time — an existing sync point, so the guard
+        #: costs zero extra dispatches.
+        self._clob = jnp.zeros((), jnp.int32)
         self.mesh = mesh
         if mesh is not None:
             from repro.core.sharded_batch import admission_shardings
@@ -506,6 +663,12 @@ class StreamingAdmitter:
             self.pool = jax.tree.map(
                 jax.device_put, self.pool, admission_shardings(mesh, self.pool)
             )
+            if self.store is not None:
+                from repro.core.sharded_batch import klsm_shardings
+
+                self.store = jax.tree.map(
+                    jax.device_put, self.store,
+                    klsm_shardings(mesh, self.store))
         self._items = {}                       # slot -> item (host-side)
         self._running = {}                     # slot -> item (retain mode)
         self._next_slot = 0
@@ -517,13 +680,22 @@ class StreamingAdmitter:
         # holders, not bare functions: keeping them on the instance is what
         # keeps the weakly-cached compiled programs alive (and shared with
         # other live admitters of the same k)
-        self._fold_fn = _jitted_fold(k, False)
-        self._flush_fn = _jitted_fold(k, True)
-        self._flush_place_fn = _jitted_fold_places(k)
-        self._pop_fn = _jitted_stream_pop
+        if storage == "klsm":
+            bc = self._batch_cap
+            self._fold_fn = _jitted_klsm_fold(k, False, bc)
+            self._flush_fn = _jitted_klsm_fold(k, True, bc)
+            self._flush_place_fn = _jitted_klsm_fold_places(k, bc)
+            self._pop_fn = _jitted_klsm_pop
+            self._peek_fn = _jitted_klsm_peek
+            self._repush_fn = _jitted_klsm_repush(k, bc)
+        else:
+            self._fold_fn = _jitted_fold_guarded(k, False)
+            self._flush_fn = _jitted_fold_guarded(k, True)
+            self._flush_place_fn = _jitted_fold_places_guarded(k)
+            self._pop_fn = _jitted_stream_pop
+            self._peek_fn = _jitted_stream_peek
+            self._repush_fn = _jitted_repush(k)
         self._pop_mq_fn = _jitted_stream_pop_mq
-        self._peek_fn = _jitted_stream_peek
-        self._repush_fn = _jitted_repush(k)
         self._dispatch_cell = type(self).dispatch_ledger.attach(self)
 
     @property
@@ -578,6 +750,29 @@ class StreamingAdmitter:
         self._staged[place] += 1
         self._count()
 
+    # ----------------------------------------------------- clobber guard
+    @property
+    def clobbered(self) -> int:
+        """Buffered pushes that targeted a LIVE pool slot and were masked
+        out by the guarded fold (ISSUE 9 satellite). Always 0 in correct
+        operation — the host-side allocator never hands out an occupied
+        slot — so any nonzero value means the slot accounting desynced
+        (e.g. the pool was mutated behind the admitter's back). Reading
+        this forces a device sync; :meth:`pop_ex`/:meth:`peek` check it
+        for free at their existing readback and raise."""
+        return int(self._clob)
+
+    def _check_clobbers(self):
+        # piggybacks on a sync point the caller already paid for (the
+        # pop/peek validity readback) — jnp scalar comparison is free then
+        if int(self._clob) != 0:
+            raise RuntimeError(
+                f"admission pool slot collision: {int(self._clob)} buffered "
+                "push(es) targeted a live pool slot and were dropped by the "
+                "guarded fold. The incumbent item survived, but the pushed "
+                "item is lost — the host-side slot accounting has desynced "
+                "from the device pool (was the pool mutated directly?)")
+
     # ------------------------------------------------------------------ fold
     def _account_fold(self, force: bool, place: Optional[int] = None):
         for p in range(self.num_places):
@@ -590,8 +785,17 @@ class StreamingAdmitter:
 
     def fold(self):
         """Drain buffered pushes into the pool (stream-accurate publish-on-k);
-        the engine calls this once per decode step, before admission pops."""
-        self.pool, self.buf = self._fold_fn(self.pool, self.buf)
+        the engine calls this once per decode step, before admission pops.
+        Folds run guarded (``fold(count_clobbers=True)``): a buffered entry
+        landing on a live pool slot is masked out — the incumbent survives —
+        and counted in the device-side ``self._clob`` scalar, surfaced as a
+        loud ``RuntimeError`` at the next pop/peek readback."""
+        if self.storage == "klsm":
+            self.pool, self.buf, self.store, self._clob = self._fold_fn(
+                self.pool, self.buf, self.store, self._clob)
+        else:
+            self.pool, self.buf, self._clob = self._fold_fn(
+                self.pool, self.buf, self._clob)
         self._account_fold(force=False)
         self._count()
 
@@ -607,11 +811,21 @@ class StreamingAdmitter:
         set is matched exactly (DESIGN.md §9.1/§10)."""
         if place is not None:
             mask = jnp.zeros((self.num_places,), bool).at[place].set(True)
-            self.pool, self.buf = self._flush_place_fn(
-                self.pool, self.buf, mask)
+            if self.storage == "klsm":
+                (self.pool, self.buf, self.store,
+                 self._clob) = self._flush_place_fn(
+                    self.pool, self.buf, mask, self.store, self._clob)
+            else:
+                self.pool, self.buf, self._clob = self._flush_place_fn(
+                    self.pool, self.buf, mask, self._clob)
             self._account_fold(force=False, place=place)
         else:
-            self.pool, self.buf = self._flush_fn(self.pool, self.buf)
+            if self.storage == "klsm":
+                self.pool, self.buf, self.store, self._clob = self._flush_fn(
+                    self.pool, self.buf, self.store, self._clob)
+            else:
+                self.pool, self.buf, self._clob = self._flush_fn(
+                    self.pool, self.buf, self._clob)
             self._account_fold(force=True)
         self._count()
 
@@ -637,10 +851,14 @@ class StreamingAdmitter:
             self._pops += 1
             self.pool, slot, prio, valid = self._pop_mq_fn(
                 self.pool, jnp.uint32(t))
+        elif self.storage == "klsm":
+            self.pool, self.store, slot, prio, valid = self._pop_fn(
+                self.pool, self.store, jnp.int32(place))
         else:
             self.pool, slot, prio, valid = self._pop_fn(
                 self.pool, jnp.int32(place))
         self._count()
+        self._check_clobbers()
         if not bool(valid):
             return None
         s = int(slot)
@@ -659,9 +877,14 @@ class StreamingAdmitter:
             raise RuntimeError(
                 "MULTIQUEUE has no peek: the sampled pop commits to the "
                 "c=2 draw, so there is no stable front to preview")
-        self.pool, _slot, prio, valid = self._peek_fn(
-            self.pool, jnp.int32(place))
+        if self.storage == "klsm":
+            self.store, _slot, prio, valid = self._peek_fn(
+                self.pool, self.store, jnp.int32(place))
+        else:
+            self.pool, _slot, prio, valid = self._peek_fn(
+                self.pool, jnp.int32(place))
         self._count()
+        self._check_clobbers()
         return float(prio) if bool(valid) else None
 
     def repush(self, slot: int, place: int, priority: float):
@@ -681,8 +904,13 @@ class StreamingAdmitter:
                 "vs the host oracle; fold() first")
         item = self._running.pop(slot)
         self._items[slot] = item
-        self.pool = self._repush_fn(
-            self.pool, jnp.int32(slot), jnp.int32(place), float(priority))
+        if self.storage == "klsm":
+            self.pool, self.store = self._repush_fn(
+                self.pool, self.store, jnp.int32(slot), jnp.int32(place),
+                float(priority))
+        else:
+            self.pool = self._repush_fn(
+                self.pool, jnp.int32(slot), jnp.int32(place), float(priority))
         self._arrival += 1
         u = self._unpub[place] + 1
         self._unpub[place] = 0 if (self.k == 0 or u >= self.k) else u

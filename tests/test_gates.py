@@ -67,6 +67,14 @@ def good_multiqueue():
              "oracle_identical": True}]
 
 
+def good_klsm():
+    return [{"structure": "sweep", "capacity": 512, "P": 4, "k": 4,
+             "levels": 8, "flat_us_per_pop": 27.5, "klsm_us_per_pop": 11.3},
+            {"structure": "sweep", "capacity": 16384, "P": 4, "k": 4,
+             "levels": 13, "flat_us_per_pop": 982.2,
+             "klsm_us_per_pop": 24.0, "oracle_identical": True}]
+
+
 CASES = [
     ("fused_step:dispatches", "BENCH_fused_step.json", good_fused_step,
      [lambda r: r[1].__setitem__("dispatches_per_step", 4.0)]),
@@ -87,6 +95,13 @@ CASES = [
       lambda r: r[2].__setitem__("oracle_identical", False),
       lambda r: r.pop(2),                  # rank probe row vanished
       lambda r: r.pop(1)]),                # multiqueue sweep row vanished
+    ("klsm:scaling", "BENCH_klsm.json", good_klsm,
+     [lambda r: r[1].__setitem__("klsm_us_per_pop", 983.0),
+      lambda r: r[1].__setitem__("oracle_identical", False),
+      lambda r: r.pop(1),                  # deepest-capacity row vanished
+      # identity must ride the DEEPEST row — moving it shallower is drift
+      lambda r: (r[1].pop("oracle_identical"),
+                 r[0].__setitem__("oracle_identical", True))]),
 ]
 
 

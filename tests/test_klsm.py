@@ -1,0 +1,539 @@
+"""Hierarchical k-LSM published storage (ISSUE 9 tentpole contract):
+
+  * the geometric level layout is well-formed (caps double, L minimal),
+  * the jitted core ops — ``klsm_sync`` + ``klsm_pop``/``klsm_peek``/
+    ``klsm_pop_fill`` — pop bit-identically to the flat ``stream_pop``
+    plane on randomized push/publish/pop traces, across k ∈ {0, 1, 4},
+    deep multi-level overflow cascades, and f32 priority collisions
+    (pure (priority, uid) tie-break),
+  * ``StreamingAdmitter(storage="klsm")`` == ``HostKLSM`` ==
+    ``HybridKQueue(spy="min_index")`` pop-for-pop, peeks/flushes/retain-
+    mode repush included,
+  * the fused and continuous planes produce identical StepRecords under
+    either storage,
+  * invalid combinations (klsm + multiqueue, klsm + fused preemption)
+    raise up front,
+  * satellite guards: pool-capacity exhaustion raises at push, and a
+    fold that would clobber a LIVE pool slot masks the write and raises
+    loudly at the next pop/peek readback,
+  * a nightly fuzz soak (slow marker) with the soak_repro.json idiom.
+
+Every device op here runs jitted — the eager path compiles thousands of
+tiny XLA programs per trace (each ``lax.cond`` branch of the cascade) and
+is not a supported way to drive the store.
+"""
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kpriority as kp
+from repro.core.host_queue import HostKLSM, HybridKQueue
+from repro.serve import streaming
+from repro.serve.fused_step import toy_loop
+from repro.serve.streaming import PlanBook, StreamingAdmitter
+
+PRIO_GRID = [i / 4.0 for i in range(8)]
+
+
+# ---------------------------------------------------------------------------
+# geometry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k", [(1, 0), (7, 1), (64, 4), (100, 3), (256, 0)])
+def test_klsm_geometry_wellformed(m, k):
+    big_k, levels, caps, offs, width = kp.klsm_geometry(m, k)
+    assert big_k == max(k, 1)
+    assert caps == [big_k << l for l in range(levels)]
+    # L minimal: the deepest level alone holds M; one fewer would not
+    assert caps[-1] >= m
+    assert levels == 1 or caps[-2] < m
+    assert offs == [big_k * ((1 << l) - 1) for l in range(levels)]
+    assert width == big_k * ((1 << levels) - 1)
+    st = kp.klsm_init(m, 3, k=k)
+    assert st.lv_prio.shape == (3, width)
+    assert st.in_level.shape == (m,)
+
+
+# ---------------------------------------------------------------------------
+# jitted core-op differential: klsm plane == flat plane
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k",))
+def _push_publish(pool, mask, prios, creators, tie, *, k):
+    pool = kp.push_batch(pool, mask, prios, creators, tie=tie)
+    return kp.publish(pool, k=k, force=(k == 0))
+
+
+@partial(jax.jit, static_argnames=("batch_cap",))
+def _sync(pool, store, *, batch_cap):
+    return kp.klsm_sync(pool, store, batch_cap=batch_cap)
+
+
+_jpop_flat = jax.jit(kp.stream_pop)
+_jpop_klsm = jax.jit(kp.klsm_pop)
+_jpeek_flat = jax.jit(kp.stream_peek)
+_jpeek_klsm = jax.jit(kp.klsm_peek)
+
+
+def _drive_core(seed, places, k, m=48, steps=30, peek_rate=0.25):
+    """One randomized trace of push/publish/sync vs pop/peek, asserting the
+    two planes agree at every probe. Returns pops performed."""
+    rng = np.random.default_rng(seed)
+    flat = kp.init_pool(m, places)
+    pool = kp.init_pool(m, places)
+    store = kp.klsm_init(m, places, k=k)
+    free = list(range(m))
+    pops = 0
+
+    def push_round(t, nmax=5):
+        nonlocal flat, pool, store
+        nb = min(int(rng.integers(0, nmax)), len(free))
+        mask = np.zeros(m, bool)
+        prios = np.zeros(m, np.float32)
+        crs = np.zeros(m, np.int32)
+        tie = np.zeros(m, np.int32)
+        for j in range(nb):
+            s = free.pop()
+            mask[s] = True
+            prios[s] = PRIO_GRID[rng.integers(len(PRIO_GRID))]
+            crs[s] = int(rng.integers(places))
+            tie[s] = t * 100 + j
+        args = (jnp.asarray(mask), jnp.asarray(prios), jnp.asarray(crs),
+                jnp.asarray(tie))
+        flat = _push_publish(flat, *args, k=k)
+        pool = _push_publish(pool, *args, k=k)
+        store = _sync(pool, store, batch_cap=16)
+
+    def pop_once(p):
+        nonlocal flat, pool, store, pops
+        pj = jnp.int32(p)
+        if rng.random() < peek_rate:
+            _, fs, fp, fv = _jpeek_flat(flat, pj)
+            store2, ks, kpr, kv = _jpeek_klsm(pool, store, pj)
+            store = store2
+            assert bool(fv) == bool(kv)
+            if bool(fv):
+                assert int(fs) == int(ks) and float(fp) == float(kpr)
+        flat, fs, fp, fv = _jpop_flat(flat, pj)
+        pool, store, ks, kpr, kv = _jpop_klsm(pool, store, pj)
+        assert bool(fv) == bool(kv), (seed, places, k, p)
+        if bool(fv):
+            assert int(fs) == int(ks), (seed, int(fs), int(ks))
+            assert float(fp) == float(kpr)
+            free.append(int(fs))
+            pops += 1
+        return bool(fv)
+
+    for t in range(steps):
+        push_round(t)
+        for _ in range(int(rng.integers(0, 4))):
+            pop_once(int(rng.integers(places)))
+    # full drain — exercises spy acquisition + empty-queue agreement
+    misses = 0
+    p = 0
+    while misses <= places:
+        misses = 0 if pop_once(p % places) else misses + 1
+        p += 1
+    return pops
+
+
+@pytest.mark.parametrize("places,k", [(2, 1), (3, 2), (4, 4), (2, 0), (5, 3)])
+def test_klsm_core_matches_flat_randomized(places, k):
+    total = sum(_drive_core(seed, places, k) for seed in range(3))
+    assert total > 0
+
+
+def test_klsm_core_f32_tie_collisions():
+    """All-equal priorities: selection degenerates to pure uid order, the
+    worst case for the (prio, seq) lexicographic tie-break."""
+    for seed in range(3):
+        assert _drive_core(seed, 3, 2, peek_rate=0.5) > 0 or True
+    # literal collision trace: every priority identical
+    places, k, m = 3, 2, 32
+    flat = kp.init_pool(m, places)
+    pool = kp.init_pool(m, places)
+    store = kp.klsm_init(m, places, k=k)
+    mask = np.zeros(m, bool)
+    mask[:24] = True
+    prios = np.full(m, 1.25, np.float32)
+    crs = (np.arange(m) % places).astype(np.int32)
+    tie = np.arange(m, dtype=np.int32)
+    args = (jnp.asarray(mask), jnp.asarray(prios), jnp.asarray(crs),
+            jnp.asarray(tie))
+    flat = _push_publish(flat, *args, k=k)
+    pool = _push_publish(pool, *args, k=k)
+    store = _sync(pool, store, batch_cap=m)
+    for i in range(26):
+        p = jnp.int32(i % places)
+        flat, fs, fp, fv = _jpop_flat(flat, p)
+        pool, store, ks, kpr, kv = _jpop_klsm(pool, store, p)
+        assert bool(fv) == bool(kv)
+        if bool(fv):
+            assert int(fs) == int(ks) and float(fp) == float(kpr)
+
+
+def test_klsm_deep_overflow_cascade():
+    """k=1 with a large batch forces every level to spill repeatedly —
+    the multi-level merge cascade, not just level-0 absorption."""
+    places, k, m = 2, 1, 128
+    rng = np.random.default_rng(11)
+    flat = kp.init_pool(m, places)
+    pool = kp.init_pool(m, places)
+    store = kp.klsm_init(m, places, k=k)
+    # publish in dribbles of ≤ 3 so the cascade sees many small sorted runs
+    slots = list(rng.permutation(m))
+    t = 0
+    while slots:
+        take = [slots.pop() for _ in range(min(3, len(slots)))]
+        mask = np.zeros(m, bool)
+        prios = np.zeros(m, np.float32)
+        crs = np.zeros(m, np.int32)
+        tie = np.zeros(m, np.int32)
+        for j, s in enumerate(take):
+            mask[s] = True
+            prios[s] = PRIO_GRID[rng.integers(len(PRIO_GRID))]
+            crs[s] = int(rng.integers(places))
+            tie[s] = t * 10 + j
+        args = (jnp.asarray(mask), jnp.asarray(prios), jnp.asarray(crs),
+                jnp.asarray(tie))
+        flat = _push_publish(flat, *args, k=k)
+        pool = _push_publish(pool, *args, k=k)
+        store = _sync(pool, store, batch_cap=8)
+        t += 1
+    drained = 0
+    for i in range(m + 2 * places):
+        p = jnp.int32(i % places)
+        flat, fs, fp, fv = _jpop_flat(flat, p)
+        pool, store, ks, kpr, kv = _jpop_klsm(pool, store, p)
+        assert bool(fv) == bool(kv)
+        if bool(fv):
+            assert int(fs) == int(ks) and float(fp) == float(kpr)
+            drained += 1
+    assert drained == m
+
+
+def test_klsm_pop_fill_matches_flat():
+    places, k, m, S = 3, 2, 64, 5
+    rng = np.random.default_rng(5)
+    flat = kp.init_pool(m, places)
+    pool = kp.init_pool(m, places)
+    store = kp.klsm_init(m, places, k=k)
+    mask = np.zeros(m, bool)
+    mask[:40] = True
+    prios = rng.choice(PRIO_GRID, m).astype(np.float32)
+    crs = (np.arange(m) % places).astype(np.int32)
+    tie = np.arange(m, dtype=np.int32)
+    args = (jnp.asarray(mask), jnp.asarray(prios), jnp.asarray(crs),
+            jnp.asarray(tie))
+    flat = _push_publish(flat, *args, k=k)
+    pool = _push_publish(pool, *args, k=k)
+    store = _sync(pool, store, batch_cap=m)
+    fill_flat = jax.jit(kp.stream_pop_fill)
+    fill_klsm = jax.jit(kp.klsm_pop_fill)
+    places_vec = jnp.arange(S, dtype=jnp.int32) % places
+    for round_ in range(10):
+        want = jnp.asarray(rng.random(S) < 0.7)
+        flat, rf = fill_flat(flat, want, places_vec)
+        pool, store, rk = fill_klsm(pool, store, want, places_vec)
+        np.testing.assert_array_equal(np.asarray(rf.valid),
+                                      np.asarray(rk.valid))
+        v = np.asarray(rf.valid)
+        np.testing.assert_array_equal(np.asarray(rf.slot)[v],
+                                      np.asarray(rk.slot)[v])
+        np.testing.assert_array_equal(np.asarray(rf.prio)[v],
+                                      np.asarray(rk.prio)[v])
+
+
+# ---------------------------------------------------------------------------
+# admitter differential: device klsm == host klsm == flat host oracle
+# ---------------------------------------------------------------------------
+
+def _drive_admitter(seed, places, k, steps=40, retain=False):
+    rng = np.random.default_rng(seed)
+    dev = StreamingAdmitter(places, k, capacity=256, buffer_cap=16,
+                            storage="klsm", retain=retain)
+    hk = HostKLSM(places, k)
+    hq = HybridKQueue(places, k, spy="min_index")
+    uid = 0
+    running = []
+    for t in range(steps):
+        for _ in range(int(rng.integers(0, 6))):
+            p = int(rng.integers(places))
+            pr = float(np.float32(PRIO_GRID[rng.integers(len(PRIO_GRID))]))
+            dev.push(p, pr, uid)
+            hk.push(p, pr, uid)
+            hq.push(p, pr, uid)
+            uid += 1
+        dev.fold()
+        if rng.random() < 0.15:
+            dev.flush()
+            for p in range(places):
+                hk.flush(p)
+                hq.flush(p)
+        if rng.random() < 0.3:
+            p = int(rng.integers(places))
+            assert dev.peek(p) == hk.peek(p) == hq.peek(p)
+        for _ in range(int(rng.integers(0, 5))):
+            p = int(rng.integers(places))
+            a = dev.pop_ex(p)
+            b, c = hk.pop(p), hq.pop(p)
+            assert (a is None) == (b is None) == (c is None), (t, a, b, c)
+            if a is not None:
+                assert a[0] == b[0] == c[0] and a[1] == b[1] == c[1]
+                if retain:
+                    running.append((a[2], a[0], p))
+        while retain and running and rng.random() < 0.7:
+            slot, pr, p = running.pop(int(rng.integers(len(running))))
+            if rng.random() < 0.5 and sum(dev._staged) == 0:
+                item = dev._running[slot]
+                dev.repush(slot, p, pr)
+                hk.push(p, pr, item)
+                hq.push(p, pr, item)
+            else:
+                dev.release(slot)
+    dev.flush()
+    for p in range(places):
+        hk.flush(p)
+        hq.flush(p)
+    p, miss = 0, 0
+    while miss <= places:
+        a = dev.pop_ex(p % places)
+        b, c = hk.pop(p % places), hq.pop(p % places)
+        assert (a is None) == (b is None) == (c is None)
+        p += 1
+        if a is None:
+            miss += 1
+            continue
+        miss = 0
+        assert a[0] == b[0] == c[0] and a[1] == b[1] == c[1]
+        if retain:
+            dev.release(a[2])
+    assert len(hk) == len(hq)
+    return uid
+
+
+@pytest.mark.parametrize("places,k", [(2, 1), (3, 2), (4, 4), (2, 0)])
+def test_klsm_admitter_matches_hosts(places, k):
+    assert _drive_admitter(0, places, k) > 0
+
+
+def test_klsm_admitter_retain_repush_matches_hosts():
+    for seed in range(2):
+        assert _drive_admitter(seed, 3, 2, retain=True) > 0
+
+
+def test_klsm_host_twin_matches_flat_host():
+    """HostKLSM alone vs HybridKQueue — the host twin is an independent
+    reimplementation, so pin it directly too (not only via the device)."""
+    rng = np.random.default_rng(2)
+    places, k = 4, 3
+    a, b = HostKLSM(places, k), HybridKQueue(places, k, spy="min_index")
+    uid = 0
+    for _ in range(300):
+        r = rng.random()
+        p = int(rng.integers(places))
+        if r < 0.5:
+            pr = float(np.float32(PRIO_GRID[rng.integers(len(PRIO_GRID))]))
+            a.push(p, pr, uid)
+            b.push(p, pr, uid)
+            uid += 1
+        elif r < 0.6:
+            a.flush(p)
+            b.flush(p)
+        elif r < 0.7:
+            assert a.peek(p) == b.peek(p)
+        else:
+            assert a.pop(p) == b.pop(p)
+    while len(b):
+        for p in range(places):
+            a.flush(p)
+            b.flush(p)
+        assert a.pop(0) == b.pop(0)
+    assert len(a) == 0
+
+
+# ---------------------------------------------------------------------------
+# fused / continuous planes
+# ---------------------------------------------------------------------------
+
+def _drive_fused(storage, seed, chunk=4):
+    rng = np.random.default_rng(seed)
+    loop = toy_loop(slots=4, frontends=3, k=2, max_len=32, capacity=64,
+                    buffer_cap=8, storage=storage)
+    uid = 0
+    out = []
+    for _ in range(6):
+        for _ in range(int(rng.integers(0, 5))):
+            p = int(rng.integers(3))
+            pr = float(np.float32(PRIO_GRID[rng.integers(len(PRIO_GRID))]))
+            toks = list(rng.integers(1, 12, size=int(rng.integers(1, 5))))
+            loop.submit(p, pr, f"r{uid}", toks, int(rng.integers(1, 5)))
+            uid += 1
+        for r in loop.run_steps(chunk):
+            out.append((tuple(r.admitted), tuple(r.tokens),
+                        tuple(r.finished)))
+    loop.flush()
+    for r in loop.run_steps(8):
+        out.append((tuple(r.admitted), tuple(r.tokens), tuple(r.finished)))
+    return out
+
+
+def test_klsm_fused_matches_flat():
+    for seed in range(2):
+        assert _drive_fused("klsm", seed) == _drive_fused("flat", seed)
+
+
+def _drive_continuous(storage, seed, chunk=4):
+    rng = np.random.default_rng(seed)
+    loop = toy_loop(slots=4, frontends=3, k=2, max_len=64, capacity=128,
+                    continuous=True, storage=storage)
+    book = PlanBook(3, loop.buffer_cap)
+    uid = 0
+    out = []
+    for _ in range(6):
+        for _ in range(int(rng.integers(0, 5))):
+            p = int(rng.integers(3))
+            pr = float(np.float32(PRIO_GRID[rng.integers(len(PRIO_GRID))]))
+            plen = int(rng.integers(1, 4))
+            ps, u = loop.submit_planned(p, pr, uid,
+                                        list(range(1, plen + 1)),
+                                        int(rng.integers(1, 5)))
+            assert book.publish(p, ps, pr, u)
+            uid += 1
+        loop.publish_plan(book.seal())
+        for r in loop.run_steps(chunk):
+            out.append((tuple(r.admitted), tuple(r.tokens),
+                        tuple(r.finished)))
+    return out
+
+
+def test_klsm_continuous_matches_flat():
+    for seed in range(2):
+        assert _drive_continuous("klsm", seed) == _drive_continuous(
+            "flat", seed)
+
+
+# ---------------------------------------------------------------------------
+# invalid combinations
+# ---------------------------------------------------------------------------
+
+def test_klsm_invalid_combinations_raise():
+    with pytest.raises(ValueError, match="storage"):
+        StreamingAdmitter(2, 1, storage="nope")
+    with pytest.raises(ValueError, match="MULTIQUEUE"):
+        StreamingAdmitter(2, 1, storage="klsm", policy="multiqueue")
+    with pytest.raises(ValueError, match="preemption"):
+        toy_loop(slots=2, frontends=2, k=1, storage="klsm",
+                 preemption="margin", margin=0.5)
+    with pytest.raises(ValueError, match="min_index"):
+        HostKLSM(2, 1, spy="random")
+
+
+# ---------------------------------------------------------------------------
+# satellite guards: capacity exhaustion + live-slot clobber surfacing
+# ---------------------------------------------------------------------------
+
+def test_admitter_capacity_exhaustion_raises_not_clobbers():
+    """Tight capacity with retained slots: the push that would exceed the
+    pool raises loudly instead of silently overwriting an active slot."""
+    adm = StreamingAdmitter(2, 0, capacity=4, buffer_cap=4, retain=True)
+    for i in range(4):
+        adm.push(i % 2, 1.0 + i, f"r{i}")
+    adm.fold()
+    got = adm.pop_ex(0)
+    assert got is not None            # slot stays RESERVED (retain mode)
+    with pytest.raises(RuntimeError, match="admission pool full"):
+        adm.push(0, 9.0, "overflow")
+    adm.release(got[2])               # freeing the slot unblocks the push
+    adm.push(0, 9.0, "ok-now")
+    assert adm.clobbered == 0
+
+
+@pytest.mark.parametrize("storage", ["flat", "klsm"])
+def test_fold_clobber_guard_raises_loudly(storage):
+    """Drive a buffered push onto a LIVE pool slot (the desync the guard
+    exists for): the fold masks the write — the incumbent survives — and
+    the next pop raises with a diagnosis instead of corrupting the pool."""
+    adm = StreamingAdmitter(2, 0, capacity=8, buffer_cap=4, storage=storage)
+    adm.push(0, 1.0, "victim")
+    adm.fold()                        # slot 0 is now live in the pool
+    assert adm.clobbered == 0
+    # bypass the allocator: stage a push aimed straight at the live slot
+    adm.buf = streaming._jitted_buffer_push(adm.buf, 1, 0, 0.5, 99)
+    adm._staged[1] += 1
+    adm.fold()
+    # the incumbent survived the masked fold with its original priority,
+    # and the counter surfaced the dropped write
+    assert adm.clobbered == 1
+    assert bool(adm.pool.active[0]) and float(adm.pool.prio[0]) == 1.0
+    with pytest.raises(RuntimeError, match="collision"):
+        adm.pop_ex(0)
+
+
+def test_fold_count_clobbers_unit():
+    """fold(count_clobbers=True) reports exactly the colliding entries and
+    masks only those — disjoint entries land normally."""
+    pool = kp.init_pool(8, 2)
+    buf = streaming.init_buffer(2, 4)
+    buf = streaming.buffer_push(buf, 0, 3, 1.0, 0)
+    pool, buf = streaming.fold(pool, buf, k=0)
+    assert bool(pool.active[3])
+    buf = streaming.buffer_push(buf, 0, 3, 0.5, 1)   # collides with slot 3
+    buf = streaming.buffer_push(buf, 1, 5, 2.0, 2)   # lands fine
+    pool, buf, clob = streaming.fold(pool, buf, k=0, count_clobbers=True)
+    assert int(clob) == 1
+    assert bool(pool.active[5])
+    assert float(pool.prio[3]) == 1.0                # incumbent kept
+
+
+# ---------------------------------------------------------------------------
+# nightly fuzz soak (slow marker; SOAK_SEEDS/SOAK_SEED_BASE env contract)
+# ---------------------------------------------------------------------------
+
+def _soak_seeds(default: int):
+    n = int(os.environ.get("SOAK_SEEDS", str(default)))
+    base = int(os.environ.get("SOAK_SEED_BASE", "0"))
+    return range(base, base + n)
+
+
+def _dump_soak_repro(test: str, seed: int, err: Exception):
+    out = os.path.join(os.path.dirname(__file__), "out")
+    os.makedirs(out, exist_ok=True)
+    with open(os.path.join(out, "soak_repro.json"), "w") as f:
+        json.dump({"test": test, "seed": seed,
+                   "repro": f"SOAK_SEEDS=1 SOAK_SEED_BASE={seed} pytest "
+                            f"-m slow tests/test_klsm.py -k {test}",
+                   "error": f"{type(err).__name__}: {err}"[:2000]}, f,
+                  indent=1)
+
+
+@pytest.mark.slow
+def test_klsm_fuzz_soak():
+    """Long-trace fuzz: the admitter triple-differential (device klsm ==
+    host klsm == flat oracle) at 120 steps with retain/repush enabled,
+    over the SOAK_SEEDS budget; a failing seed dumps soak_repro.json."""
+    for seed in _soak_seeds(6):
+        places = 2 + seed % 4
+        k = (seed * 7) % 5
+        try:
+            _drive_admitter(1000 + seed, places, k, steps=120, retain=True)
+        except Exception as e:
+            _dump_soak_repro("test_klsm_fuzz_soak", seed, e)
+            raise
+
+
+@pytest.mark.slow
+def test_klsm_core_fuzz_soak():
+    """Core-op fuzz at deeper traces (more cascade spills per trace)."""
+    for seed in _soak_seeds(4):
+        try:
+            _drive_core(2000 + seed, 2 + seed % 3, (seed * 3) % 5,
+                        m=96, steps=60)
+        except Exception as e:
+            _dump_soak_repro("test_klsm_core_fuzz_soak", seed, e)
+            raise

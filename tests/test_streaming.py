@@ -64,6 +64,65 @@ def test_push_batch_stages_without_publishing():
     assert int(pub.unpub_pushes[0]) == 0
 
 
+def test_push_batch_overwrite_unpublished_accounting():
+    """Overwriting a still-unpublished active slot (eager dead-task
+    elimination) replaces one unpublished item with another — the creator's
+    ``unpub_pushes`` must NOT advance twice, or the counter drifts past the
+    ≤ k−1 structural invariant and publish-on-k fires early relative to the
+    host oracle (ISSUE 9 satellite regression)."""
+    m, places, k = 16, 2, 3
+    st = kp.init_pool(m, places)
+    one = jnp.zeros(m, bool).at[0].set(True)
+    st = kp.push_batch(st, one, jnp.full(m, 5.0), jnp.zeros(m, jnp.int32))
+    assert int(st.unpub_pushes[0]) == 1
+    # overwrite the same (still-unpublished) slot twice more: counter holds
+    for _ in range(2):
+        st = kp.push_batch(st, one, jnp.full(m, 4.0),
+                           jnp.zeros(m, jnp.int32))
+        assert int(st.unpub_pushes[0]) == 1
+    # counter == true unpublished count, so publish-on-k must NOT fire
+    assert int((st.active & ~st.published).sum()) == 1
+    assert not bool(kp.publish(st, k=k).published.any())
+    # cross-creator overwrite migrates the count (old creator down, new up)
+    st = kp.push_batch(st, one, jnp.full(m, 3.0), jnp.ones(m, jnp.int32))
+    assert int(st.unpub_pushes[0]) == 0 and int(st.unpub_pushes[1]) == 1
+    # overwrite of a PUBLISHED slot is a fresh push: counts exactly once
+    st = kp.publish(st, k=0)
+    st = kp.push_batch(st, one, jnp.full(m, 2.0), jnp.zeros(m, jnp.int32))
+    assert int(st.unpub_pushes[0]) == 1 and int(st.unpub_pushes[1]) == 0
+
+
+def test_push_batch_overwrite_randomized_host_differential():
+    """Randomized overlapping push_batch/publish trace with heavy slot
+    reuse: ``unpub_pushes`` must track the exact per-creator unpublished
+    count (a host-side python recomputation), so device publish-on-k fires
+    at exactly the host's threshold — never early (the pre-fix drift)."""
+    m, places, k = 12, 3, 4
+    rng = np.random.default_rng(17)
+    st = kp.init_pool(m, places)
+    host_unpub = {}       # slot -> creator, host truth for unpublished slots
+    for t in range(60):
+        mask = rng.random(m) < 0.35          # dense: frequent overwrites
+        creators = rng.integers(0, places, m).astype(np.int32)
+        st = kp.push_batch(
+            st, jnp.asarray(mask),
+            jnp.asarray(rng.random(m).astype(np.float32)),
+            jnp.asarray(creators),
+            tie=jnp.asarray(np.arange(m, dtype=np.int32)))
+        for s in np.flatnonzero(mask):
+            host_unpub[int(s)] = int(creators[s])
+        dev = np.asarray(st.unpub_pushes)
+        ref = np.zeros(places, np.int64)
+        for c in host_unpub.values():
+            ref[c] += 1
+        np.testing.assert_array_equal(dev, ref, err_msg=f"step {t}")
+        if rng.random() < 0.4:
+            st = kp.publish(st, k=k)
+            fired = {p for p in range(places) if ref[p] >= k}
+            host_unpub = {s: c for s, c in host_unpub.items()
+                          if c not in fired}
+
+
 def test_publish_force_is_flush():
     m, places, k = 32, 3, 10
     st = kp.init_pool(m, places)
