@@ -135,22 +135,43 @@ def _check_slo(rows: list) -> str:
             f"{bound} (static {static['max_wait_by_class'][starved]})")
 
 
-def _check_multiqueue(rows: list) -> str:
+def _by_structure(rows: list, *need: str) -> dict:
     by = {}
     for r in rows:
         if not isinstance(r, dict) or "structure" not in r:
             raise AssertionError(f"row without a 'structure' key: {r!r}")
         by.setdefault(r["structure"], r)
-    for need in ("multiqueue", "rank_probe"):
-        if need not in by:
-            raise AssertionError(
-                f"no {need!r} row (have {sorted(by)})")
+    for n in need:
+        if n not in by:
+            raise AssertionError(f"no {n!r} row (have {sorted(by)})")
+    return by
+
+
+def _check_multiqueue(rows: list) -> str:
+    by = _by_structure(rows, "multiqueue", "rank_probe")
     probe = by["rank_probe"]
     assert probe["oracle_identical"] is True, rows
     assert probe["mean_rank"] <= probe["rank_bound"], rows
     return (f"mean popped rank {probe['mean_rank']} <= "
             f"{probe['rank_bound']} (3·P, P = {probe['P']}); "
             "device == host oracle")
+
+
+def _check_multiqueue_fused(rows: list) -> str:
+    by = _by_structure(rows, "serve_eager", "serve_fused", "rank_probe")
+    eager, fused = by["serve_eager"], by["serve_fused"]
+    assert fused["oracle_identical"] is True, rows
+    assert (fused["dispatches_per_step"]
+            <= eager["dispatches_per_step"]), rows
+    assert fused["aborts_per_step"] == eager["aborts_per_step"], rows
+    # the rank contract must hold on the SAME artifact the serving rows
+    # rode in on — a fused win bought by a degraded sampled pop is no win
+    probe = by["rank_probe"]
+    assert probe["mean_rank"] <= probe["rank_bound"], rows
+    return (f"fused {fused['dispatches_per_step']}/step <= eager "
+            f"{eager['dispatches_per_step']}/step; "
+            f"{fused['aborts_per_step']} aborts/step on both planes; "
+            f"rank {probe['mean_rank']} <= {probe['rank_bound']}")
 
 
 def _check_klsm(rows: list) -> str:
@@ -193,6 +214,11 @@ GATES: List[Gate] = [
          "(mean popped rank above 3·P) or drifted from the host oracle — "
          "ρ is structurally unbounded, so this probabilistic row is the "
          "only quality gate the policy has (ISSUE 8 acceptance)"),
+    Gate("BENCH_multiqueue.json", "multiqueue:fused", _check_multiqueue_fused,
+         "the fused MULTIQUEUE plane's miss-tolerant fill (§16 two-phase "
+         "pop) lost its dispatch win over the eager plane, its abort "
+         "stream drifted from the eager twin, or the rank contract broke "
+         "on the serving artifact (ISSUE 10 acceptance)"),
     Gate("BENCH_klsm.json", "klsm:scaling", _check_klsm,
          "the klsm level-store pop lost its deep-capacity win over the "
          "flat O(M) pool scan, or the device plane drifted from the "

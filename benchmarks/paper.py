@@ -684,10 +684,131 @@ def batched_speedup(n=1000, p=0.2, graphs=6, places=8, k=8):
     return rows
 
 
+def _mq_fused_rows(requests=48, steps=40, slots=4, frontends=4, chunk=8,
+                   max_new=3, repeats=2):
+    """The MULTIQUEUE serving planes (ISSUE 10, DESIGN.md §16): the fused
+    miss-tolerant fill vs the eager device plane on one arrival trace.
+
+    Same shape as ``fused_step_throughput`` — toy decode, submission path
+    untimed — but the fill is the §16 retry loop: per empty slot up to
+    ``1 + MQ_POP_RETRIES`` sampled attempts, then CONTINUE to the next
+    slot (a sampled miss says nothing about global emptiness, unlike the
+    HYBRID stop-at-first-miss front). Each row reports ``aborts_per_step``
+    (the aborted selects of the two-phase pop contract) next to
+    ``dispatches_per_step``; admission order and the abort streams are
+    asserted identical across planes in-run, and the ``multiqueue:fused``
+    gate re-checks fused dispatches/step <= eager from the artifact."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.kpriority import MQ_POP_RETRIES
+    from repro.serve.fused_step import toy_loop
+    from repro.serve.streaming import StreamingAdmitter
+
+    rng = np.random.default_rng(0)
+    trace = [[] for _ in range(steps)]
+    for uid in range(requests):
+        t = int(rng.integers(0, max(1, steps // 2)))
+        trace[t].append((uid % frontends,
+                         float(rng.integers(0, 64)) / 8.0, uid))
+    cap = requests + slots
+
+    eager_decode = jax.jit(lambda t, q: ((t * 7 + q) % 13).astype(jnp.int32))
+
+    def run_eager():
+        adm = StreamingAdmitter(frontends, 0, capacity=cap,
+                                policy="multiqueue")
+        active = [None] * slots
+        tok = jnp.zeros((slots,), jnp.int32)
+        pos = jnp.zeros((slots,), jnp.int32)
+        order, decode_calls = [], 0
+        dt = 0.0
+        for burst in trace:
+            for (p, pr, uid) in burst:     # push routes to the hashed home
+                adm.push(p, pr, uid)       # place (untimed, as in run_fused)
+            t0 = time.time()
+            adm.fold()
+            for s in range(slots):
+                if active[s] is not None:
+                    continue
+                for _ in range(1 + MQ_POP_RETRIES):     # §16 retry loop
+                    got = adm.pop(s % frontends)
+                    if got is not None:
+                        break
+                if got is None:
+                    continue               # miss-tolerant: on to the next slot
+                order.append(got[1])
+                active[s] = max_new - 1
+            tok = eager_decode(tok, pos)
+            decode_calls += 1
+            for s in range(slots):
+                if active[s] is None:
+                    continue
+                active[s] -= 1
+                if active[s] <= 0:
+                    active[s] = None
+            dt += time.time() - t0
+        t0 = time.time()
+        jax.block_until_ready(tok)
+        dt += time.time() - t0
+        return (order, adm.dispatches - requests + decode_calls, dt,
+                adm.pop_misses)
+
+    def run_fused():
+        loop = toy_loop(slots=slots, frontends=frontends, k=0,
+                        capacity=cap, max_len=10_000, policy="multiqueue")
+        for t, burst in enumerate(trace, start=1):
+            for (p, pr, uid) in burst:
+                loop.submit(p, pr, uid, np.arange(2, dtype=np.int32) + uid,
+                            max_new, at_step=t)
+        d0 = loop.dispatches
+        order = []
+        t0 = time.time()
+        done = 0
+        while done < steps:
+            n = min(chunk, steps - done)
+            for rec in loop.run_steps(n):
+                order.extend(uid for (_s, uid, _t, _p) in rec.admitted)
+            done += n
+        jax.block_until_ready(loop.carry.pool.prio)
+        dt = time.time() - t0
+        return order, loop.dispatches - d0, dt, loop.pop_aborts, loop
+
+    rows = []
+    for name, fn in (("serve_eager", run_eager), ("serve_fused", run_fused)):
+        # warm (compile) pass — held through the repeats, same weak-cache
+        # discipline as fused_step_throughput (§12)
+        warm = fn()
+        best = min((fn() for _ in range(repeats)), key=lambda r: r[2])
+        del warm
+        order, dispatches, dt, aborts = best[:4]
+        rows.append({
+            "fig": "multiqueue", "structure": name, "P": frontends,
+            "requests": requests, "steps": steps, "slots": slots,
+            "chunk": chunk if name == "serve_fused" else 1,
+            "dispatches_per_step": round(dispatches / steps, 3),
+            "aborts_per_step": round(aborts / steps, 3),
+            "order": order,
+            "us_per_call": round(dt * 1e6 / steps, 2),
+        })
+    assert rows[0]["order"] == rows[1]["order"], "MQ fused admission diverged"
+    assert rows[0]["aborts_per_step"] == rows[1]["aborts_per_step"], rows
+    assert (rows[1]["dispatches_per_step"]
+            < rows[0]["dispatches_per_step"]), rows
+    for r in rows:
+        r["order_len"] = len(r.pop("order"))
+        r["oracle_identical"] = True
+    return rows
+
+
 def multiqueue_section(n=800, p=0.5, places=16, graphs=2, ks=(4, 64),
-                       probe_pushes=600):
+                       probe_pushes=600, serve_requests=48, serve_steps=40,
+                       serve_repeats=2):
     """ISSUE 8: the MULTIQUEUE policy's fig5-style position + its rank
-    contract (DESIGN.md §14.2).
+    contract (DESIGN.md §14.2). ISSUE 10 adds part three: the serving
+    planes under the miss-tolerant fill (``_mq_fused_rows``, DESIGN.md
+    §16) — eager vs fused dispatches/step with aborts/step alongside,
+    order and abort streams asserted identical in-run.
 
     Part one is a k-sweep in the fig5 mould — CENTRALIZED and HYBRID rows
     per k, one k-independent MULTIQUEUE row (the structure has no publish
@@ -763,6 +884,8 @@ def multiqueue_section(n=800, p=0.5, places=16, graphs=2, ks=(4, 64),
         "oracle_identical": True,
         "us_per_call": round(wall * 1e6 / max(attempts, 1), 2),
     })
+    rows.extend(_mq_fused_rows(requests=serve_requests, steps=serve_steps,
+                               repeats=serve_repeats))
     return rows
 
 

@@ -98,7 +98,10 @@ def main() -> None:
             ks=(1, 32, 512) if args.full
             else ((4,) if args.smoke else (4, 64)),
             probe_pushes=2000 if args.full
-            else (200 if args.smoke else 600)),
+            else (200 if args.smoke else 600),
+            serve_requests=96 if args.full else (24 if args.smoke else 48),
+            serve_steps=64 if args.full else (24 if args.smoke else 40),
+            serve_repeats=1 if args.smoke else 2),
         # deep-capacity pop-cost sweep: the klsm:scaling gate compares the
         # two structures at the DEEPEST capacity, so keep the sweep's max
         # meaningful even in smoke mode
@@ -134,8 +137,10 @@ def main() -> None:
             continue
         matched += 1
         before = _serve_dispatches()
+        rows = []
         try:
-            _emit(name, fn())
+            rows = fn()
+            _emit(name, rows)
         except Exception as e:  # pragma: no cover
             failures += 1
             print(f"{name},ERROR,{type(e).__name__}: {e}", file=sys.stderr)
@@ -144,6 +149,16 @@ def main() -> None:
             if d:
                 print(f"# {name}: {d} serve-plane device dispatches",
                       file=sys.stderr)
+            # serving-plane rows: aborts/step (the §16 pop contract's
+            # aborted selects — 0.0 under exact-pop policies) printed next
+            # to the dispatches/step the gates judge
+            for r in rows:
+                if not isinstance(r, dict) or "dispatches_per_step" not in r:
+                    continue
+                tag = r.get("plane") or r.get("structure") or "?"
+                print(f"# {name}/{tag}: {r['dispatches_per_step']} "
+                      f"dispatches/step, {r.get('aborts_per_step', 0.0)} "
+                      "aborts/step", file=sys.stderr)
     if args.only and not matched:
         # a typo'd --only used to silently run zero sections (and exit 0,
         # green in CI while measuring nothing) — fail loudly instead

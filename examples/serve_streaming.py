@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.configs import get_reduced
 from repro.models import materialize, model_p
+from repro.serve.config import ServeConfig
 from repro.serve.engine import Request, ServeEngine
 
 FRONTENDS, K, SLOTS, REQUESTS = 2, 2, 3, 10
@@ -35,7 +36,8 @@ def main():
 
     def run(admission):
         eng = ServeEngine(cfg, params, slots=SLOTS, max_len=32,
-                          frontends=FRONTENDS, k=K, admission=admission)
+                          frontends=FRONTENDS, k=K,
+                          config=ServeConfig(admission=admission))
         for i, toks in enumerate(prompts):
             eng.submit(Request(rid=i, tokens=toks, max_new=4,
                                priority=prios[i]), frontend=i % FRONTENDS)

@@ -176,11 +176,14 @@ class HostKLSM:
         self._counter = itertools.count()
         self._local: List[List[tuple]] = [[] for _ in range(num_places)]
         # levels[p][l] = (run, head): run a (prio, uid)-sorted list, live
-        # region run[head:] — a level entry dies ONLY by being popped as
-        # the selected front (head += 1), the device invariant
+        # region run[head:] — a level entry dies by being popped as the
+        # selected front (head += 1), or LAZILY via pop_abort (marked
+        # dead; a dead head hides its level until repair(), the device
+        # klsm_pop_abort/klsm_repair twin, DESIGN.md §16)
         self._levels: List[List[list]] = [[] for _ in range(num_places)]
         self._spy: List[List[tuple]] = [[] for _ in range(num_places)]
         self._taken = set()
+        self._dead = set()
         self._published = set()
         self._items = {}
 
@@ -240,7 +243,10 @@ class HostKLSM:
         cands = []
         for q in range(self.num_places):
             for lvl, (run, head) in enumerate(self._levels[q]):
-                if head < len(run):
+                # a dead/taken head HIDES its whole level until repair()
+                # advances past it — the device's lazy-deletion transient
+                # (DESIGN.md §16), mirrored bit-for-bit
+                if head < len(run) and run[head][1] not in self._taken:
                     cands.append((run[head], ("head", q, lvl)))
         for rec in self._local[place]:
             if rec[1] not in self._taken:
@@ -288,6 +294,33 @@ class HostKLSM:
         got = self._front(place)
         return None if got is None else got[0][0]
 
+    # ------------------------------------------- two-phase contract twins
+    def pop_abort(self, place: int) -> Optional[Tuple[float, Any]]:
+        """Host twin of ``klsm_pop_select`` → ``klsm_pop_abort``
+        (DESIGN.md §16): select the exact front ``pop(place)`` would take,
+        but finalize its lifecycle OUT-OF-BAND — the item is consumed
+        (returned to the caller) while its level entry is only LAZILY
+        deleted: a dead head hides its whole level until :meth:`repair`.
+        Spy refs acquired during selection persist, like peek."""
+        got = self._front(place)
+        if got is None:
+            return None
+        (prio, uid), _kind = got
+        self._dead.add(uid)
+        self._taken.add(uid)
+        return prio, self._items.pop(uid)
+
+    def repair(self):
+        """Host twin of ``klsm_repair``: advance every level head past its
+        leading dead/taken entries, un-stranding the live run behind them
+        (DESIGN.md §16). Mid-run dead entries stay — that is the lazy."""
+        for q in range(self.num_places):
+            for entry in self._levels[q]:
+                run, head = entry
+                while head < len(run) and run[head][1] in self._taken:
+                    head += 1
+                entry[1] = head
+
     # --------------------------------------------------------------- queries
     def __len__(self) -> int:
         return len(self._items)
@@ -322,6 +355,7 @@ class MultiQueue:
         self._heaps: List[List[tuple]] = [[] for _ in range(num_places)]
         self._items = {}
         self._pops = 0
+        self._misses = 0
 
     def push(self, place: int, priority: float, item: Any,
              k: Optional[int] = None, now: Optional[int] = None):
@@ -344,6 +378,7 @@ class MultiQueue:
         v1, v2 = self._mq_sample(t, self.num_places)
         fronts = [h[0] for h in (self._heaps[v1], self._heaps[v2]) if h]
         if not fronts:
+            self._misses += 1
             return None
         rec = min(fronts)
         src = v1 if self._heaps[v1] and self._heaps[v1][0] == rec else v2
@@ -356,6 +391,13 @@ class MultiQueue:
         """Pop-attempt counter (misses included) — the ``t`` the device twin
         must be driven with."""
         return self._pops
+
+    @property
+    def pop_misses(self) -> int:
+        """Sampled misses (aborted attempts, DESIGN.md §16) — the host-side
+        mirror of the fused carry's abort counter; surfaced per bench
+        section as aborts/step next to dispatches/step."""
+        return self._misses
 
     def __len__(self) -> int:
         return len(self._items)

@@ -111,6 +111,14 @@ _MQ_POP_B = 0x85EBCA77       # xxhash PRIME32_3
 _MQ_POP_C1 = 0x7F4A7C15
 _MQ_POP_C2 = 0xC2B2AE3D
 
+# Extra sample-and-select attempts a miss-tolerant MULTIQUEUE fill makes
+# per decode slot before moving on (DESIGN.md §16). A sampled miss says
+# nothing about global emptiness, so the admit loop retries a bounded
+# number of times — bounded so the traced program stays static — and the
+# SAME constant drives the host-side admit loop, which is what keeps the
+# pop-counter streams of the two planes aligned attempt-for-attempt.
+MQ_POP_RETRIES = 2
+
 
 def mq_place(prios: jnp.ndarray, uids: jnp.ndarray,
              num_places: int) -> jnp.ndarray:
@@ -186,6 +194,21 @@ class PopResult(NamedTuple):
     slot: jnp.ndarray   # i32[P]  popped slot per place (undefined where ~valid)
     prio: jnp.ndarray   # f32[P]
     valid: jnp.ndarray  # bool[P]
+
+
+class PopTicket(NamedTuple):
+    """Two-phase pop candidate (DESIGN.md §16): a ``*_select`` op returns
+    the item the matching committed pop WOULD take, plus a validity token,
+    WITHOUT finalizing the removal. :func:`pop_commit` performs the pool
+    mutation; :func:`pop_abort` declines it (flat plane: a pure no-op —
+    spy refs acquired at select time persist exactly like a peek;
+    MULTIQUEUE: the caller advances the sampling counter either way, so
+    an abort is just accounting; klsm: a lazy-deletion mark repaired at
+    the next boundary, :func:`klsm_pop_abort`/:func:`klsm_repair`)."""
+
+    slot: jnp.ndarray   # i32[]  candidate pool slot (undefined where ~valid)
+    prio: jnp.ndarray   # f32[]  its priority (INF when invalid)
+    valid: jnp.ndarray  # bool[] a visible/sampled candidate exists
 
 
 def init_pool(num_slots: int, num_places: int) -> PoolState:
@@ -743,6 +766,46 @@ def _stream_best(
     return spied, slot, prio_out, valid
 
 
+def stream_pop_select(
+    state: PoolState, place: jnp.ndarray
+) -> Tuple[PoolState, PopTicket]:
+    """SELECT phase of the two-phase pop contract (DESIGN.md §16): the
+    exact candidate the committed :func:`stream_pop` would take, as a
+    :class:`PopTicket`, WITHOUT deactivating it. Spy acquisition happens
+    here — spy refs are durable by the paper's §4.2.2 semantics whether
+    the pop commits or aborts, exactly like :func:`stream_peek` — so the
+    returned state carries the (possibly) updated ``spied`` rows and
+    ``select → abort`` is observationally a peek."""
+    spied, slot, prio_out, valid = _stream_best(state, place)
+    return (state._replace(spied=spied),
+            PopTicket(slot=slot, prio=prio_out, valid=valid))
+
+
+def pop_commit(state: PoolState, ticket: PopTicket) -> PoolState:
+    """COMMIT phase: finalize the pool mutation for a selected candidate —
+    deactivate the slot and clear its priority to INF (exactly-once, the
+    taken-set analogue). Masked by ``ticket.valid``, so committing an
+    invalid ticket is a state no-op; callers may also narrow ``valid``
+    (e.g. ``ticket._replace(valid=hit)``) to commit conditionally inside
+    a traced program (DESIGN.md §16)."""
+    m = state.prio.shape[0]
+    take = (jnp.arange(m) == ticket.slot) & ticket.valid
+    return state._replace(
+        active=state.active & ~take,
+        prio=jnp.where(take, INF, state.prio),
+    )
+
+
+def pop_abort(state: PoolState, ticket: PopTicket) -> PoolState:
+    """ABORT phase for the flat pool: a pure no-op — the candidate stays
+    active and visible, and the spy refs acquired at select time persist
+    (peek semantics, DESIGN.md §16). MULTIQUEUE aborts additionally bump
+    the caller-owned sampling counter (the caller advances ``t`` on every
+    attempt regardless); klsm aborts go through :func:`klsm_pop_abort`."""
+    del ticket
+    return state
+
+
 def stream_pop(
     state: PoolState, place: jnp.ndarray
 ) -> Tuple[PoolState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
@@ -761,18 +824,15 @@ def stream_pop(
     Preserves ignored ≤ P·k: the pop is the minimum over the visible set and
     at most P·k better items are unpublished-and-unspied (§2).
 
+    Composed as :func:`stream_pop_select` ∘ :func:`pop_commit` (DESIGN.md
+    §16) — the always-commit wrapper every legacy call site keeps using.
+
     Returns ``(state, slot i32[], prio f32[], valid bool[])``; the popped
     slot is deactivated (exactly-once, the taken-set analogue).
     """
-    m = state.prio.shape[0]
-    spied, slot, prio_out, valid = _stream_best(state, place)
-    is_slot = jnp.arange(m) == slot
-    new_state = state._replace(
-        active=state.active & ~(is_slot & valid),
-        prio=jnp.where(is_slot & valid, INF, state.prio),
-        spied=spied,
-    )
-    return new_state, slot, prio_out, valid
+    state, ticket = stream_pop_select(state, place)
+    state = pop_commit(state, ticket)
+    return state, ticket.slot, ticket.prio, ticket.valid
 
 
 def stream_peek(
@@ -790,6 +850,32 @@ def stream_peek(
     return state._replace(spied=spied), slot, prio_out, valid
 
 
+def stream_pop_mq_select(
+    state: PoolState, t: jnp.ndarray
+) -> Tuple[PoolState, PopTicket]:
+    """SELECT phase of the MULTIQUEUE pop (DESIGN.md §14.2/§16): the
+    ``t``-th attempt samples c=2 distinct places via the counter hash
+    (:func:`mq_sample`) and returns the (prio, seq)-lexicographic min over
+    the union of those two queues as a :class:`PopTicket` — WITHOUT
+    deactivating it. The selection touches no pool state (no spy, no
+    publish), so the state comes back unchanged; :func:`pop_commit`
+    finalizes a hit and an abort is purely the caller's counter bump —
+    the counter ``t`` advances on EVERY attempt, hit or miss, which is
+    what keeps the device plane bit-identical to the host twin
+    (``host_queue.MultiQueue``)."""
+    num_places = state.unpub_pushes.shape[0]
+    v1, v2 = mq_sample(t, num_places)
+    vis = state.active & ((state.creator == v1) | (state.creator == v2))
+    best = jnp.min(jnp.where(vis, state.prio, INF))
+    valid = jnp.isfinite(best)
+    cand = vis & (state.prio == best)
+    slot = jnp.argmin(
+        jnp.where(cand, state.seq, jnp.iinfo(jnp.int32).max)
+    ).astype(jnp.int32)
+    prio_out = jnp.where(valid, state.prio[slot], INF)
+    return state, PopTicket(slot=slot, prio=prio_out, valid=valid)
+
+
 def stream_pop_mq(
     state: PoolState, t: jnp.ndarray
 ) -> Tuple[PoolState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
@@ -805,25 +891,14 @@ def stream_pop_mq(
     its counter identically, which is what makes the two planes
     bit-identical (tests/test_multiqueue.py).
 
+    Composed as :func:`stream_pop_mq_select` ∘ :func:`pop_commit`
+    (DESIGN.md §16) — the always-commit wrapper for the eager planes.
+
     Returns ``(state, slot i32[], prio f32[], valid bool[])``.
     """
-    m = state.prio.shape[0]
-    num_places = state.unpub_pushes.shape[0]
-    v1, v2 = mq_sample(t, num_places)
-    vis = state.active & ((state.creator == v1) | (state.creator == v2))
-    best = jnp.min(jnp.where(vis, state.prio, INF))
-    valid = jnp.isfinite(best)
-    cand = vis & (state.prio == best)
-    slot = jnp.argmin(
-        jnp.where(cand, state.seq, jnp.iinfo(jnp.int32).max)
-    ).astype(jnp.int32)
-    prio_out = jnp.where(valid, state.prio[slot], INF)
-    is_slot = jnp.arange(m) == slot
-    new_state = state._replace(
-        active=state.active & ~(is_slot & valid),
-        prio=jnp.where(is_slot & valid, INF, state.prio),
-    )
-    return new_state, slot, prio_out, valid
+    state, ticket = stream_pop_mq_select(state, t)
+    state = pop_commit(state, ticket)
+    return state, ticket.slot, ticket.prio, ticket.valid
 
 
 def preempt_beats(challenger: float, margin: float, incumbent: float) -> bool:
@@ -981,6 +1056,64 @@ def stream_pop_fill(
         step, (state, jnp.zeros((), bool)), (want, places)
     )
     return state, PopResult(slot=slots, prio=prios, valid=valids)
+
+
+def stream_pop_fill_mq(
+    state: PoolState,
+    want: jnp.ndarray,     # bool[S] slot s needs a request
+    t0: jnp.ndarray,       # u32[]   pop-attempt counter entering the fill
+) -> Tuple[PoolState, jnp.ndarray, PopResult, jnp.ndarray]:
+    """Miss-tolerant MULTIQUEUE admission fill (DESIGN.md §16): the
+    :func:`stream_pop_fill` analogue for sampled pops. For each wanted
+    slot, sample-and-select up to ``1 + MQ_POP_RETRIES`` times: the first
+    hit commits (:func:`pop_commit`) and fills the slot, each miss aborts
+    (counter bump only), and after the attempt budget the fill moves ON
+    to the next slot — there is deliberately no stop-at-first-miss,
+    because a sampled miss says nothing about global emptiness (other
+    queues may hold work; that blindness IS the MultiQueue trade).
+
+    The counter advances by exactly one per attempt, hit or miss, and the
+    host-side admit loop (``ServeEngine._admit``) drives its
+    ``host_queue.MultiQueue`` twin with the same per-slot retry budget, so
+    the two planes' pop-counter streams stay aligned attempt-for-attempt
+    and the admission order is bit-identical (tests/test_multiqueue.py,
+    tests/test_fused_step.py).
+
+    ρ accounting survives because every aborted attempt is COUNTED, not
+    hidden: the returned ``aborts`` (i32[], sampled misses this fill) is
+    accumulated into the fused carry and surfaced per step next to
+    dispatches in the BENCH artifacts — MULTIQUEUE's rank contract is
+    probabilistic (O(P) expected rank), and the abort rate is exactly the
+    observable that keeps it honest.
+
+    Returns ``(state, t', PopResult, aborts)``; ``t'`` is the advanced
+    counter the caller must carry into the next fill."""
+
+    def slot_step(carry, w):
+        st, t, aborts = carry
+
+        def attempt(inner, _):
+            st, t, slot, prio, found, ab = inner
+            do = w & ~found
+            st, tk = stream_pop_mq_select(st, t)
+            hit = do & tk.valid
+            st = pop_commit(st, tk._replace(valid=hit))
+            slot = jnp.where(hit, tk.slot, slot)
+            prio = jnp.where(hit, tk.prio, prio)
+            ab = ab + (do & ~tk.valid).astype(jnp.int32)
+            t = t + jnp.where(do, jnp.uint32(1), jnp.uint32(0))
+            return (st, t, slot, prio, found | hit, ab), None
+
+        init = (st, t, jnp.int32(0), jnp.float32(INF),
+                jnp.zeros((), bool), aborts)
+        (st, t, slot, prio, found, aborts), _ = jax.lax.scan(
+            attempt, init, None, length=1 + MQ_POP_RETRIES)
+        return (st, t, aborts), (slot, prio, found)
+
+    (state, t, aborts), (slots, prios, valids) = jax.lax.scan(
+        slot_step, (state, t0.astype(jnp.uint32), jnp.zeros((), jnp.int32)),
+        want)
+    return state, t, PopResult(slot=slots, prio=prios, valid=valids), aborts
 
 
 def queue_phase_chunk(
@@ -1320,6 +1453,15 @@ class KlsmState(NamedTuple):
     spy_slot: jnp.ndarray
     spy_len: jnp.ndarray
     in_level: jnp.ndarray
+    # Lazy-deletion marks (DESIGN.md §16): ``dead[s]`` holds the SEQ of an
+    # aborted item whose level/ref entries must be skipped
+    # (:func:`klsm_pop_abort`), or ``_SEQ_MAX`` when slot ``s`` carries no
+    # mark. Seq-keyed on purpose: seqs are globally unique and monotone, so
+    # a mark can never leak onto a later item that reuses the slot and no
+    # clearing pass is ever required for correctness — a stale mark simply
+    # never matches again. Heads stranded behind a dead entry are reclaimed
+    # by the boundary :func:`klsm_repair` pass.
+    dead: jnp.ndarray          # i32[M] seq of the lazily-deleted occupant
 
 
 def klsm_geometry(num_slots: int, k: int):
@@ -1361,6 +1503,7 @@ def klsm_init(num_slots: int, num_places: int, *, k: int) -> KlsmState:
         spy_prio=spy_prio, spy_seq=spy_seq, spy_slot=spy_slot,
         spy_len=jnp.zeros((p,), jnp.int32),
         in_level=jnp.zeros((num_slots,), bool),
+        dead=jnp.full((num_slots,), _SEQ_MAX, jnp.int32),
     )
 
 
@@ -1525,16 +1668,18 @@ def klsm_sync(pool: PoolState, store: KlsmState, *,
     return store._replace(in_level=in_level)
 
 
-def _ref_live(pool: PoolState, slot, seq):
+def _ref_live(pool: PoolState, dead, slot, seq):
     """(slot, seq) revalidation for unpublished refs: live iff the pool
-    slot is active, still holds the SAME item, and is still unpublished
+    slot is active, still holds the SAME item, is still unpublished
     (a published item is reachable via its level instead — popping it
-    through a stale ref would strand its level head)."""
+    through a stale ref would strand its level head), and carries no
+    lazy-deletion mark for this seq (DESIGN.md §16)."""
     m = pool.active.shape[0]
     safe = jnp.clip(slot, 0, m - 1)
     return (jnp.take(pool.active, safe)
             & (jnp.take(pool.seq, safe) == seq)
-            & ~jnp.take(pool.published, safe))
+            & ~jnp.take(pool.published, safe)
+            & (jnp.take(dead, safe) != seq))
 
 
 def _klsm_best(pool: PoolState, store: KlsmState, place: jnp.ndarray):
@@ -1563,10 +1708,13 @@ def _klsm_best(pool: PoolState, store: KlsmState, place: jnp.ndarray):
         gsl = jnp.take_along_axis(store.lv_slot, idx[:, None], 1)[:, 0]
         alive = store.lv_len[:, lvl] > 0
         # heads are live by the structural invariant; the (slot, seq)
-        # check is defense in depth, not a semantic branch
+        # check is defense in depth against external mutation, and the
+        # dead check implements lazy deletion: a dead head hides its
+        # level until the boundary klsm_repair advances past it (§16)
         safe = jnp.clip(gsl, 0, m - 1)
         alive &= (jnp.take(pool.active, safe)
-                  & (jnp.take(pool.seq, safe) == gq))
+                  & (jnp.take(pool.seq, safe) == gq)
+                  & (jnp.take(store.dead, safe) != gq))
         hp.append(gp)
         hq.append(gq)
         hsl.append(gsl)
@@ -1581,17 +1729,17 @@ def _klsm_best(pool: PoolState, store: KlsmState, place: jnp.ndarray):
     loc_q = jnp.take(store.loc_seq, place, axis=0)
     loc_sl = jnp.take(store.loc_slot, place, axis=0)
     loc_v = ((lrow < jnp.take(store.loc_len, place))
-             & _ref_live(pool, loc_sl, loc_q))
+             & _ref_live(pool, store.dead, loc_sl, loc_q))
     spy_p = jnp.take(store.spy_prio, place, axis=0)
     spy_q = jnp.take(store.spy_seq, place, axis=0)
     spy_sl = jnp.take(store.spy_slot, place, axis=0)
     spy_v = ((lrow < jnp.take(store.spy_len, place))
-             & _ref_live(pool, spy_sl, spy_q))
+             & _ref_live(pool, store.dead, spy_sl, spy_q))
 
     empty = ~(jnp.any(head_valid) | jnp.any(loc_v) | jnp.any(spy_v))
 
     def spy():
-        unpub = pool.active & ~pool.published
+        unpub = pool.active & ~pool.published & (store.dead != pool.seq)
         counts = jnp.zeros((num_places,), jnp.int32).at[pool.creator].add(
             unpub.astype(jnp.int32))
         w = (counts > 0) & (jnp.arange(num_places, dtype=jnp.int32) != place)
@@ -1616,7 +1764,7 @@ def _klsm_best(pool: PoolState, store: KlsmState, place: jnp.ndarray):
         spy_slot=store.spy_slot.at[place].set(nsp_sl),
         spy_len=store.spy_len.at[place].set(nsp_n),
     )
-    spy_v = (lrow < nsp_n) & _ref_live(pool, nsp_sl, nsp_q)
+    spy_v = (lrow < nsp_n) & _ref_live(pool, store.dead, nsp_sl, nsp_q)
 
     cand_p = jnp.concatenate([head_prio.reshape(-1), loc_p, nsp_p])
     cand_q = jnp.concatenate([head_seq.reshape(-1), loc_q, nsp_q])
@@ -1634,6 +1782,123 @@ def _klsm_best(pool: PoolState, store: KlsmState, place: jnp.ndarray):
     return store, slot, prio_out, valid, head_hit
 
 
+def klsm_pop_select(
+    pool: PoolState, store: KlsmState, place: jnp.ndarray
+) -> Tuple[KlsmState, PopTicket]:
+    """SELECT phase of the klsm pop (DESIGN.md §16): the exact candidate
+    the committed :func:`klsm_pop` would take, as a :class:`PopTicket`,
+    without touching the pool or the level heads. Spy acquisition happens
+    here (persistent, peek semantics — same contract as
+    :func:`stream_pop_select`), so the returned store carries the
+    (possibly) refreshed spy run either way."""
+    store, slot, prio, valid, _ = _klsm_best(pool, store, place)
+    return store, PopTicket(slot=slot, prio=prio, valid=valid)
+
+
+def _klsm_head_hit(pool: PoolState, store: KlsmState, ticket: PopTicket):
+    """bool[P, L] — which level heads the ticket's candidate sits at,
+    recomputed from (pool, store) exactly as :func:`_klsm_best` saw them
+    (commit runs on the same pre-mutation pair select did, the standard
+    two-phase contract)."""
+    m = pool.active.shape[0]
+    _, levels, caps, offs = _klsm_geom_of(store, m)
+    hh = []
+    for lvl in range(levels):
+        off, cap = offs[lvl], caps[lvl]
+        idx = off + jnp.minimum(store.lv_head[:, lvl], cap - 1)
+        gsl = jnp.take_along_axis(store.lv_slot, idx[:, None], 1)[:, 0]
+        gq = jnp.take_along_axis(store.lv_seq, idx[:, None], 1)[:, 0]
+        safe = jnp.clip(gsl, 0, m - 1)
+        alive = ((store.lv_len[:, lvl] > 0)
+                 & jnp.take(pool.active, safe)
+                 & (jnp.take(pool.seq, safe) == gq)
+                 & (jnp.take(store.dead, safe) != gq))
+        hh.append(alive & (gsl == ticket.slot))
+    return jnp.stack(hh, 1) & ticket.valid
+
+
+def klsm_pop_commit(
+    pool: PoolState, store: KlsmState, ticket: PopTicket
+) -> Tuple[PoolState, KlsmState]:
+    """COMMIT phase: deactivate the candidate's pool slot and advance any
+    level head it sits at (two O(1) scatters — the removal cost that keeps
+    klsm pops flat in pool capacity). Masked by ``ticket.valid``; callers
+    may narrow ``valid`` to commit conditionally in-trace (§16)."""
+    m = pool.active.shape[0]
+    tgt = jnp.where(ticket.valid, ticket.slot, m)
+    adv = _klsm_head_hit(pool, store, ticket).astype(jnp.int32)
+    pool = pool._replace(
+        active=pool.active.at[tgt].set(False, mode="drop"),
+        prio=pool.prio.at[tgt].set(INF, mode="drop"),
+    )
+    store = store._replace(
+        lv_head=store.lv_head + adv,
+        lv_len=store.lv_len - adv,
+        in_level=store.in_level.at[tgt].set(False, mode="drop"),
+    )
+    return pool, store
+
+
+def klsm_pop_abort(
+    pool: PoolState, store: KlsmState, ticket: PopTicket
+) -> KlsmState:
+    """ABORT phase for klsm: a LAZY DELETION, not an undo (undo is free —
+    just drop the ticket; select mutates nothing but the durable spy run).
+    Abort means the caller is finalizing this item's pool lifecycle
+    through a different path (e.g. the preemption machinery's flat
+    re-push/deactivate), so the store's references to it must die without
+    an O(P·M log M) re-sync: the candidate's seq is written into the
+    ``dead`` mark of its slot, which hides its level entry / loc / spy
+    refs everywhere (:func:`_klsm_best`), and ``in_level`` is cleared so
+    the slot's NEXT occupant can publish into a level. A dead entry at a
+    level head hides that level's deeper items until the next boundary
+    :func:`klsm_repair` — the host twin mirrors exactly that transient
+    (DESIGN.md §16). The pool is untouched; the caller owns it from here.
+    Returns the marked store."""
+    m = pool.active.shape[0]
+    tgt = jnp.where(ticket.valid, ticket.slot, m)
+    q = jnp.take(pool.seq, jnp.clip(ticket.slot, 0, m - 1))
+    return store._replace(
+        dead=store.dead.at[tgt].set(q, mode="drop"),
+        in_level=store.in_level.at[tgt].set(False, mode="drop"),
+    )
+
+
+def klsm_repair(pool: PoolState, store: KlsmState) -> KlsmState:
+    """Boundary head-repair pass (DESIGN.md §16): per (place, level),
+    advance the head past every LEADING entry that is dead (lazy-deletion
+    mark), stale ((slot, seq) no longer in the pool) or inactive, shrinking
+    the level length to match. Vectorized over places, Python loop over
+    the ≤ L levels (static shapes) — O(P·W) gathers, no sort. Mid-run dead
+    entries stay where they are (that is the 'lazy'); they are skipped at
+    probe time by the head's alive check and reclaimed here once the
+    entries in front of them pop. Math: if ``d`` is the length of the
+    leading non-alive run, the new head is ``head + d`` and the new length
+    ``len − d`` — every surviving entry keeps its (prio, seq) sort
+    position, so the run stays a sorted padded run and the §15 invariants
+    (head = level minimum over live entries) are restored exactly."""
+    m = pool.active.shape[0]
+    _, levels, caps, offs = _klsm_geom_of(store, m)
+    lv_head, lv_len = store.lv_head, store.lv_len
+    for lvl in range(levels):
+        off, cap = offs[lvl], caps[lvl]
+        pos = jnp.minimum(
+            lv_head[:, lvl, None] + jnp.arange(cap)[None, :], cap - 1)
+        gsl = jnp.take_along_axis(store.lv_slot, off + pos, 1)   # [P, cap]
+        gq = jnp.take_along_axis(store.lv_seq, off + pos, 1)
+        inrun = jnp.arange(cap)[None, :] < lv_len[:, lvl, None]
+        safe = jnp.clip(gsl, 0, m - 1)
+        alive = (inrun
+                 & jnp.take(pool.active, safe)
+                 & (jnp.take(pool.seq, safe) == gq)
+                 & (jnp.take(store.dead, safe) != gq))
+        first = jnp.argmax(alive, axis=1).astype(jnp.int32)
+        skip = jnp.where(jnp.any(alive, axis=1), first, lv_len[:, lvl])
+        lv_head = lv_head.at[:, lvl].add(skip)
+        lv_len = lv_len.at[:, lvl].add(-skip)
+    return store._replace(lv_head=lv_head, lv_len=lv_len)
+
+
 def klsm_pop(
     pool: PoolState, store: KlsmState, place: jnp.ndarray
 ) -> Tuple[PoolState, KlsmState, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
@@ -1644,22 +1909,12 @@ def klsm_pop(
     the removal is two O(1) scatters (pool deactivate + head advance), so
     pop cost is flat in pool capacity (the ``klsm`` bench section's
     contract). ρ = P·k is untouched: visibility is pointwise identical to
-    the flat plane's, only its index changed. Returns
-    ``(pool, store, slot, prio, valid)``."""
-    m = pool.active.shape[0]
-    store, slot, prio, valid, head_hit = _klsm_best(pool, store, place)
-    tgt = jnp.where(valid, slot, m)
-    pool = pool._replace(
-        active=pool.active.at[tgt].set(False, mode="drop"),
-        prio=pool.prio.at[tgt].set(INF, mode="drop"),
-    )
-    adv = (head_hit & valid).astype(jnp.int32)
-    store = store._replace(
-        lv_head=store.lv_head + adv,
-        lv_len=store.lv_len - adv,
-        in_level=store.in_level.at[tgt].set(False, mode="drop"),
-    )
-    return pool, store, slot, prio, valid
+    the flat plane's, only its index changed. Composed as
+    :func:`klsm_pop_select` ∘ :func:`klsm_pop_commit` (DESIGN.md §16).
+    Returns ``(pool, store, slot, prio, valid)``."""
+    store, ticket = klsm_pop_select(pool, store, place)
+    pool, store = klsm_pop_commit(pool, store, ticket)
+    return pool, store, ticket.slot, ticket.prio, ticket.valid
 
 
 def klsm_peek(
@@ -1671,6 +1926,47 @@ def klsm_peek(
     ``(store, slot, prio, valid)``."""
     store, slot, prio, valid, _ = _klsm_best(pool, store, place)
     return store, slot, prio, valid
+
+
+def preempt_plan_klsm(
+    pool: PoolState,
+    store: KlsmState,
+    slot_prio: jnp.ndarray,    # f32[S] priority of the running request
+    slot_uid: jnp.ndarray,     # i32[S] push seq of the running request
+    eligible: jnp.ndarray,     # bool[S] active and not protected this step
+    places: jnp.ndarray,       # i32[S] pop place of decode slot s
+    *,
+    margin: float,
+    margins: Optional[jnp.ndarray] = None,       # f32[S] per-slot margin
+    restage_cost: Optional[jnp.ndarray] = None,  # i32[S] victim tie-break
+) -> Tuple[KlsmState, jnp.ndarray, jnp.ndarray]:
+    """:func:`preempt_plan` with the challenger peek routed through the
+    level store (:func:`klsm_peek`, DESIGN.md §15/§16): identical victim
+    selection and fire test, but the visible-front probe costs
+    O(P·L + K) instead of the flat O(M) scan, and only the store's
+    persistent spy run may change (peek semantics either way). The pool
+    is read-only here — committing the plan (write-back, re-push,
+    :func:`klsm_sync`, the challenger :func:`klsm_pop`) is the caller's.
+    Returns ``(store, victim i32[], fire bool[])``."""
+    has = jnp.any(eligible)
+    worst = jnp.max(jnp.where(eligible, slot_prio, -INF))
+    cand = eligible & (slot_prio == worst)
+    if restage_cost is not None:
+        imax = jnp.iinfo(jnp.int32).max
+        cheapest = jnp.min(jnp.where(cand, restage_cost, imax))
+        cand = cand & (restage_cost == cheapest)
+    victim = jnp.argmax(jnp.where(cand, slot_uid, -1)).astype(jnp.int32)
+
+    def do_peek(st):
+        return klsm_peek(pool, st, places[victim])
+
+    def skip(st):
+        return st, jnp.int32(0), jnp.float32(INF), jnp.zeros((), bool)
+
+    store, _cslot, cprio, cvalid = jax.lax.cond(has, do_peek, skip, store)
+    m_v = jnp.float32(margin) if margins is None else margins[victim]
+    fire = has & cvalid & (cprio + m_v < slot_prio[victim])
+    return store, victim, fire
 
 
 def klsm_pop_fill(

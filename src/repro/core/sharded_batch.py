@@ -264,6 +264,9 @@ def fused_carry_shardings(mesh: Mesh, carry):
         # boundary fold reads in full — replicate, like the buffers
         plan=jax.tree.map(lambda _: rep, carry.plan),
         plan_sel=rep,
+        # §16 pop-contract scalars: the MQ attempt counter and the abort
+        # tally are global bookkeeping, like clock
+        mq_pops=rep, pop_aborts=rep,
         # klsm level store (§15): None under storage="flat" (empty subtree)
         store=(None if carry.store is None
                else klsm_shardings(mesh, carry.store)),
@@ -544,6 +547,7 @@ def _selftest_serve_mesh():  # pragma: no cover
     from repro.configs import get_reduced
     from repro.launch.mesh import make_batch_mesh
     from repro.models import materialize, model_p
+    from repro.serve.config import ServeConfig
     from repro.serve.engine import Request, ServeEngine
 
     cfg = get_reduced("qwen3_1_7b")
@@ -554,7 +558,7 @@ def _selftest_serve_mesh():  # pragma: no cover
 
     def run(mesh):
         eng = ServeEngine(cfg, params, slots=len(jax.devices()), max_len=32,
-                          frontends=2, k=2, mesh=mesh)
+                          frontends=2, k=2, config=ServeConfig(mesh=mesh))
         for i, toks in enumerate(prompts):
             eng.submit(Request(rid=i, tokens=toks, max_new=4,
                                priority=float(i)), frontend=i % 2)

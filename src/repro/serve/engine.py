@@ -38,6 +38,7 @@ import dataclasses
 import functools
 import threading
 import time
+import warnings
 import weakref
 from collections import deque
 from typing import List, Optional
@@ -49,6 +50,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.host_queue import HybridKQueue, MultiQueue
 from repro.models import decode_step, init_cache, prefill
+from repro.serve.config import LEGACY_KWARGS, ServeConfig
 
 
 @functools.lru_cache(maxsize=None)
@@ -115,7 +117,10 @@ class _PlanPacker:
                 pool_slot, uid = self._loop.submit_planned(
                     frontend, qprio, req, req.tokens, req.max_new,
                     deadline=getattr(req, "deadline", None))
-                self._book.publish_wait(frontend, pool_slot, qprio, uid)
+                # place_of == frontend under HYBRID; under MULTIQUEUE it is
+                # the hashed home place the fold routes by (§14.2/§16)
+                self._book.publish_wait(
+                    self._loop.place_of(pool_slot), pool_slot, qprio, uid)
             except BaseException as e:  # noqa: BLE001 - relayed to engine
                 with self._cv:
                     self._error = e
@@ -175,12 +180,14 @@ class ServeEngine:
     interchangeable mid-deployment.
 
     ``admission_policy="multiqueue"`` (DESIGN.md §14.2) swaps the admission
-    structure for the sampled MultiQueue on both eager planes — pushes route
+    structure for the sampled MultiQueue on EVERY step mode — pushes route
     to a (priority, uid)-hashed home place, pops sample c=2 places, no
-    global top-k at all — with host (``host_queue.MultiQueue``) and device
-    (``StreamingAdmitter(policy="multiqueue")``) bit-identical
-    (tests/test_multiqueue.py). The fused step modes and preemption keep
-    HYBRID admission (the sampled pop has no peek contract).
+    global top-k at all — with host (``host_queue.MultiQueue``), device
+    (``StreamingAdmitter(policy="multiqueue")``) and the fused/continuous
+    chunk programs (miss-tolerant ``stream_pop_fill_mq``, DESIGN.md §16)
+    bit-identical (tests/test_multiqueue.py, tests/test_fused_step.py).
+    Preemption keeps HYBRID admission (the sampled pop has no peek
+    contract for the preemption rounds).
 
     ``admission_storage="klsm"`` (DESIGN.md §15) swaps the published-set
     INDEX — not the semantics — for the hierarchical k-LSM level store:
@@ -188,8 +195,9 @@ class ServeEngine:
     Admission order is bit-identical to the flat storage on every plane
     (host = ``HostKLSM``, device = ``StreamingAdmitter(storage="klsm")``,
     fused/continuous = the level-synced chunk program;
-    tests/test_klsm.py). Fused preemption keeps flat storage (its in-trace
-    rounds use the flat probe).
+    tests/test_klsm.py) — including under fused preemption, whose fire
+    branch re-syncs the store after the in-trace re-push and pops the
+    challenger through the level heads (DESIGN.md §16).
 
     ``mesh``: shard the decode-cache slot axis over the mesh's ``batch``
     axis (§8) — with a composed ``make_production_batch_mesh`` the admission
@@ -215,74 +223,59 @@ class ServeEngine:
         max_len: int = 512,
         frontends: int = 4,
         k: int = 4,
-        mesh=None,
-        admission: str = "host",
-        admission_policy: str = "hybrid",
-        admission_storage: str = "flat",
-        admission_capacity: int = 256,
-        step: Optional[str] = None,
-        step_chunk: int = 1,
-        preemption: str = "off",
-        preempt_margin: float = 0.0,
-        staging_rows: Optional[int] = None,
-        packer: str = "thread",
-        slo=None,
+        config: Optional[ServeConfig] = None,
+        **legacy,
     ):
+        # ------------------------------------------------ config front door
+        # All scheduling knobs live on ServeConfig (serve/config.py,
+        # DESIGN.md §16) — validated there by ONE declarative rule table.
+        # The legacy per-kwarg call form keeps working through this shim,
+        # which builds the config and warns; model geometry (slots,
+        # max_len, frontends, k) stays on the engine call.
+        if legacy:
+            unknown = sorted(set(legacy) - set(LEGACY_KWARGS))
+            if unknown:
+                raise TypeError(
+                    "ServeEngine got unexpected keyword argument(s) "
+                    f"{unknown}")
+            if config is not None:
+                raise TypeError(
+                    "pass config=ServeConfig(...) OR the legacy per-field "
+                    "kwargs, not both")
+            warnings.warn(
+                "ServeEngine(admission=..., step=..., preemption=..., ...) "
+                "kwargs are deprecated; pass config=ServeConfig(...) "
+                "(repro.serve.config) instead",
+                DeprecationWarning, stacklevel=2)
+            config = ServeConfig(**legacy)
+        elif config is None:
+            config = ServeConfig()
+        # resolved(): step=None falls back to the admission plane,
+        # step="host"/"device" forces admission to match; validation ran at
+        # ServeConfig construction (invalid combinations are
+        # unrepresentable — serve/config.py owns the rule table)
+        config = config.resolved()
+        self.config = config
+        mesh = config.mesh
+        admission = config.admission
+        admission_policy = config.admission_policy
+        admission_storage = config.admission_storage
+        admission_capacity = config.admission_capacity
+        step = config.step
+        step_chunk = config.step_chunk
+        preemption = config.preemption
+        staging_rows = config.staging_rows
+        packer = config.packer
+        slo = config.slo
+
         self.cfg, self.params = cfg, params
         self.slots, self.max_len = slots, max_len
-        if preemption not in ("off", "margin"):
-            raise ValueError(f"unknown preemption mode: {preemption!r}")
-        if preempt_margin < 0:
-            raise ValueError("preempt_margin must be >= 0")
-        if packer not in ("thread", "sync"):
-            raise ValueError(f"unknown packer mode: {packer!r}")
         self.preemption = preemption
-        self.preempt_margin = float(preempt_margin)
+        self.preempt_margin = float(config.preempt_margin)
         # §13 SLO policy (serve/slo.py): priority aging at the submit
         # boundary, slack-derived preemption margins, restage-cost victim
         # packing — identical f32 math on every plane
         self.slo = slo
-        # step= subsumes admission=: "host"/"device" are the eager per-step
-        # oracles, "fused" the single-dispatch loop (DESIGN.md §10),
-        # "continuous" the fused loop with double-buffered arrival plans
-        # and the async packer (§12)
-        if step is None:
-            step = admission
-        if step in ("host", "device"):
-            admission = step
-        elif step not in ("fused", "continuous"):
-            raise ValueError(f"unknown step mode: {step!r}")
-        if admission_policy not in ("hybrid", "multiqueue"):
-            raise ValueError(
-                f"unknown admission policy: {admission_policy!r}")
-        if admission_policy == "multiqueue":
-            # the sampled pop has no peek-then-pop front contract: the fused
-            # planes' in-trace preempt/fill path and the eager preemption
-            # rounds both peek before popping, so MQ admission is
-            # eager-host/eager-device only (ROADMAP follow-up: fused MQ)
-            if step in ("fused", "continuous"):
-                raise ValueError(
-                    "admission_policy='multiqueue' supports only the eager "
-                    "step modes ('host'/'device'); the fused planes fold "
-                    "with HYBRID publish replay")
-            if preemption != "off":
-                raise ValueError(
-                    "admission_policy='multiqueue' is incompatible with "
-                    "preemption: the sampled pop has no peek")
-        if admission_storage not in ("flat", "klsm"):
-            raise ValueError(
-                f"unknown admission storage: {admission_storage!r}")
-        if admission_storage == "klsm" and admission_policy != "hybrid":
-            raise ValueError(
-                "admission_storage='klsm' indexes the HYBRID published set "
-                "(the MULTIQUEUE pop has no global front for the level "
-                "store to index)")
-        if (admission_storage == "klsm" and preemption != "off"
-                and step in ("fused", "continuous")):
-            raise ValueError(
-                "admission_storage='klsm' is incompatible with fused "
-                "preemption (the in-trace preempt rounds use the flat "
-                "probe); use the eager planes for klsm + preemption")
         self.admission_policy = admission_policy
         self.admission_storage = admission_storage
         self.step_mode = step
@@ -365,6 +358,7 @@ class ServeEngine:
                 preemption=preemption, margin=self.preempt_margin,
                 staging_rows=staging_rows, continuous=step == "continuous",
                 slo=slo, storage=admission_storage,
+                policy=admission_policy,
             )
             self.queue = self._fused       # queue-like: __len__/flush/pending
             # cache ownership moves into the fused carry (donated each
@@ -425,7 +419,9 @@ class ServeEngine:
                 pool_slot, uid = self._fused.submit_planned(
                     frontend, qprio, req, req.tokens, req.max_new,
                     deadline=req.deadline)
-                if not self._book.publish(frontend, pool_slot, qprio, uid):
+                if not self._book.publish(
+                        self._fused.place_of(pool_slot), pool_slot, qprio,
+                        uid):
                     raise RuntimeError(
                         "arrival plan full (buffer_cap rows per frontend "
                         "and no async packer to backpressure); run a chunk "
@@ -515,14 +511,33 @@ class ServeEngine:
         """Fill empty decode slots from the admission plane. The device plane
         folds its buffers first (one fused device program per step) so pops
         see every request submitted before this step — the same visible set
-        the host oracle has at this point (§9 equivalence contract)."""
+        the host oracle has at this point (§9 equivalence contract).
+
+        HYBRID keeps the stop-at-first-miss contract (an empty visible
+        front really is empty). MULTIQUEUE is miss-tolerant (DESIGN.md §16):
+        a sampled miss says nothing about global emptiness, so each empty
+        slot retries up to ``MQ_POP_RETRIES`` extra attempts and then moves
+        ON to the next slot instead of stopping — every attempt, hit or
+        miss, advances the shared pop counter, which is exactly the retry
+        loop the fused ``stream_pop_fill_mq`` runs in-trace, keeping all
+        planes' counter streams aligned attempt-for-attempt."""
+        from repro.core.kpriority import MQ_POP_RETRIES
+
         if self.admission == "device":
             self.queue.fold()
+        miss_tolerant = self.admission_policy == "multiqueue"
         for slot in range(self.slots):
             if self.active[slot] is not None:
                 continue
             got = self._pop_from(slot % self.frontends)
-            if got is None:
+            if miss_tolerant:
+                for _ in range(MQ_POP_RETRIES):
+                    if got is not None:
+                        break
+                    got = self._pop_from(slot % self.frontends)
+                if got is None:
+                    continue
+            elif got is None:
                 return
             self._seat(slot, got[1])
 

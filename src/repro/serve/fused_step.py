@@ -100,6 +100,14 @@ class FusedCarry(NamedTuple):
     staged_caches: Any    # staged KV; every leaf [lead, staging_rows, ...]
     plan: AdmissionBuffer  # ping-pong arrival plans; leaves [2, P, C]/[2, P]
     plan_sel: jnp.ndarray  # i32[] plan slot the NEXT chunk folds (§12)
+    mq_pops: jnp.ndarray   # u32[] MULTIQUEUE pop-attempt counter (§14.2/§16):
+                           # the sampled pop's c=2 draw is a pure function of
+                           # this counter, which advances on EVERY attempt —
+                           # misses included — so it must persist across steps
+                           # (and chunks) to match the eager planes' counters
+    pop_aborts: jnp.ndarray  # i32[] aborted selects (sampled misses) so far —
+                             # the §16 ignored-count accounting; stays 0 under
+                             # policy="hybrid"
     store: Any = None      # klsm level store (§15); None under storage="flat"
                            # (an empty pytree subtree, so flat programs are
                            # byte-identical to the pre-klsm ones)
@@ -155,12 +163,21 @@ def build_chunk_fn(decode_fn: Callable, *, k: int, frontends: int,
                    rounds: int = 0, continuous: bool = False,
                    slo_margin: bool = False, margin_scale: float = 0.0,
                    margin_floor: float = 0.0, margin_cap: float = 0.0,
-                   victim_cost: bool = False, storage: str = "flat"):
+                   victim_cost: bool = False, storage: str = "flat",
+                   policy: str = "hybrid"):
     """Build THE fused program: n steps of fold → ``stream_pop_fill`` →
     splice → [preempt ×``rounds``] → decode → complete as one jitted
     ``lax.scan`` over per-step AdmissionBuffer rows — one dispatch per chunk
     (DESIGN.md §10/§11). Signature:
     ``(params, carry, bufs[n]) -> (carry, events)`` with ``carry`` donated.
+
+    ``policy="multiqueue"`` swaps the admit phase for the miss-tolerant
+    sampled fill (:func:`repro.core.kpriority.stream_pop_fill_mq`,
+    DESIGN.md §16): per empty slot, up to ``1 + MQ_POP_RETRIES``
+    select→commit/abort attempts against the carry's pop-attempt counter,
+    then CONTINUE to the next slot — a sampled miss says nothing about
+    global emptiness, so stop-at-first-miss would under-admit vs the eager
+    planes. Aborted selects accumulate in ``carry.pop_aborts``.
 
     The compiled program is shared across live loop instances with the same
     static config through :func:`streaming.shared_jit` — weakly, so
@@ -182,7 +199,7 @@ def build_chunk_fn(decode_fn: Callable, *, k: int, frontends: int,
     key = ("chunk_fn", decode_fn, k, frontends, slots, max_len, n,
            preempt, margin, rounds, continuous,
            slo_margin, margin_scale, margin_floor, margin_cap, victim_cost,
-           storage)
+           storage, policy)
     return streaming.shared_jit(
         key,
         lambda: _build_chunk_impl(
@@ -191,7 +208,7 @@ def build_chunk_fn(decode_fn: Callable, *, k: int, frontends: int,
             rounds=rounds, continuous=continuous, slo_margin=slo_margin,
             margin_scale=margin_scale, margin_floor=margin_floor,
             margin_cap=margin_cap, victim_cost=victim_cost,
-            storage=storage))
+            storage=storage, policy=policy))
 
 
 def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
@@ -199,17 +216,16 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
                       margin: float, rounds: int, continuous: bool,
                       slo_margin: bool = False, margin_scale: float = 0.0,
                       margin_floor: float = 0.0, margin_cap: float = 0.0,
-                      victim_cost: bool = False, storage: str = "flat"):
+                      victim_cost: bool = False, storage: str = "flat",
+                      policy: str = "hybrid"):
     places_vec = jnp.arange(slots, dtype=jnp.int32) % frontends
     n_rounds = rounds if (preempt and rounds > 0) else 0
-    if storage == "klsm" and n_rounds > 0:
-        # the in-trace preempt rounds pop challengers with the flat O(M)
-        # probe and re-push victims mid-step — both would leave level heads
-        # stale until the next sync, breaking the head-liveness invariant
-        # (DESIGN.md §15). FusedServeLoop rejects the combination up front;
-        # this is the backstop.
-        raise ValueError("storage='klsm' is incompatible with the fused "
-                         "preempt rounds")
+    # storage="klsm" under the preempt rounds threads the level store
+    # through the round scan: the peek probes the level fronts
+    # (kp.preempt_plan_klsm), and the fire branch re-syncs the store right
+    # after the victim's re-push — ≤ max(k, 1) newly published entries for
+    # one place — before popping the challenger through the heads, exactly
+    # the eager plane's peek → repush(+sync) → pop sequence (DESIGN.md §16).
 
     def splice_in(caches, staged_caches, rows, mask):
         """Gather staged rows into decode-slot columns where ``mask``."""
@@ -221,6 +237,12 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
         return jax.tree.map(one, caches, staged_caches)
 
     def preempt_round(st, _):
+        # under storage="klsm" the level store rides the round carry as a
+        # 16th element (appended, so the flat program stays byte-identical)
+        if storage == "klsm":
+            st, store = st[:-1], st[-1]
+        else:
+            store = None
         (pool, caches, staging, staged_caches, cur_tok, pos, out_len,
          budget, slot_req, slot_prio, slot_uid, slot_creator, slot_deadline,
          clock, protected) = st
@@ -236,12 +258,23 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
                 cap=margin_cap)
         else:
             margins = None
-        pool, victim, fire = kp.preempt_plan(
-            pool, slot_prio, slot_uid, eligible, places_vec, margin=margin,
-            margins=margins,
-            restage_cost=pos if victim_cost else None)
+        if storage == "klsm":
+            # klsm peek mutates the STORE (spy-run acquisition), not the pool
+            store, victim, fire = kp.preempt_plan_klsm(
+                pool, store, slot_prio, slot_uid, eligible, places_vec,
+                margin=margin, margins=margins,
+                restage_cost=pos if victim_cost else None)
+        else:
+            pool, victim, fire = kp.preempt_plan(
+                pool, slot_prio, slot_uid, eligible, places_vec,
+                margin=margin, margins=margins,
+                restage_cost=pos if victim_cost else None)
 
         def fire_branch(op):
+            if storage == "klsm":
+                op, store = op[:-1], op[-1]
+            else:
+                store = None
             (pool, caches, staging, staged_caches, cur_tok, pos, out_len,
              budget, slot_req, slot_prio, slot_uid, slot_creator,
              slot_deadline, clock, protected) = op
@@ -268,10 +301,21 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
                 jnp.full((m,), slot_prio[victim]),
                 jnp.full((m,), slot_creator[victim], jnp.int32),
                 k=k, policy=kp.Policy.HYBRID)
-            # the challenger (strictly better than the victim, so the pop
-            # can never return the just-re-pushed slot) takes the seat
-            pool, cps, cprio, _cvalid = kp.stream_pop(
-                pool, places_vec[victim])
+            if storage == "klsm":
+                # the re-push may publish (publish-on-k): re-sync the level
+                # store — ≤ max(k, 1) newly published entries for one place
+                # (k-1 carried + the re-push; k=0 publishes just the one) —
+                # then pop the challenger through the level heads, exactly
+                # the eager _jitted_klsm_repush → klsm_pop sequence
+                store = kp.klsm_sync(pool, store, batch_cap=max(k, 1))
+                pool, store, cps, cprio, _cvalid = kp.klsm_pop(
+                    pool, store, places_vec[victim])
+            else:
+                # the challenger (strictly better than the victim, so the
+                # pop can never return the just-re-pushed slot) takes the
+                # seat
+                pool, cps, cprio, _cvalid = kp.stream_pop(
+                    pool, places_vec[victim])
             crow = staging.row[cps]
             cur_tok = cur_tok.at[victim].set(staging.tok[crow])
             pos = pos.at[victim].set(staging.pos[crow])
@@ -291,6 +335,8 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
             new = (pool, caches, staging, staged_caches, cur_tok, pos,
                    out_len, budget, slot_req, slot_prio, slot_uid,
                    slot_creator, slot_deadline, clock, protected)
+            if storage == "klsm":
+                new = new + (store,)
             return new, (victim, vps, cps)
 
         def skip_branch(op):
@@ -299,6 +345,8 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
         st2 = (pool, caches, staging, staged_caches, cur_tok, pos, out_len,
                budget, slot_req, slot_prio, slot_uid, slot_creator,
                slot_deadline, clock, protected)
+        if storage == "klsm":
+            st2 = st2 + (store,)
         return jax.lax.cond(fire, fire_branch, skip_branch, st2)
 
     def run(params, carry, bufs):
@@ -316,10 +364,22 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
                 store = kp.klsm_sync(pool, c.store, batch_cap=bc)
                 pool, store, res = kp.klsm_pop_fill(
                     pool, store, c.slot_req < 0, places_vec)
+                mq_pops, pop_aborts = c.mq_pops, c.pop_aborts
+            elif policy == "multiqueue":
+                # miss-tolerant sampled fill (§16): attempts — hits AND
+                # misses — advance the carried counter exactly like the
+                # eager planes' per-attempt counters, dead steps included,
+                # which is what keeps the c=2 draws (hence admission order)
+                # bit-identical across all four planes
+                store = c.store
+                pool, mq_pops, res, ab = kp.stream_pop_fill_mq(
+                    pool, c.slot_req < 0, c.mq_pops)
+                pop_aborts = c.pop_aborts + ab
             else:
                 store = c.store
                 pool, res = kp.stream_pop_fill(
                     pool, c.slot_req < 0, places_vec)
+                mq_pops, pop_aborts = c.mq_pops, c.pop_aborts
             got = res.valid                              # bool[S]
             live = jnp.any(got) | jnp.any(c.slot_req >= 0)
             # the engine increments its clock at the top of EVERY step
@@ -343,12 +403,17 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
                 caches = splice_in(c.caches, c.staged_caches, rows, got)
                 staging, staged_caches = c.staging, c.staged_caches
 
+                store_out = store
                 if n_rounds > 0:
                     st = (pool, caches, staging, staged_caches, cur_tok,
                           pos, out_len, budget, slot_req, slot_prio,
                           slot_uid, slot_creator, slot_deadline, clock, got)
+                    if storage == "klsm":
+                        st = st + (store,)
                     st, (pre_slot, pre_vps, pre_ps) = jax.lax.scan(
                         preempt_round, st, None, length=n_rounds)
+                    if storage == "klsm":
+                        st, store_out = st[:-1], st[-1]
                     (pool_out, caches, staging, staged_caches, cur_tok,
                      pos, out_len, budget, slot_req, slot_prio, slot_uid,
                      slot_creator, slot_deadline, _clock, _protected) = st
@@ -371,7 +436,8 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
                     slot_prio=slot_prio, slot_uid=slot_uid,
                     slot_creator=slot_creator, slot_deadline=slot_deadline,
                     clock=clock, staging=staging,
-                    staged_caches=staged_caches, store=store)
+                    staged_caches=staged_caches, mq_pops=mq_pops,
+                    pop_aborts=pop_aborts, store=store_out)
                 ev = StepEvents(admit=jnp.where(got, res.slot, -1),
                                 token=nxt, active=active, done=done,
                                 live=jnp.bool_(True),
@@ -388,7 +454,10 @@ def _build_chunk_impl(decode_fn: Callable, *, k: int, frontends: int,
                     done=jnp.zeros((slots,), bool),
                     live=jnp.bool_(False),
                     pre_slot=rfill, pre_vps=rfill, pre_ps=rfill)
-                return c._replace(pool=pool, clock=clock, store=store), ev
+                # the sampled-fill counters advance on dead steps too (the
+                # eager planes attempt pops whenever slots are free)
+                return c._replace(pool=pool, clock=clock, mq_pops=mq_pops,
+                                  pop_aborts=pop_aborts, store=store), ev
 
             return jax.lax.cond(live, live_step, dead_step, c)
 
@@ -553,6 +622,7 @@ class FusedServeLoop:
         continuous: bool = False,
         slo=None,
         storage: str = "flat",
+        policy: str = "hybrid",
     ):
         if preemption not in ("off", "margin"):
             raise ValueError(f"unknown preemption mode: {preemption!r}")
@@ -560,14 +630,19 @@ class FusedServeLoop:
             raise ValueError("preemption margin must be >= 0")
         if storage not in ("flat", "klsm"):
             raise ValueError(f"unknown admission storage: {storage!r}")
-        if storage == "klsm" and preemption != "off":
+        if policy not in ("hybrid", "multiqueue"):
+            raise ValueError(f"unknown admission policy: {policy!r}")
+        if policy == "multiqueue" and preemption != "off":
             raise ValueError(
-                "storage='klsm' is incompatible with fused preemption: the "
-                "in-trace preempt rounds pop/re-push through the flat probe "
-                "mid-step, which would leave klsm level heads stale until "
-                "the next sync (DESIGN.md §15)")
+                "policy='multiqueue' has no peek-then-pop front contract "
+                "for the preempt rounds to rely on (HYBRID-only)")
+        if policy == "multiqueue" and storage == "klsm":
+            raise ValueError(
+                "storage='klsm' indexes the HYBRID published set; the "
+                "MULTIQUEUE sampled pop has nothing for it to index")
         self.slots, self.frontends, self.k = slots, frontends, k
         self.storage = storage
+        self.policy = policy
         self.max_len, self.capacity = max_len, capacity
         self.buffer_cap = buffer_cap
         self.params = params
@@ -624,6 +699,8 @@ class FusedServeLoop:
                 count=jnp.zeros((2, frontends), jnp.int32),
             ),
             plan_sel=jnp.zeros((), jnp.int32),
+            mq_pops=jnp.zeros((), jnp.uint32),
+            pop_aborts=jnp.zeros((), jnp.int32),
             store=(kp.klsm_init(capacity, frontends, k=k)
                    if storage == "klsm" else None),
         )
@@ -682,6 +759,20 @@ class FusedServeLoop:
         per section)."""
         return cls.dispatch_ledger.total()
 
+    @property
+    def pop_aborts(self) -> int:
+        """Aborted in-trace selects so far (§16) — sampled MULTIQUEUE
+        misses whose attempt was counter-bumped and abandoned. Reads the
+        device carry scalar (one scalar readback; 0 under HYBRID)."""
+        return int(self.carry.pop_aborts)
+
+    def place_of(self, pool_slot: int) -> int:
+        """Buffer place this pool slot's push folds into: the submit
+        ``place`` under HYBRID, the hashed home place under MULTIQUEUE —
+        the PlanSlot row a continuous-plane publisher must target."""
+        with self._lock:
+            return self._place_of[pool_slot]
+
     # ------------------------------------------------------------ submission
     def _alloc_slot(self) -> int:
         s, self._next_slot = streaming.alloc_pool_slot(
@@ -716,6 +807,14 @@ class FusedServeLoop:
         if step <= self.clock:
             raise ValueError(
                 f"at_step={step} already executed (clock={self.clock})")
+        if self.policy == "multiqueue":
+            # MQ routing (§14.2): ignore the caller's place — the home
+            # place is the (f32 priority, uid) hash, computed host-side
+            # exactly like StreamingAdmitter/MultiQueue. The fold assigns
+            # pool seq in arrival order, so the arrival uid here IS the
+            # uid the traced hash would see.
+            place = kp.mq_place_host(
+                float(np.float32(priority)), self._arrival, self.frontends)
         pool_slot = self._alloc_slot()
         row = self._alloc_row()
         self._by_slot[pool_slot] = item
@@ -759,9 +858,14 @@ class FusedServeLoop:
             row = self._alloc_row()
             self._by_slot[pool_slot] = item
             self._row_of[pool_slot] = row
-            self._place_of[pool_slot] = place
             uid = self._arrival
             self._arrival += 1
+            if self.policy == "multiqueue":
+                # same host-side hash as submit(); callers fetch the home
+                # place via place_of() when publishing the plan row
+                place = kp.mq_place_host(
+                    float(np.float32(priority)), uid, self.frontends)
+            self._place_of[pool_slot] = place
         logits, cache1 = self._prefill(self.params, toks)
         tok0 = int(jnp.argmax(logits[0]))
         dl = np.inf if deadline is None else float(deadline)
@@ -895,7 +999,8 @@ class FusedServeLoop:
                 margin_scale=slo.margin_scale if self._slo_margin else 0.0,
                 margin_floor=slo.margin_floor if self._slo_margin else 0.0,
                 margin_cap=slo.margin_cap if self._slo_margin else 0.0,
-                victim_cost=self._victim_cost, storage=self.storage)
+                victim_cost=self._victim_cost, storage=self.storage,
+                policy=self.policy)
             self._chunk_holders[n] = h
         return h
 
@@ -1106,7 +1211,7 @@ def toy_prefill_fn(params, toks):
 def toy_loop(*, slots, frontends, k, max_len=10_000, capacity=128,
              buffer_cap=32, mesh=None, preemption="off", margin=0.0,
              staging_rows=None, continuous=False, slo=None,
-             storage="flat") -> FusedServeLoop:
+             storage="flat", policy="hybrid") -> FusedServeLoop:
     """A :class:`FusedServeLoop` over the toy model, with the engine's cache
     convention (slot dim = axis 1 of every leaf) — splice/staging machinery
     is exercised end-to-end, compiles are shared across LIVE instances (the
@@ -1119,7 +1224,7 @@ def toy_loop(*, slots, frontends, k, max_len=10_000, capacity=128,
         caches=caches, decode_fn=toy_decode_fn, prefill_fn=toy_prefill_fn,
         mesh=mesh, preemption=preemption, margin=margin,
         staging_rows=staging_rows, continuous=continuous, slo=slo,
-        storage=storage)
+        storage=storage, policy=policy)
 
 
 # ---------------------------------------------------------------------------
@@ -1331,6 +1436,7 @@ def _selftest_engine_fused(mesh):  # pragma: no cover
     criterion under the 8-device batch × data × model mesh)."""
     from repro.configs import get_reduced
     from repro.models import materialize, model_p
+    from repro.serve.config import ServeConfig
     from repro.serve.engine import Request, ServeEngine
 
     cfg = get_reduced("qwen3_1_7b")
@@ -1342,7 +1448,8 @@ def _selftest_engine_fused(mesh):  # pragma: no cover
 
     def run(mode, mesh_):
         eng = ServeEngine(cfg, params, slots=4, max_len=32, frontends=2, k=2,
-                          mesh=mesh_, step=mode, step_chunk=3)
+                          config=ServeConfig(step=mode, step_chunk=3,
+                                             mesh=mesh_))
         for i, toks in enumerate(prompts):
             eng.submit(Request(rid=i, tokens=toks, max_new=4,
                                priority=prios[i]), frontend=i % 2)

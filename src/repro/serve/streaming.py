@@ -674,6 +674,7 @@ class StreamingAdmitter:
         self._next_slot = 0
         self._arrival = 0
         self._pops = 0                         # MQ pop-attempt counter (§14.2)
+        self._pop_misses = 0                   # aborted MQ selects (§16)
         self._staged = [0] * num_places        # unfolded pushes (host mirror)
         self._unpub = [0] * num_places         # device unpub_pushes mirror
         self._push_fn = _jitted_buffer_push
@@ -703,6 +704,13 @@ class StreamingAdmitter:
         """Device programs launched by THIS instance (instance-scoped — a
         second live admitter never skews it)."""
         return self._dispatch_cell.n
+
+    @property
+    def pop_misses(self) -> int:
+        """MULTIQUEUE pop attempts whose sampled draw came up empty — the
+        aborted selects of the §16 pop contract (``host_queue.MultiQueue``
+        mirror; 0 under HYBRID, whose pop is exact)."""
+        return self._pop_misses
 
     def _count(self, n: int = 1):
         self._dispatch_cell.n += n
@@ -860,6 +868,8 @@ class StreamingAdmitter:
         self._count()
         self._check_clobbers()
         if not bool(valid):
+            if self.policy == "multiqueue":
+                self._pop_misses += 1
             return None
         s = int(slot)
         item = self._items.pop(s)
@@ -991,6 +1001,7 @@ def _selftest_engine_equivalence():  # pragma: no cover
     from repro.configs import get_reduced
     from repro.launch.mesh import make_test_production_batch_mesh
     from repro.models import materialize, model_p
+    from repro.serve.config import ServeConfig
     from repro.serve.engine import Request, ServeEngine
 
     cfg = get_reduced("qwen3_1_7b")
@@ -1003,7 +1014,7 @@ def _selftest_engine_equivalence():  # pragma: no cover
 
     def run(admission, mesh_):
         eng = ServeEngine(cfg, params, slots=4, max_len=32, frontends=2, k=2,
-                          mesh=mesh_, admission=admission)
+                          config=ServeConfig(admission=admission, mesh=mesh_))
         for i, toks in enumerate(prompts):
             eng.submit(Request(rid=i, tokens=toks, max_new=4,
                                priority=prios[i]), frontend=i % 2)

@@ -1,0 +1,163 @@
+"""ServeConfig — the consolidated serving-knob front door (ISSUE 10
+satellite, DESIGN.md §16):
+
+  * the declarative rule table raises at CONSTRUCTION with messages that
+    name the offending field(s) — enum membership and cross-field
+    conflicts alike,
+  * the combinations this PR legalized (multiqueue × fused/continuous,
+    klsm × fused preemption) construct cleanly,
+  * ``resolved()`` normalizes step/admission and is idempotent,
+  * the dataclass is frozen (configs are values, not mutable bags),
+  * ``ServeEngine(config=...)`` is the new call convention; the legacy
+    per-kwarg shim still works, warns ``DeprecationWarning``, rejects
+    unknown kwargs and config+legacy mixing.
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.serve.config import (
+    CROSS_RULES,
+    ENUM_RULES,
+    LEGACY_KWARGS,
+    ServeConfig,
+)
+
+
+# ---------------------------------------------------------------------------
+# the rule table
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("field", [f for (f, _legal) in ENUM_RULES])
+def test_enum_rules_name_their_field(field):
+    with pytest.raises(ValueError, match=field):
+        ServeConfig(**{field: "definitely-not-a-mode"})
+
+
+@pytest.mark.parametrize("kwargs,named", [
+    (dict(preempt_margin=-1.0), "preempt_margin"),
+    (dict(step_chunk=0), "step_chunk"),
+    (dict(admission_capacity=0), "admission_capacity"),
+    (dict(admission_policy="multiqueue", preemption="margin",
+          preempt_margin=0.5), "preemption"),
+    (dict(admission_storage="klsm", admission_policy="multiqueue"), "klsm"),
+])
+def test_cross_rules_name_their_fields(kwargs, named):
+    with pytest.raises(ValueError, match=named):
+        ServeConfig(**kwargs)
+
+
+def test_legalized_combinations_construct():
+    """The ISSUE 10 deletions from the rule table: the two-phase pop
+    contract made these representable — constructing IS the assertion."""
+    for step in ("fused", "continuous"):
+        ServeConfig(step=step, admission_policy="multiqueue")
+    ServeConfig(step="fused", preemption="margin", preempt_margin=0.5,
+                admission_storage="klsm")
+
+
+def test_every_cross_rule_is_reachable():
+    """Each lambda in the table fires for SOME config — a rule nobody can
+    trip is a deleted rule that forgot to leave."""
+    trips = [
+        dict(preempt_margin=-1.0),
+        dict(step_chunk=0),
+        dict(admission_capacity=0),
+        dict(admission_policy="multiqueue", preemption="margin",
+             preempt_margin=0.5),
+        dict(admission_storage="klsm", admission_policy="multiqueue"),
+    ]
+    assert len(trips) == len(CROSS_RULES)
+    for bad, _msg in CROSS_RULES:
+        assert any(bad(_unchecked(kw)) for kw in trips)
+
+
+def _unchecked(kwargs):
+    """A ServeConfig built WITHOUT validation (object.__new__ route), so a
+    single rule can be probed in isolation."""
+    c = object.__new__(ServeConfig)
+    for f in dataclasses.fields(ServeConfig):
+        object.__setattr__(c, f.name, kwargs.get(f.name, f.default))
+    return c
+
+
+# ---------------------------------------------------------------------------
+# value semantics
+# ---------------------------------------------------------------------------
+
+def test_frozen():
+    c = ServeConfig()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        c.step = "fused"
+
+
+def test_resolved_normalization():
+    # step=None defers to the eager plane named by admission
+    assert ServeConfig(admission="device").resolved().step == "device"
+    # step="host"/"device" force admission to match
+    r = ServeConfig(admission="host", step="device").resolved()
+    assert (r.step, r.admission) == ("device", "device")
+    # fused/continuous leave admission alone (it names the oracle plane)
+    r = ServeConfig(admission="host", step="fused").resolved()
+    assert (r.step, r.admission) == ("fused", "host")
+    # idempotent, and a no-op resolve returns the same object
+    c = ServeConfig(step="fused")
+    assert c.resolved().resolved() == c.resolved()
+    assert ServeConfig(step="host").resolved() is not None
+
+
+def test_legacy_kwargs_mirror_the_fields():
+    assert set(LEGACY_KWARGS) == {
+        f.name for f in dataclasses.fields(ServeConfig)}
+
+
+# ---------------------------------------------------------------------------
+# the engine front door + deprecation shim
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine_parts():
+    from repro.configs import get_reduced
+    from repro.models import materialize, model_p
+
+    cfg = get_reduced("qwen3_1_7b")
+    params = materialize(jax.random.PRNGKey(0), model_p(cfg))
+    return cfg, params
+
+
+def test_engine_config_front_door(engine_parts):
+    from repro.serve.engine import ServeEngine
+
+    cfg, params = engine_parts
+    eng = ServeEngine(cfg, params, slots=2, max_len=32, frontends=2, k=1,
+                      config=ServeConfig(step="fused", step_chunk=2))
+    assert eng.config.step == "fused"
+
+
+def test_engine_legacy_shim_warns_and_matches(engine_parts):
+    from repro.serve.engine import ServeEngine
+
+    cfg, params = engine_parts
+    with pytest.warns(DeprecationWarning, match="ServeConfig"):
+        eng = ServeEngine(cfg, params, slots=2, max_len=32, frontends=2,
+                          k=1, step="fused", step_chunk=2)
+    assert eng.config == ServeConfig(step="fused", step_chunk=2).resolved()
+
+
+def test_engine_rejects_config_plus_legacy(engine_parts):
+    from repro.serve.engine import ServeEngine
+
+    cfg, params = engine_parts
+    with pytest.raises(TypeError, match="not both"):
+        ServeEngine(cfg, params, slots=2, max_len=32, frontends=2, k=1,
+                    config=ServeConfig(), step="fused")
+
+
+def test_engine_rejects_unknown_kwargs(engine_parts):
+    from repro.serve.engine import ServeEngine
+
+    cfg, params = engine_parts
+    with pytest.raises(TypeError, match="stepchunk"):
+        ServeEngine(cfg, params, slots=2, max_len=32, frontends=2, k=1,
+                    stepchunk=3)

@@ -37,6 +37,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.serve import streaming
+from repro.serve.config import ServeConfig
 from repro.serve.fused_step import FusedServeLoop, toy_loop
 from repro.serve.streaming import PlanBook, StreamingAdmitter
 from test_fused_step import PRIO_GRID, _prompt, drive_fused, drive_oracle
@@ -446,7 +447,8 @@ def test_engine_continuous_matches_host():
 
     def run(mode, chunk=1, packer="sync"):
         eng = ServeEngine(cfg, params, slots=3, max_len=32, frontends=2, k=2,
-                          step=mode, step_chunk=chunk, packer=packer)
+                          config=ServeConfig(step=mode, step_chunk=chunk,
+                                             packer=packer))
         for i, toks in enumerate(prompts):
             eng.submit(Request(rid=i, tokens=toks, max_new=4,
                                priority=prios[i]), frontend=i % 2)
@@ -465,7 +467,8 @@ def test_engine_continuous_matches_host():
 
     # flush_frontends drains planned-but-unfolded submissions (adopt_plan)
     eng = ServeEngine(cfg, params, slots=2, max_len=32, frontends=2, k=1,
-                      step="continuous", step_chunk=3, packer="sync")
+                      config=ServeConfig(step="continuous", step_chunk=3,
+                                         packer="sync"))
     for i in range(4):
         eng.submit(Request(rid=i, tokens=prompts[i], max_new=3,
                            priority=prios[i]), frontend=i % 2)
@@ -475,7 +478,8 @@ def test_engine_continuous_matches_host():
 
     # dropping a threaded engine stops its packer (weakref-finalized)
     eng = ServeEngine(cfg, params, slots=2, max_len=32, frontends=2, k=1,
-                      step="continuous", step_chunk=2, packer="thread")
+                      config=ServeConfig(step="continuous", step_chunk=2,
+                                         packer="thread"))
     t = eng._packer._thread
     del eng
     gc.collect()

@@ -8,7 +8,13 @@ ISSUE 8 adds the policy-table gate: the ``kpriority`` module docstring's
 policy table is RENDERED from ``POLICY_TABLE`` (one row per ``Policy``
 member) at import time, and README/DESIGN must carry a row per policy —
 a new enum member cannot land without docs.
+
+ISSUE 10 adds the deprecation gate: no in-repo ``ServeEngine(...)`` CALL
+SITE may use the legacy per-field kwargs the ``ServeConfig`` shim
+deprecates — outside the shim's own home (serve/engine.py) and the test
+that pins the shim (tests/test_config.py).
 """
+import ast
 import importlib
 import pathlib
 import re
@@ -77,6 +83,37 @@ def test_readme_and_design_cover_every_policy():
     for pol in kp.Policy:
         assert pol.name in README, f"README lacks a {pol.name} row"
         assert pol.name in design, f"DESIGN.md lacks a {pol.name} mention"
+
+
+def test_no_deprecated_serve_engine_kwargs_at_call_sites():
+    """Every in-repo ``ServeEngine(...)`` call passes scheduling knobs via
+    ``config=ServeConfig(...)`` — the legacy per-field kwargs only survive
+    inside the shim (serve/engine.py) and its pin (tests/test_config.py).
+    AST-based, so docstring mentions of the old form don't count."""
+    from repro.serve.config import LEGACY_KWARGS
+
+    allowed = {"src/repro/serve/engine.py", "tests/test_config.py"}
+    bad = []
+    for base in ("src", "tests", "examples", "benchmarks"):
+        if not (ROOT / base).is_dir():
+            continue
+        for py in (ROOT / base).rglob("*.py"):
+            rel = str(py.relative_to(ROOT))
+            if rel in allowed:
+                continue
+            for node in ast.walk(ast.parse(py.read_text())):
+                if not isinstance(node, ast.Call):
+                    continue
+                fn = node.func
+                name = (fn.id if isinstance(fn, ast.Name)
+                        else getattr(fn, "attr", ""))
+                if name != "ServeEngine":
+                    continue
+                bad.extend((rel, node.lineno, kw.arg)
+                           for kw in node.keywords
+                           if kw.arg in LEGACY_KWARGS)
+    assert not bad, ("deprecated ServeEngine kwargs at call sites "
+                     f"(use config=ServeConfig(...)): {bad}")
 
 
 def test_design_sections_referenced_in_code_exist():

@@ -33,6 +33,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import batched, kpriority as kp
 from repro.core.host_queue import HostPodQueues, HybridKQueue, MultiQueue
+from repro.serve.config import ServeConfig
 from repro.serve.fused_step import TOY_VOCAB, toy_loop
 from repro.serve.streaming import StreamingAdmitter
 
@@ -155,9 +156,10 @@ def drive_oracle(trace, *, slots, frontends, k, max_len, plane,
     return eng
 
 
-def drive_fused(trace, *, slots, frontends, k, max_len, chunk, capacity=128):
+def drive_fused(trace, *, slots, frontends, k, max_len, chunk, capacity=128,
+                policy="hybrid"):
     loop = toy_loop(slots=slots, frontends=frontends, k=k, max_len=max_len,
-                    capacity=capacity)
+                    capacity=capacity, policy=policy)
     for step, burst in enumerate(trace, start=1):
         for (place, pr, uid, max_new, plen) in burst:
             loop.submit(place, pr, uid, _prompt(uid, plen), max_new,
@@ -583,7 +585,7 @@ def test_engine_fused_matches_host_and_device():
 
     def run(mode, chunk=1):
         eng = ServeEngine(cfg, params, slots=3, max_len=32, frontends=2, k=2,
-                          step=mode, step_chunk=chunk)
+                          config=ServeConfig(step=mode, step_chunk=chunk))
         for i, toks in enumerate(prompts):
             eng.submit(Request(rid=i, tokens=toks, max_new=4,
                                priority=prios[i]), frontend=i % 2)
@@ -606,7 +608,7 @@ def test_engine_fused_caches_stay_live():
     cfg = get_reduced("qwen3_1_7b")
     params = materialize(jax.random.PRNGKey(0), model_p(cfg))
     eng = ServeEngine(cfg, params, slots=2, max_len=24, frontends=2, k=1,
-                      step="fused", step_chunk=2)
+                      config=ServeConfig(step="fused", step_chunk=2))
     eng.submit(Request(rid=0, tokens=np.arange(4, dtype=np.int32),
                        max_new=3, priority=0.0), frontend=0)
     eng.run()
@@ -1038,8 +1040,9 @@ def test_engine_preemption_matches_across_planes():
 
     def run(mode, chunk=1):
         eng = ServeEngine(cfg, params, slots=2, max_len=48, frontends=2,
-                          k=1, step=mode, step_chunk=chunk,
-                          preemption="margin", preempt_margin=0.5)
+                          k=1, config=ServeConfig(
+                              step=mode, step_chunk=chunk,
+                              preemption="margin", preempt_margin=0.5))
         for (rid, toks, mn, pr) in low:
             eng.submit(Request(rid=rid, tokens=toks, max_new=mn,
                                priority=pr), frontend=rid % 2)

@@ -64,6 +64,11 @@ def good_multiqueue():
             {"structure": "multiqueue", "P": 16, "k": 0},
             {"structure": "rank_probe", "P": 16, "pushes": 600,
              "mean_rank": 2.4, "max_rank": 21, "rank_bound": 48,
+             "oracle_identical": True},
+            {"structure": "serve_eager", "P": 4,
+             "dispatches_per_step": 9.4, "aborts_per_step": 1.2},
+            {"structure": "serve_fused", "P": 4,
+             "dispatches_per_step": 0.9, "aborts_per_step": 1.2,
              "oracle_identical": True}]
 
 
@@ -95,6 +100,12 @@ CASES = [
       lambda r: r[2].__setitem__("oracle_identical", False),
       lambda r: r.pop(2),                  # rank probe row vanished
       lambda r: r.pop(1)]),                # multiqueue sweep row vanished
+    ("multiqueue:fused", "BENCH_multiqueue.json", good_multiqueue,
+     [lambda r: r[4].__setitem__("dispatches_per_step", 9.5),
+      lambda r: r[4].__setitem__("aborts_per_step", 0.0),  # stream drifted
+      lambda r: r[4].__setitem__("oracle_identical", False),
+      lambda r: r[2].__setitem__("mean_rank", 49.0),  # rank broke alongside
+      lambda r: r.pop(4)]),                # fused serving row vanished
     ("klsm:scaling", "BENCH_klsm.json", good_klsm,
      [lambda r: r[1].__setitem__("klsm_us_per_pop", 983.0),
       lambda r: r[1].__setitem__("oracle_identical", False),

@@ -11,8 +11,15 @@
     mode repush included,
   * the fused and continuous planes produce identical StepRecords under
     either storage,
-  * invalid combinations (klsm + multiqueue, klsm + fused preemption)
-    raise up front,
+  * the two-phase pop contract (ISSUE 10, DESIGN.md §16):
+    ``klsm_pop_select`` picks the exact flat front, ``klsm_pop_abort`` is
+    a seq-keyed lazy deletion whose dead-head-hides-level transient the
+    ``HostKLSM`` twin mirrors bit-for-bit, and ``klsm_repair`` un-strands
+    the run behind the dead head,
+  * klsm under fused ``preemption="margin"`` — legalized by that contract
+    — matches the eager ``HostKLSM`` preemption oracle on randomized
+    re-push-cycle traces (admission AND victim order, k = 0 included),
+  * invalid combinations (klsm + multiqueue) raise up front,
   * satellite guards: pool-capacity exhaustion raises at push, and a
     fold that would clobber a LIVE pool slot masks the write and raises
     loudly at the next pop/peek readback,
@@ -78,6 +85,19 @@ _jpop_flat = jax.jit(kp.stream_pop)
 _jpop_klsm = jax.jit(kp.klsm_pop)
 _jpeek_flat = jax.jit(kp.stream_peek)
 _jpeek_klsm = jax.jit(kp.klsm_peek)
+_jselect = jax.jit(kp.klsm_pop_select)
+_jcommit = jax.jit(kp.klsm_pop_commit)
+_jabort = jax.jit(kp.klsm_pop_abort)
+_jrepair = jax.jit(kp.klsm_repair)
+
+
+@jax.jit
+def _jfinalize(pool, slot):
+    """The out-of-band pool finalize an aborting caller performs (§16):
+    abort DETACHES the item from the store; its pool lifecycle ends
+    through the caller's own path — here, a plain deactivate."""
+    return pool._replace(active=pool.active.at[slot].set(False),
+                         prio=pool.prio.at[slot].set(kp.INF))
 
 
 def _drive_core(seed, places, k, m=48, steps=30, peek_rate=0.25):
@@ -419,19 +439,195 @@ def test_klsm_continuous_matches_flat():
 
 
 # ---------------------------------------------------------------------------
+# two-phase pop contract (ISSUE 10, DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+def _drive_two_phase(seed, places, k, m=32, steps=24):
+    """Randomized select → commit/abort trace: the klsm plane with
+    boundary repair before every probe must track the flat committed-pop
+    plane probe-for-probe, with aborts finalized out-of-band (lazy
+    deletion + caller deactivate ≡ flat pop of the same item)."""
+    rng = np.random.default_rng(seed)
+    flat = kp.init_pool(m, places)
+    pool = kp.init_pool(m, places)
+    store = kp.klsm_init(m, places, k=k)
+    free = list(range(m))
+    commits = aborts = 0
+
+    def push_round(t, nmax=4):
+        nonlocal flat, pool, store
+        nb = min(int(rng.integers(0, nmax)), len(free))
+        mask = np.zeros(m, bool)
+        prios = np.zeros(m, np.float32)
+        crs = np.zeros(m, np.int32)
+        tie = np.zeros(m, np.int32)
+        for j in range(nb):
+            s = free.pop()
+            mask[s] = True
+            prios[s] = PRIO_GRID[rng.integers(len(PRIO_GRID))]
+            crs[s] = int(rng.integers(places))
+            tie[s] = t * 100 + j
+        args = (jnp.asarray(mask), jnp.asarray(prios), jnp.asarray(crs),
+                jnp.asarray(tie))
+        flat = _push_publish(flat, *args, k=k)
+        pool = _push_publish(pool, *args, k=k)
+        store = _sync(pool, store, batch_cap=16)
+
+    def probe(p):
+        nonlocal flat, pool, store, commits, aborts
+        pj = jnp.int32(p)
+        store = _jrepair(pool, store)       # boundary repair (§16)
+        flat, fs, fp, fv = _jpop_flat(flat, pj)
+        store, ticket = _jselect(pool, store, pj)
+        assert bool(fv) == bool(ticket.valid), (seed, places, k, p)
+        if not bool(fv):
+            return False
+        assert int(fs) == int(ticket.slot)
+        assert float(fp) == float(ticket.prio)
+        if rng.random() < 0.5:
+            pool, store = _jcommit(pool, store, ticket)
+            commits += 1
+        else:
+            store = _jabort(pool, store, ticket)
+            pool = _jfinalize(pool, ticket.slot)
+            aborts += 1
+        free.append(int(fs))
+        return True
+
+    for t in range(steps):
+        push_round(t)
+        for _ in range(int(rng.integers(0, 4))):
+            probe(int(rng.integers(places)))
+    misses, p = 0, 0
+    while misses <= places:
+        misses = 0 if probe(p % places) else misses + 1
+        p += 1
+    return commits, aborts
+
+
+@pytest.mark.parametrize("places,k", [(2, 1), (3, 2), (2, 0)])
+def test_klsm_two_phase_matches_flat(places, k):
+    for seed in range(3):
+        commits, aborts = _drive_two_phase(seed, places, k)
+        assert commits > 0 and aborts > 0      # both paths exercised
+
+
+@pytest.mark.parametrize("k", [2, 0])
+def test_klsm_abort_transient_matches_host_twin(k):
+    """The documented lazy-deletion transient, pinned bit-for-bit against
+    the ``HostKLSM`` twin: an aborted head HIDES its whole level until
+    repair; repair un-strands the live run behind it (DESIGN.md §16)."""
+    m, places = 8, 2
+    pool = kp.init_pool(m, places)
+    store = kp.klsm_init(m, places, k=k)
+    host = HostKLSM(places, k)
+    for i, pr in enumerate([1.0, 2.0]):
+        mask = np.zeros(m, bool)
+        prios = np.zeros(m, np.float32)
+        tie = np.zeros(m, np.int32)
+        mask[i], prios[i], tie[i] = True, pr, i
+        pool = _push_publish(pool, jnp.asarray(mask), jnp.asarray(prios),
+                             jnp.asarray(np.zeros(m, np.int32)),
+                             jnp.asarray(tie), k=k)
+        host.push(0, pr, f"r{i}")
+    store = _sync(pool, store, batch_cap=8)
+    # select + abort the front on both planes
+    store, ticket = _jselect(pool, store, jnp.int32(0))
+    assert bool(ticket.valid) and float(ticket.prio) == 1.0
+    got = host.pop_abort(0)
+    assert got is not None and got[0] == 1.0
+    store = _jabort(pool, store, ticket)
+    pool = _jfinalize(pool, ticket.slot)
+    # the dead head hides its whole level on BOTH planes
+    store, t2 = _jselect(pool, store, jnp.int32(0))
+    assert not bool(t2.valid)
+    assert host.pop(0) is None
+    # boundary repair un-strands the entry behind it — again on both
+    store = _jrepair(pool, store)
+    host.repair()
+    pool, store, _slot, prio, valid = _jpop_klsm(pool, store, jnp.int32(0))
+    got = host.pop(0)
+    assert bool(valid) and got is not None
+    assert float(prio) == 2.0 == got[0]
+
+
+def _preempt_trace(seed, frontends=2, n=24):
+    # wide integer spread (inversion-heavy, so evictions actually fire)
+    # mixed with f32-collision pairs (the tie-break carries weight)
+    collide = [0.1, 0.1 + 1e-12, 7.5, 7.5 + 1e-12]
+    rng = np.random.default_rng(seed)
+    trace, uid = [], 0
+    for _ in range(n):
+        burst = []
+        for _ in range(int(rng.integers(0, 3))):
+            if rng.random() < 0.3:
+                pr = float(np.float32(collide[rng.integers(len(collide))]))
+            else:
+                pr = float(rng.integers(0, 8))
+            burst.append((uid % frontends, pr, uid,
+                          int(rng.integers(2, 7)), int(rng.integers(1, 4))))
+            uid += 1
+        trace.append(burst)
+    return trace
+
+
+@pytest.mark.parametrize("k", [2, 0])
+def test_klsm_fused_preemption_matches_oracle(k):
+    """klsm under fused ``preemption="margin"`` — the combination the §16
+    contract legalized — against the eager HostKLSM preemption oracle:
+    admission order AND victim order, chunks 1 and 4, re-push cycles and
+    f32-collision priorities, k = 0 included."""
+    from repro.serve.fused_step import _preempt_oracle_drive
+
+    slots, frontends, max_len, margin = 3, 2, 64, 0.5
+    evictions = 0
+    for seed in (7, 23):
+        trace = _preempt_trace(seed, frontends)
+        ref = _preempt_oracle_drive(
+            trace, slots=slots, frontends=frontends, k=k, max_len=max_len,
+            margin=margin, queue=HostKLSM(frontends, k))
+        evictions += len(ref[1])
+
+        def fused(chunk):
+            loop = toy_loop(slots=slots, frontends=frontends, k=k,
+                            max_len=max_len, storage="klsm",
+                            preemption="margin", margin=margin)
+            for step, burst in enumerate(trace, start=1):
+                for (place, pr, u, max_new, plen) in burst:
+                    loop.submit(place, pr, u, list(np.arange(plen) + u),
+                                max_new, at_step=step)
+            done = 0
+            while done < len(trace):
+                n = min(chunk, len(trace) - done)
+                loop.run_steps(n)
+                done += n
+            return loop.admission_log, loop.preempt_log
+
+        assert fused(1) == ref
+        assert fused(4) == ref
+    assert evictions > 0, "traces must exercise the re-push cycle"
+
+
+# ---------------------------------------------------------------------------
 # invalid combinations
 # ---------------------------------------------------------------------------
 
 def test_klsm_invalid_combinations_raise():
+    from repro.serve.config import ServeConfig
+
     with pytest.raises(ValueError, match="storage"):
         StreamingAdmitter(2, 1, storage="nope")
     with pytest.raises(ValueError, match="MULTIQUEUE"):
         StreamingAdmitter(2, 1, storage="klsm", policy="multiqueue")
-    with pytest.raises(ValueError, match="preemption"):
-        toy_loop(slots=2, frontends=2, k=1, storage="klsm",
-                 preemption="margin", margin=0.5)
+    with pytest.raises(ValueError, match="klsm"):
+        ServeConfig(admission_storage="klsm", admission_policy="multiqueue")
     with pytest.raises(ValueError, match="min_index"):
         HostKLSM(2, 1, spy="random")
+    # klsm under fused preemption used to be rejected here; the two-phase
+    # pop contract (§16) legalized it — constructing is now the test
+    toy_loop(slots=2, frontends=2, k=1, storage="klsm",
+             preemption="margin", margin=0.5)
+    ServeConfig(step="fused", preemption="margin", admission_storage="klsm")
 
 
 # ---------------------------------------------------------------------------

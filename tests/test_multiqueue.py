@@ -12,9 +12,11 @@ serving plane. Pins
     (hits AND misses), the pop-attempt counters, exactly-once drain,
   * engine parity — ``ServeEngine(admission_policy="multiqueue")`` host ==
     device on the real reduced model: admission order and token streams,
-  * the guard rails — MULTIQUEUE has no peek-then-pop front, so the fused /
-    continuous step modes, the preemption plane, ``retain``, ``peek`` and
-    ``repush`` are all rejected loudly, never silently misscheduled.
+  * the guard rails — MULTIQUEUE has no peek-then-pop front, so the
+    preemption plane, ``retain``, ``peek`` and ``repush`` are rejected
+    loudly (by the ServeConfig rule table, §16) — while the fused and
+    continuous step modes, legalized by the miss-tolerant pop contract,
+    now CONSTRUCT cleanly.
 
 The long-trace randomized soak lives with the other nightly soaks in
 tests/test_fused_step.py (``test_multiqueue_fuzz_soak``).
@@ -25,6 +27,7 @@ import pytest
 
 from repro.core import kpriority as kp
 from repro.core.host_queue import MultiQueue
+from repro.serve.config import ServeConfig
 from repro.serve.streaming import StreamingAdmitter
 
 # same grid as test_fused_step: repeated values + pairs that collide after
@@ -172,8 +175,9 @@ def test_engine_multiqueue_host_matches_device(frontends, k):
 
     def run(admission):
         eng = ServeEngine(cfg, params, slots=2, max_len=48,
-                          frontends=frontends, k=k, admission=admission,
-                          admission_policy="multiqueue")
+                          frontends=frontends, k=k,
+                          config=ServeConfig(admission=admission,
+                                             admission_policy="multiqueue"))
         for (rid, toks, mn, pr) in reqs:
             eng.submit(Request(rid=rid, tokens=toks, max_new=mn,
                                priority=pr), frontend=rid % frontends)
@@ -189,14 +193,176 @@ def test_engine_multiqueue_host_matches_device(frontends, k):
 
 
 # ---------------------------------------------------------------------------
+# fused / continuous planes (ISSUE 10: the miss-tolerant fill, §16)
+# ---------------------------------------------------------------------------
+
+class _MQOracle:
+    """Eager-step oracle with the §16 miss-tolerant fill: each free slot
+    gets 1 + MQ_POP_RETRIES sampled attempts, and an exhausted slot moves
+    ON to the next slot instead of ending the fill (a HYBRID pop miss
+    proves global emptiness; a sampled miss proves nothing). Token model
+    identical to test_fused_step.OracleEngine."""
+
+    def __init__(self, queue, *, slots, frontends, max_len, fold=False):
+        from test_fused_step import OracleEngine
+
+        self._eng = OracleEngine(queue, slots=slots, frontends=frontends,
+                                 max_len=max_len, fold=fold)
+
+    def push(self, *a):
+        self._eng.push(*a)
+
+    def step(self):
+        from test_fused_step import _tok0
+        from repro.serve.fused_step import TOY_VOCAB
+
+        e = self._eng
+        e.clock += 1
+        if e.do_fold:
+            e.q.fold()
+        for s in range(e.slots):
+            if e.active[s] is not None:
+                continue
+            got = None
+            for _ in range(1 + kp.MQ_POP_RETRIES):
+                got = e._pop(s % e.frontends)
+                if got is not None:
+                    break
+            if got is None:
+                continue                      # miss-tolerant: next slot
+            uid = got[1]
+            e.admission.append(uid)
+            e.fills.append((e.clock, s, uid))
+            max_new, plen = e.meta[uid]
+            t0 = _tok0(uid, plen)
+            e.tokens[uid] = [t0]
+            e.active[s] = {"uid": uid, "cur": t0, "pos": plen,
+                           "out": 1, "max_new": max_new}
+        for s in range(e.slots):
+            a = e.active[s]
+            if a is None:
+                continue
+            tok = (a["cur"] * 7 + a["pos"]) % TOY_VOCAB
+            e.tokens[a["uid"]].append(tok)
+            a["pos"] += 1
+            a["cur"] = tok
+            a["out"] += 1
+            if a["out"] >= a["max_new"] or a["pos"] >= e.max_len - 1:
+                e.active[s] = None
+
+    def results(self):
+        return self._eng.results()
+
+    @property
+    def queue(self):
+        return self._eng.q
+
+    @property
+    def pop_slots(self):
+        return self._eng.pop_slots
+
+
+def _drive_mq_oracle(trace, *, slots, frontends, k, max_len, plane):
+    if plane == "host":
+        q, fold = MultiQueue(frontends, k), False
+    else:
+        q, fold = StreamingAdmitter(frontends, k, capacity=128,
+                                    policy="multiqueue"), True
+    eng = _MQOracle(q, slots=slots, frontends=frontends, max_len=max_len,
+                    fold=fold)
+    for burst in trace:
+        for (place, pr, uid, max_new, plen) in burst:
+            eng.push(place, pr, uid, max_new, plen)
+        eng.step()
+    return eng
+
+
+@pytest.mark.parametrize("frontends,slots,k", [(2, 3, 2), (3, 4, 1)])
+def test_multiqueue_fused_matches_oracles(frontends, slots, k):
+    """The fused plane under ``policy="multiqueue"`` — the combination the
+    §16 miss-tolerant fill legalized — matches the host MultiQueue oracle
+    AND the eager device plane: admission order, fills, token streams,
+    popped pool slots, and the abort tally (``loop.pop_aborts`` ==
+    ``MultiQueue.pop_misses``), for chunks 1 and 3."""
+    from test_fused_step import drive_fused, gen_trace
+
+    for seed in (5, 11):
+        trace = gen_trace(seed, 16, frontends)
+        host = _drive_mq_oracle(trace, slots=slots, frontends=frontends,
+                                k=k, max_len=48, plane="host")
+        dev = _drive_mq_oracle(trace, slots=slots, frontends=frontends,
+                               k=k, max_len=48, plane="device")
+        assert dev.results() == host.results()
+        assert dev.queue.pop_misses == host.queue.pop_misses
+        for chunk in (1, 3):
+            adm, fills, tokens, pop_slots, _recs, loop = drive_fused(
+                trace, slots=slots, frontends=frontends, k=k, max_len=48,
+                chunk=chunk, policy="multiqueue")
+            assert (adm, fills, tokens) == host.results()
+            assert pop_slots == dev.pop_slots
+            assert loop.pop_aborts == host.queue.pop_misses
+
+
+def test_multiqueue_continuous_matches_fused():
+    """The continuous plane under ``policy="multiqueue"``: double-buffered
+    arrival plans (rows published at the HASHED place via
+    ``loop.place_of``) produce the exact StepRecords — and abort tally —
+    of the fused plane on the same round schedule."""
+    from repro.serve.fused_step import toy_loop
+    from repro.serve.streaming import PlanBook
+
+    def rounds(seed, n=6, chunk=3):
+        rng = np.random.default_rng(seed)
+        out, uid = [], 0
+        for _ in range(n):
+            burst = []
+            for _ in range(int(rng.integers(0, 4))):
+                pr = float(np.float32(PRIO_GRID[rng.integers(
+                    len(PRIO_GRID))]))
+                burst.append((int(rng.integers(3)), pr, uid,
+                              int(rng.integers(1, 4)),
+                              int(rng.integers(1, 4))))
+                uid += 1
+            out.append(burst)
+        return out
+
+    def fused(bursts, chunk=3):
+        loop = toy_loop(slots=4, frontends=3, k=2, max_len=64,
+                        capacity=128, policy="multiqueue")
+        for r, burst in enumerate(bursts):
+            for (place, pr, uid, max_new, plen) in burst:
+                loop.submit(place, pr, uid, list(range(1, plen + 1)),
+                            max_new, at_step=r * chunk + 1)
+        out = [(tuple(rec.admitted), tuple(rec.tokens), tuple(rec.finished))
+               for rec in loop.run_steps(len(bursts) * chunk)]
+        return out, loop.pop_aborts
+
+    def continuous(bursts, chunk=3):
+        loop = toy_loop(slots=4, frontends=3, k=2, max_len=64,
+                        capacity=128, continuous=True, policy="multiqueue")
+        book = PlanBook(3, loop.buffer_cap)
+        out = []
+        for burst in bursts:
+            for (place, pr, uid, max_new, plen) in burst:
+                ps, u = loop.submit_planned(place, pr, uid,
+                                            list(range(1, plen + 1)),
+                                            max_new)
+                assert book.publish(loop.place_of(ps), ps, pr, u)
+            loop.publish_plan(book.seal())
+            for rec in loop.run_steps(chunk):
+                out.append((tuple(rec.admitted), tuple(rec.tokens),
+                            tuple(rec.finished)))
+        return out, loop.pop_aborts
+
+    for seed in (3, 9):
+        assert continuous(rounds(seed)) == fused(rounds(seed))
+
+
+# ---------------------------------------------------------------------------
 # guard rails: no silent misscheduling
 # ---------------------------------------------------------------------------
 
 def test_multiqueue_guards():
-    from repro.configs import get_reduced
-    from repro.serve.engine import ServeEngine
-
-    cfg = get_reduced("qwen3_1_7b")
     with pytest.raises(ValueError, match="unknown admission policy"):
         StreamingAdmitter(2, 1, policy="lifo")
     with pytest.raises(ValueError, match="retain"):
@@ -206,12 +372,15 @@ def test_multiqueue_guards():
         adm.peek(0)
     with pytest.raises(RuntimeError):
         adm.repush(0, 0, 1.0)
-    with pytest.raises(ValueError, match="unknown admission policy"):
-        ServeEngine(cfg, None, admission_policy="nope")
-    for step in ("fused", "continuous"):
-        with pytest.raises(ValueError, match="eager"):
-            ServeEngine(cfg, None, step=step,
-                        admission_policy="multiqueue")
+    # the config table (§16) owns the engine-level rules now
+    with pytest.raises(ValueError, match="admission_policy"):
+        ServeConfig(admission_policy="nope")
     with pytest.raises(ValueError, match="preemption"):
-        ServeEngine(cfg, None, preemption="margin",
-                    admission_policy="multiqueue")
+        ServeConfig(preemption="margin", admission_policy="multiqueue")
+    with pytest.raises(ValueError, match="klsm"):
+        ServeConfig(admission_storage="klsm", admission_policy="multiqueue")
+    # the miss-tolerant pop contract LEGALIZED multiqueue in the fused and
+    # continuous planes — these used to raise
+    for step in ("fused", "continuous"):
+        c = ServeConfig(step=step, admission_policy="multiqueue")
+        assert c.resolved().step == step

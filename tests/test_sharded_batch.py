@@ -239,13 +239,14 @@ def test_serve_engine_mesh_path():
     from repro.configs import get_reduced
     from repro.launch.mesh import make_batch_mesh
     from repro.models import materialize, model_p
+    from repro.serve.config import ServeConfig
     from repro.serve.engine import Request, ServeEngine
 
     cfg = get_reduced("qwen3_1_7b")
     params = materialize(jax.random.PRNGKey(0), model_p(cfg))
     mesh = make_batch_mesh(1)
     eng = ServeEngine(cfg, params, slots=2, max_len=32, frontends=2, k=2,
-                      mesh=mesh)
+                      config=ServeConfig(mesh=mesh))
     rng = np.random.default_rng(0)
     for i in range(3):
         eng.submit(

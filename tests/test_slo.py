@@ -225,6 +225,7 @@ def test_engine_slo_matches_across_planes():
     streams identical across host, device, and fused planes."""
     from repro.configs import get_reduced
     from repro.models import materialize, model_p
+    from repro.serve.config import ServeConfig
     from repro.serve.engine import Request, ServeEngine
 
     cfg = get_reduced("qwen3_1_7b")
@@ -241,8 +242,10 @@ def test_engine_slo_matches_across_planes():
 
     def run(mode, chunk=1):
         eng = ServeEngine(cfg, params, slots=2, max_len=48, frontends=2,
-                          k=1, step=mode, step_chunk=chunk,
-                          preemption="margin", preempt_margin=0.0, slo=slo)
+                          k=1, config=ServeConfig(
+                              step=mode, step_chunk=chunk,
+                              preemption="margin", preempt_margin=0.0,
+                              slo=slo))
         for (rid, toks, mn, pr, rel) in low:
             eng.submit(Request(rid=rid, tokens=toks, max_new=mn,
                                priority=pr, slo_steps=rel), frontend=rid % 2)

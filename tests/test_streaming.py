@@ -22,6 +22,7 @@ import pytest
 
 from repro.core import batched, kpriority as kp
 from repro.core.host_queue import HybridKQueue
+from repro.serve.config import ServeConfig
 from repro.serve.streaming import StreamingAdmitter, fold, init_buffer
 
 
@@ -299,7 +300,7 @@ def test_engine_device_admission_order_matches_host():
 
     def run(admission):
         eng = ServeEngine(cfg, params, slots=3, max_len=32, frontends=2, k=2,
-                          admission=admission)
+                          config=ServeConfig(admission=admission))
         for i, toks in enumerate(prompts):
             eng.submit(Request(rid=i, tokens=toks, max_new=4,
                                priority=prios[i]), frontend=i % 2)
@@ -331,7 +332,7 @@ def test_engine_quantizes_priorities_for_both_planes():
 
     def run(admission):
         eng = ServeEngine(cfg, params, slots=2, max_len=24, frontends=2, k=1,
-                          admission=admission)
+                          config=ServeConfig(admission=admission))
         for i, toks in enumerate(prompts):
             eng.submit(Request(rid=i, tokens=toks, max_new=3,
                                priority=prios[i]), frontend=i % 2)
